@@ -1,0 +1,73 @@
+"""Microbenchmarks of the MP-BCFW hot paths (measured wall time on this
+host — the kernels' compiled TPU path is exercised via interpret-mode
+correctness tests; here we time the jnp reference implementations that the
+CPU fallback actually runs, plus the full approximate pass).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mpbcfw
+from repro.core.oracles import multiclass
+from repro.data import synthetic
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    rows = []
+    r = np.random.RandomState(0)
+    planes = jnp.asarray(r.randn(256, 2560).astype(np.float32))
+    w = jnp.asarray(r.randn(2560).astype(np.float32))
+    b = jnp.asarray(r.randn(256).astype(np.float32))
+    f = jax.jit(ref.plane_scores_ref)
+    rows.append(("kernel_plane_scores_256x2560",
+                 _time(f, planes, w, b), planes.size * 4))
+
+    g = jax.jit(ref.gram_ref)
+    rows.append(("kernel_gram_256x2560", _time(g, planes),
+                 256 * 256 * 4))
+
+    m = jnp.asarray(r.randn(64, 128).astype(np.float32))
+    t = jnp.asarray(r.randn(128, 128).astype(np.float32))
+    v = jax.jit(ref.viterbi_step_ref)
+    rows.append(("kernel_viterbi_step_64x128", _time(v, m, t), m.size))
+
+    # full approximate pass (the paper's Theta(|W| d) step, jitted scan)
+    x, y = synthetic.usps_like(n=256, f=64, num_classes=10, seed=0)
+    prob = multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), 10)
+    lam = 1.0 / prob.n
+    mp = mpbcfw.init_mp_state(prob, cap=32)
+    perm = jnp.arange(prob.n)
+    mp = mpbcfw.jit_exact_pass(prob, mp, perm, lam=lam)
+
+    def ap(mp):
+        return mpbcfw.jit_approx_pass(prob, mp, perm, lam=lam)
+
+    mp2 = ap(mp)
+    jax.block_until_ready(mp2.inner.phi)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        mp2 = ap(mp2)
+    jax.block_until_ready(mp2.inner.phi)
+    us = (time.perf_counter() - t0) / 5 / prob.n * 1e6
+    rows.append(("approx_oracle_step_us_per_block", us, prob.n))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,115 @@
+"""Assemble the roofline table + hillclimb log from results/ JSONs.
+
+Emits the markdown tables embedded in EXPERIMENTS.md (#Dry-run, #Roofline,
+#Perf) and a short CSV summary for benchmarks.run.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def load(dirname, pattern):
+    out = {}
+    for p in sorted((ROOT / dirname).glob(pattern)):
+        try:
+            r = json.loads(p.read_text())
+        except json.JSONDecodeError:
+            continue
+        out[p.stem] = r
+    return out
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | compile_s | params | bytes/dev (args) "
+            "| HLO flops (body-once) | collectives (static) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for k, r in load("dryrun", "*_baseline.json").items():
+        if not r.get("ok"):
+            rows.append(f"| {r.get('arch')} | {r.get('shape')} | "
+                        f"{r.get('mesh')} | FAILED: {r.get('error')} | | | | |")
+            continue
+        mem = r.get("memory_analysis", {})
+        args_gb = mem.get("argument_size_in_bytes", 0) / r["chips"] / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('compile_s', '?')} | {r['params_total']/1e9:.1f}B | "
+            f"{args_gb:.2f} GiB | {r['flops']:.2e} | "
+            f"{r['collective_bytes_static']/2**30:.1f} GiB |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "dominant | model GFLOPs/dev | useful ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for k, r in load("roofline", "*_baseline.json").items():
+        if not r.get("ok"):
+            continue
+        t = r["terms_s"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['model_flops_per_device']/1e9:.1f} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']*100:.2f}% |")
+    return "\n".join(rows)
+
+
+def perf_table() -> str:
+    cells = {
+        "qwen2.5-14b_train_4k": ["baseline", "mesh32x8", "mesh32x8_bf16",
+                                 "mesh32x8_dots", "stub"],
+        "qwen2-0.5b_prefill_32k": ["baseline", "pad16", "pad16_lastpos",
+                                   "pad16_lastpos_repl", "stub"],
+        "deepseek-v3-671b_train_4k": ["baseline", "dots", "noremat",
+                                      "selective", "stub"],
+        "mistral-nemo-12b_decode_32k": ["baseline", "repl", "repl_seqshard"],
+    }
+    rows = ["| cell | variant | compute_s | memory_s | collective_s | "
+            "bound_s | vs baseline |", "|---|---|---|---|---|---|---|"]
+    recs = load("roofline", "*.json")
+    for cell, tags in cells.items():
+        base_bound = None
+        for tag in tags:
+            r = recs.get(f"{cell}_{tag}")
+            if r is None or not r.get("ok"):
+                continue
+            t = r["terms_s"]
+            bound = max(t.values())
+            if tag == "baseline":
+                base_bound = bound
+            speed = f"{base_bound / bound:.1f}x" if base_bound else "-"
+            rows.append(
+                f"| {cell} | {tag} | {t['compute_s']:.4f} | "
+                f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+                f"{bound:.3f} | {speed} |")
+    return "\n".join(rows)
+
+
+def main():
+    rows = []
+    ok = bad = 0
+    for k, r in load("dryrun", "*_baseline.json").items():
+        ok += bool(r.get("ok"))
+        bad += not r.get("ok")
+    rows.append(("dryrun_cells_ok", ok, bad))
+    rl = [r for r in load("roofline", "*_baseline.json").values()
+          if r.get("ok")]
+    if rl:
+        best = max(rl, key=lambda r: r["roofline_fraction"])
+        rows.append(("best_baseline_roofline_frac",
+                     round(best["roofline_fraction"], 4),
+                     f"{best['arch']}:{best['shape']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(dryrun_table())
+    print()
+    print(roofline_table())
+    print()
+    print(perf_table())

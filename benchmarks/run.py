@@ -1,0 +1,31 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows:
+  * fig3_*   oracle convergence  (gap at equal exact-oracle budget)
+  * fig4_*   runtime convergence (simulated oracle-cost regimes)
+  * fig5_*   working-set size trajectory
+  * fig6_*   approximate passes per exact pass
+  * kernel_* hot-path microbenchmarks (us per call)
+  * dryrun_/roofline_ summary of the (arch x shape) grid
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from . import kernel_bench, paper_convergence, roofline_report, \
+        workset_stats
+    rows = []
+    rows += paper_convergence.main(quick=quick)
+    rows += workset_stats.main()
+    rows += kernel_bench.main()
+    rows += roofline_report.main()
+    print("name,value,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Figs. 5 & 6: working-set sizes and approx-passes-per-exact-pass.
+
+Reads the traces produced by paper_convergence (or regenerates) and reports
+the trajectory of (a) mean working-set size per term and (b) number of
+approximate passes the slope rule chose per outer iteration.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / "paper"
+
+
+def main():
+    rows = []
+    for name in ("usps", "ocr", "horseseg"):
+        path = OUT / f"{name}.json"
+        if not path.exists():
+            from . import paper_convergence
+            paper_convergence.main()
+        rec = json.loads(path.read_text())
+        tr = rec["algos"]["mpbcfw"]
+        ws = [r["ws_mean"] for r in tr]
+        ap = [r["approx_passes"] for r in tr]
+        rows.append((f"fig5_{name}_ws_mean_first", ws[0], ws[-1]))
+        rows.append((f"fig6_{name}_approx_passes_first", ap[0], ap[-1]))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,47 @@
+"""SSVM head on backbone features — the paper's technique integrated with
+the LM substrate: a chain-CRF tag head over qwen2-family token features,
+trained with MP-BCFW (convex given the frozen features).
+
+    PYTHONPATH=src python examples/ssvm_head.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax                # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+import numpy as np        # noqa: E402
+
+from repro import configs                          # noqa: E402
+from repro.core import driver                      # noqa: E402
+from repro.core.selection import CostModel         # noqa: E402
+from repro.models import common, registry          # noqa: E402
+from repro.trainer.ssvm_head import backbone_chain_problem  # noqa: E402
+
+
+def main():
+    cfg = configs.reduced_config("qwen2-0.5b")
+    params = common.init_params(registry.param_specs(cfg),
+                                jax.random.PRNGKey(0))
+    # synthetic tagging task: tag = f(token id) with noise
+    rng = np.random.RandomState(0)
+    n, L, tags = 48, 12, 5
+    tokens = rng.randint(0, cfg.vocab_size, (n, L)).astype(np.int32)
+    gold = (tokens % tags).astype(np.int32)
+    mask = np.ones((n, L), bool)
+
+    problem = backbone_chain_problem(
+        cfg, params, jnp.asarray(tokens), jnp.asarray(gold),
+        jnp.asarray(mask), tags)
+    lam = 1.0 / problem.n
+    cfg_run = driver.RunConfig(lam=lam, algo="mpbcfw", max_iters=8, cap=16,
+                               cost_model=CostModel(oracle_cost=0.5))
+    res = driver.run(problem, cfg_run)
+    for r in res.trace[::2] + [res.trace[-1]]:
+        print(f"iter {r.iteration:2d}  gap {r.gap:.5f}  "
+              f"approx-passes {r.approx_passes}")
+    print("SSVM head trained on backbone features with MP-BCFW.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: MP-BCFW structural-SVM training framework on JAX (+ LM substrate)."""
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+"""MP-BCFW core: the paper's contribution as a composable JAX module."""
+from . import (averaging, bcfw, distributed, driver, gram, mpbcfw, oracles,
+               selection, ssvm, subgradient, types, workset)
+from .driver import RunConfig, RunResult, run
+from .types import BCFWState, SSVMProblem, WorkSet
+
+__all__ = [
+    "averaging", "bcfw", "distributed", "driver", "gram", "mpbcfw",
+    "oracles", "selection", "ssvm", "subgradient", "types", "workset",
+    "RunConfig", "RunResult", "run", "BCFWState", "SSVMProblem", "WorkSet",
+]

@@ -1,0 +1,105 @@
+"""Frank-Wolfe and Block-Coordinate Frank-Wolfe (paper Alg. 1 & 2).
+
+Both are expressed as jitted ``lax.scan`` passes; the sequential dependence
+between block updates is inherent to BCFW (each update changes ``w``),
+but each individual oracle call is itself a batched/vectorized JAX program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .averaging import update_average
+from .types import AveragingState, BCFWState, SSVMProblem
+from .ssvm import dual_value, weights_of
+
+
+def line_search_gamma(phi: jnp.ndarray, phi_i: jnp.ndarray,
+                      phi_hat: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """Closed-form exact line search (paper Alg. 2 step 6).
+
+    gamma = [<phi_i* - phi_hat*, phi*> - lam (phi_i o - phi_hat o)]
+            / ||phi_i* - phi_hat*||^2,  clipped to [0, 1].
+    """
+    diff = phi_i - phi_hat                       # (d+1,)
+    num = jnp.dot(diff[:-1], phi[:-1]) - lam * diff[-1]
+    den = jnp.dot(diff[:-1], diff[:-1])
+    gamma = jnp.where(den > 0.0, num / jnp.maximum(den, 1e-30), 0.0)
+    return jnp.clip(gamma, 0.0, 1.0)
+
+
+def block_update(state: BCFWState, i: jnp.ndarray, phi_hat: jnp.ndarray,
+                 lam: float) -> Tuple[BCFWState, jnp.ndarray]:
+    """One BCFW step on block ``i`` with candidate plane ``phi_hat``.
+
+    Monotone: F(phi') >= F(phi) by construction (exact line search with
+    gamma=0 allowed).  Returns the new state and gamma.
+    """
+    phi_i = state.phi_i[i]
+    gamma = line_search_gamma(state.phi, phi_i, phi_hat, lam)
+    new_phi_i = (1.0 - gamma) * phi_i + gamma * phi_hat
+    new_phi = state.phi + (new_phi_i - phi_i)
+    return state._replace(phi_i=state.phi_i.at[i].set(new_phi_i),
+                          phi=new_phi), gamma
+
+
+def _example(problem: SSVMProblem, i: jnp.ndarray):
+    return jax.tree_util.tree_map(lambda a: a[i], problem.data)
+
+
+def exact_pass(problem: SSVMProblem, state: BCFWState, avg: AveragingState,
+               perm: jnp.ndarray, lam: float
+               ) -> Tuple[BCFWState, AveragingState]:
+    """One pass of BCFW over the blocks in ``perm`` (exact oracle calls)."""
+
+    def body(carry, i):
+        st, av = carry
+        w = weights_of(st.phi, lam)
+        phi_hat = problem.oracle(w, _example(problem, i))
+        st, _ = block_update(st, i, phi_hat, lam)
+        st = st._replace(n_exact=st.n_exact + 1)
+        av = update_average(av, st.phi, exact=True)
+        return (st, av), None
+
+    (state, avg), _ = jax.lax.scan(body, (state, avg), perm)
+    return state, avg
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
+def _jit_exact_pass(oracle, n: int, data, state: BCFWState,
+                    avg: AveragingState, perm: jnp.ndarray, *, lam: float):
+    prob = SSVMProblem(n=n, d=state.phi.shape[0] - 1, data=data,
+                       oracle=oracle)
+    return exact_pass(prob, state, avg, perm, lam)
+
+
+def jit_exact_pass(problem: SSVMProblem, state: BCFWState,
+                   avg: AveragingState, perm: jnp.ndarray, *, lam: float):
+    return _jit_exact_pass(problem.oracle, problem.n, problem.data, state,
+                           avg, perm, lam=lam)
+
+
+def fw_pass(problem: SSVMProblem, phi: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """One iteration of classic (non-block) Frank-Wolfe (paper Alg. 1).
+
+    The oracle is called for *all* n examples at the same w; the summed
+    plane is the FW vertex for the product domain.
+    """
+    w = weights_of(phi, lam)
+    planes = jax.vmap(lambda ex: problem.oracle(w, ex))(problem.data)
+    phi_hat = jnp.sum(planes, axis=0)
+    diff = phi - phi_hat
+    num = jnp.dot(diff[:-1], phi[:-1]) - lam * diff[-1]
+    den = jnp.dot(diff[:-1], diff[:-1])
+    gamma = jnp.clip(jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0),
+                     0.0, 1.0)
+    return (1.0 - gamma) * phi + gamma * phi_hat
+
+
+__all__ = [
+    "line_search_gamma", "block_update", "exact_pass", "jit_exact_pass",
+    "fw_pass", "dual_value",
+]

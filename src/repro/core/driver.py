@@ -1,0 +1,239 @@
+"""Host-side training driver for the SSVM optimizers.
+
+Orchestrates jitted passes, wall-clock (or simulated) timing, the paper's
+slope rule, TTL eviction, and telemetry.  This is the piece of the paper
+that is inherently an *online control loop* — everything it schedules is a
+compiled JAX program.
+
+Timing modes:
+  * wall clock (production): perf_counter around block_until_ready;
+  * :class:`repro.core.selection.CostModel` (simulation/CI): a virtual
+    clock driven by #oracle-calls and #cached-planes, reproducing the
+    paper's USPS/OCR/HorseSeg regimes deterministically on any host.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bcfw, gram, mpbcfw, subgradient
+from .averaging import extract, init_averaging
+from .selection import CostModel, IterationTracker
+from .ssvm import batched_oracle, dual_value, init_state, weights_of
+from .types import SSVMProblem
+from .workset import sizes
+
+ALGORITHMS = ("fw", "ssg", "bcfw", "bcfw-avg",
+              "mpbcfw", "mpbcfw-avg", "mpbcfw-gram")
+
+
+@dataclass
+class RunConfig:
+    lam: float
+    algo: str = "mpbcfw"
+    cap: int = 64           # hard cap N (paper: "very large"; memory bound)
+    ttl: int = 10           # T, plane time-to-live in outer iterations
+    max_iters: int = 50
+    max_approx_passes: int = 1000   # M (paper: large; slope rule governs)
+    gram_steps: int = 10    # repeats per block for the Sec-3.5 scheme
+    seed: int = 0
+    cost_model: Optional[CostModel] = None  # None => wall clock
+
+
+@dataclass
+class TraceRow:
+    iteration: int
+    n_exact: int
+    n_approx: int
+    time: float
+    primal: float
+    dual: float
+    gap: float
+    primal_avg: float       # primal at the averaged iterate (Sec. 3.6)
+    ws_mean: float          # mean working-set size (Fig. 5)
+    approx_passes: int      # approximate passes this iteration (Fig. 6)
+
+
+@dataclass
+class RunResult:
+    trace: List[TraceRow] = field(default_factory=list)
+    w: Optional[np.ndarray] = None
+    w_avg: Optional[np.ndarray] = None
+
+
+class _Clock:
+    def __init__(self, cost_model: Optional[CostModel]):
+        self.cm = cost_model
+        self._wall0 = time.perf_counter()
+
+    def exact(self, n_calls: int) -> float:
+        if self.cm is not None:
+            return self.cm.exact_pass(n_calls)
+        return time.perf_counter() - self._wall0
+
+    def approx(self, total_planes: int) -> float:
+        if self.cm is not None:
+            return self.cm.approx_pass(total_planes)
+        return time.perf_counter() - self._wall0
+
+    def now(self) -> float:
+        if self.cm is not None:
+            return self.cm.now
+        return time.perf_counter() - self._wall0
+
+
+def _evaluate(problem: SSVMProblem, phi, avg, lam: float):
+    """Primal/dual/gap (+ primal at the averaged iterate).  Not timed."""
+    w = weights_of(phi, lam)
+    planes = batched_oracle(problem, w)
+    hinge = jnp.sum(planes[:, :-1] @ w + planes[:, -1])
+    primal = 0.5 * lam * jnp.dot(w, w) + hinge
+    dual = dual_value(phi, lam)
+    if avg is not None:
+        phi_bar = extract(avg, lam)
+        w_bar = weights_of(phi_bar, lam)
+        planes_b = batched_oracle(problem, w_bar)
+        hinge_b = jnp.sum(planes_b[:, :-1] @ w_bar + planes_b[:, -1])
+        primal_avg = 0.5 * lam * jnp.dot(w_bar, w_bar) + hinge_b
+    else:
+        primal_avg = primal
+    return float(primal), float(dual), float(primal_avg)
+
+
+def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
+    if cfg.algo not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {cfg.algo!r}")
+    rng = np.random.RandomState(cfg.seed)
+    clock = _Clock(cfg.cost_model)
+    res = RunResult()
+    n, lam = problem.n, cfg.lam
+
+    if cfg.algo == "fw":
+        phi = jnp.zeros((problem.d + 1,), jnp.float32)
+        step = jax.jit(lambda p: bcfw.fw_pass(problem, p, lam))
+        for it in range(cfg.max_iters):
+            phi = step(phi)
+            phi.block_until_ready()
+            t = clock.exact(n)
+            primal, dual, _ = _evaluate(problem, phi, None, lam)
+            res.trace.append(TraceRow(it, (it + 1) * n, 0, t, primal, dual,
+                                      primal - dual, primal, 0.0, 0))
+        res.w = np.asarray(weights_of(phi, lam))
+        return res
+
+    if cfg.algo == "ssg":
+        w = jnp.zeros((problem.d,), jnp.float32)
+        t_ctr = jnp.ones((), jnp.int32)
+        for it in range(cfg.max_iters):
+            perm = jnp.asarray(rng.permutation(n))
+            w, t_ctr = subgradient.jit_ssg_pass(problem, w, t_ctr, perm,
+                                                lam=lam)
+            w.block_until_ready()
+            t = clock.exact(n)
+            planes = batched_oracle(problem, w)
+            primal = float(0.5 * lam * jnp.dot(w, w)
+                           + jnp.sum(planes[:, :-1] @ w + planes[:, -1]))
+            res.trace.append(TraceRow(it, (it + 1) * n, 0, t, primal,
+                                      float("nan"), float("nan"), primal,
+                                      0.0, 0))
+        res.w = np.asarray(w)
+        return res
+
+    if cfg.algo in ("bcfw", "bcfw-avg"):
+        state = init_state(problem)
+        avg = init_averaging(problem.d)
+        for it in range(cfg.max_iters):
+            perm = jnp.asarray(rng.permutation(n))
+            state, avg = bcfw.jit_exact_pass(problem, state, avg, perm,
+                                             lam=lam)
+            state.phi.block_until_ready()
+            t = clock.exact(n)
+            use_avg = avg if cfg.algo.endswith("avg") else None
+            primal, dual, primal_avg = _evaluate(problem, state.phi,
+                                                 use_avg, lam)
+            res.trace.append(TraceRow(it, int(state.n_exact), 0, t, primal,
+                                      dual, primal - dual, primal_avg,
+                                      0.0, 0))
+        res.w = np.asarray(weights_of(state.phi, lam))
+        res.w_avg = np.asarray(weights_of(extract(avg, lam), lam))
+        return res
+
+    # --- MP-BCFW family -------------------------------------------------
+    mp = mpbcfw.init_mp_state(problem, cfg.cap)
+    gc = gram.init_gram(n, cfg.cap) if cfg.algo == "mpbcfw-gram" else None
+    tracker = IterationTracker()
+    for it in range(cfg.max_iters):
+        mp = mpbcfw.begin_iteration(mp, cfg.ttl)
+        f_start = float(dual_value(mp.inner.phi, lam))
+        tracker.start(clock.now(), f_start)
+
+        perm = jnp.asarray(rng.permutation(n))
+        if gc is not None:
+            mp = _exact_pass_gram(problem, mp, gc, perm, lam)
+            mp, gc = mp
+        else:
+            mp = mpbcfw.jit_exact_pass(problem, mp, perm, lam=lam)
+        mp.inner.phi.block_until_ready()
+        tracker.record(clock.exact(n), float(dual_value(mp.inner.phi, lam)))
+
+        n_approx_passes = 0
+        while n_approx_passes < cfg.max_approx_passes:
+            total_planes = int(jnp.sum(sizes(mp.ws)))
+            perm = jnp.asarray(rng.permutation(n))
+            if gc is not None:
+                inner, ws, av = gram.jit_approx_pass_gram(
+                    problem, mp.inner, mp.ws, gc, mp.avg, perm, mp.outer_it,
+                    lam=lam, steps=cfg.gram_steps)
+                mp = mp._replace(inner=inner, ws=ws, avg=av)
+            else:
+                mp = mpbcfw.jit_approx_pass(problem, mp, perm, lam=lam)
+            mp.inner.phi.block_until_ready()
+            n_approx_passes += 1
+            tracker.record(clock.approx(total_planes),
+                           float(dual_value(mp.inner.phi, lam)))
+            if not tracker.continue_approx():
+                break
+
+        use_avg = mp.avg if cfg.algo.endswith("avg") else None
+        primal, dual, primal_avg = _evaluate(problem, mp.inner.phi,
+                                             use_avg, lam)
+        res.trace.append(TraceRow(
+            it, int(mp.inner.n_exact), int(mp.inner.n_approx), clock.now(),
+            primal, dual, primal - dual, primal_avg,
+            float(jnp.mean(sizes(mp.ws))), n_approx_passes))
+    res.w = np.asarray(weights_of(mp.inner.phi, lam))
+    res.w_avg = np.asarray(weights_of(extract(mp.avg, lam), lam))
+    return res
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
+def _jit_exact_pass_gram(oracle, n, data, mp, gc, perm, *, lam):
+    """Exact pass variant that also maintains the Gram cache."""
+    from .averaging import update_average
+
+    def body(carry, i):
+        mp, gc = carry
+        w = weights_of(mp.inner.phi, lam)
+        ex = jax.tree_util.tree_map(lambda a: a[i], data)
+        phi_hat = oracle(w, ex)
+        inner, _ = bcfw.block_update(mp.inner, i, phi_hat, lam)
+        inner = inner._replace(n_exact=inner.n_exact + 1)
+        ws, gc = gram.add_plane_with_gram(mp.ws, gc, i, phi_hat, mp.outer_it)
+        avg = update_average(mp.avg, inner.phi, exact=True)
+        return (mp._replace(inner=inner, ws=ws, avg=avg), gc), None
+
+    (mp, gc), _ = jax.lax.scan(body, (mp, gc), perm)
+    return mp, gc
+
+
+def _exact_pass_gram(problem, mp, gc, perm, lam):
+    return _jit_exact_pass_gram(problem.oracle, problem.n, problem.data,
+                                mp, gc, perm, lam=lam)

@@ -1,0 +1,128 @@
+"""Multi-Plane Block-Coordinate Frank-Wolfe (paper Alg. 3).
+
+The algorithm interleaves
+
+  * **exact passes** — one true max-oracle call per block; the returned
+    plane is added to the block's working set (LRU-capped), and
+  * **approximate passes** — BCFW steps against the *cached* planes only
+    (``H~_i(w) = max_{phi in W_i} <phi, [w 1]>``), costing O(|W_i| d) each.
+
+Both passes are single jitted ``lax.scan`` programs.  The decision of how
+many approximate passes to run per exact pass is made host-side by the
+geometric slope rule in :mod:`repro.core.selection`, which is how the paper
+resolves the parameter ``M``; the TTL rule resolves ``N``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .averaging import update_average
+from .bcfw import block_update
+from .types import AveragingState, BCFWState, SSVMProblem, WorkSet
+from .ssvm import weights_of
+from . import workset as ws_ops
+
+
+class MPState(NamedTuple):
+    """Full MP-BCFW state: dual state + working sets + averaging."""
+
+    inner: BCFWState
+    ws: WorkSet
+    avg: AveragingState
+    outer_it: jnp.ndarray  # () int32, outer-iteration counter (for TTL)
+
+
+def _example(problem: SSVMProblem, i: jnp.ndarray):
+    return jax.tree_util.tree_map(lambda a: a[i], problem.data)
+
+
+def exact_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
+               lam: float) -> MPState:
+    """Paper Alg. 3 step 3: BCFW pass with the real oracle + plane caching."""
+
+    def body(carry, i):
+        st, ws, av = carry
+        w = weights_of(st.phi, lam)
+        phi_hat = problem.oracle(w, _example(problem, i))
+        st, _ = block_update(st, i, phi_hat, lam)
+        st = st._replace(n_exact=st.n_exact + 1)
+        ws = ws_ops.add_plane(ws, i, phi_hat, mp.outer_it)
+        av = update_average(av, st.phi, exact=True)
+        return (st, ws, av), None
+
+    (inner, ws, avg), _ = jax.lax.scan(body, (mp.inner, mp.ws, mp.avg), perm)
+    return MPState(inner=inner, ws=ws, avg=avg, outer_it=mp.outer_it)
+
+
+def approx_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
+                lam: float) -> MPState:
+    """Paper Alg. 3 step 4: BCFW pass against the cached planes only.
+
+    Each step is monotone in F because the cached planes are genuine data
+    planes (so the line search is valid), even though H~_i may locally sit
+    below the convex combination phi_i (paper footnote 2).
+    """
+    del problem  # the approximate pass never touches the data
+
+    def body(carry, i):
+        st, ws, av = carry
+        w = weights_of(st.phi, lam)
+        phi_hat, slot, _ = ws_ops.approx_oracle(ws, i, w)
+        st, gamma = block_update(st, i, phi_hat, lam)
+        st = st._replace(n_approx=st.n_approx + 1)
+        # A plane is "active" if the (approximate) oracle returned it.
+        ws = ws_ops.mark_active(ws, i, slot, mp.outer_it)
+        av = update_average(av, st.phi, exact=False)
+        return (st, ws, av), None
+
+    (inner, ws, avg), _ = jax.lax.scan(body, (mp.inner, mp.ws, mp.avg), perm)
+    return MPState(inner=inner, ws=ws, avg=avg, outer_it=mp.outer_it)
+
+
+def begin_iteration(mp: MPState, ttl: int) -> MPState:
+    """TTL eviction + outer-iteration increment (paper Sec. 3.4, param N/T)."""
+    it = mp.outer_it + 1
+    ws = ws_ops.evict_stale(mp.ws._replace(), it, ttl)
+    return mp._replace(ws=ws, outer_it=it)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
+def _jit_exact_pass(oracle, n, data, mp: MPState, perm: jnp.ndarray,
+                    *, lam: float) -> MPState:
+    prob = SSVMProblem(n=n, d=mp.inner.phi.shape[0] - 1, data=data,
+                       oracle=oracle)
+    return exact_pass(prob, mp, perm, lam)
+
+
+def jit_exact_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
+                   *, lam: float) -> MPState:
+    return _jit_exact_pass(problem.oracle, problem.n, problem.data, mp,
+                           perm, lam=lam)
+
+
+@functools.partial(jax.jit, static_argnames=("lam",))
+def jit_approx_pass_impl(mp: MPState, perm: jnp.ndarray,
+                         *, lam: float) -> MPState:
+    return approx_pass(None, mp, perm, lam)
+
+
+def jit_approx_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
+                    *, lam: float) -> MPState:
+    del problem  # the approximate pass never touches the data
+    return jit_approx_pass_impl(mp, perm, lam=lam)
+
+
+def init_mp_state(problem: SSVMProblem, cap: int) -> MPState:
+    from .averaging import init_averaging
+    from .ssvm import init_state
+
+    return MPState(
+        inner=init_state(problem),
+        ws=ws_ops.init_workset(problem.n, cap, problem.d),
+        avg=init_averaging(problem.d),
+        outer_it=jnp.zeros((), jnp.int32),
+    )

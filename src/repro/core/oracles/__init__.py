@@ -1,0 +1,1 @@
+from . import chain, graph, multiclass  # noqa: F401

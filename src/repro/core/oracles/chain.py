@@ -1,0 +1,99 @@
+"""Sequence-labeling max-oracle (paper appendix A.2, OCR-style).
+
+Loss-augmented Viterbi over a chain CRF with unary features
+phi_u(x,y) = sum_l onehot(y_l) (x) psi(x_l) and pairwise transition
+indicators phi_p(x,y) = sum_l e_{y_l, y_{l+1}}; loss = normalized Hamming.
+
+The DP is a ``lax.scan`` of max-plus steps; sequences are padded to a fixed
+length L with a validity mask (padded positions contribute zero score, zero
+features, zero loss), which keeps the oracle a single fixed-shape program
+that vmaps over the dataset.  The max-plus inner step has a Pallas kernel
+(:mod:`repro.kernels.viterbi`); this module uses the pure-jnp path so the
+core stays dependency-light — the kernels are validated against it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..types import SSVMProblem
+
+
+def viterbi_decode(unary: jnp.ndarray, trans: jnp.ndarray,
+                   mask: jnp.ndarray) -> jnp.ndarray:
+    """argmax_y sum_l unary[l, y_l] + sum_l trans[y_l, y_{l+1}] (masked).
+
+    unary: (L, C); trans: (C, C); mask: (L,) bool with mask[0] == True.
+    Transitions into padded positions are zeroed so the path score equals
+    the score of the valid prefix.  Returns (L,) int32 labels (arbitrary on
+    padded positions).
+    """
+    L, C = unary.shape
+    u = jnp.where(mask[:, None], unary, 0.0)
+
+    def step(m_prev, inputs):
+        u_l, valid = inputs
+        # cand[c', c] = m_prev[c'] + trans[c', c]; zero transitions when the
+        # target position is padding so padded steps are score-neutral.
+        cand = m_prev[:, None] + jnp.where(valid, trans, 0.0)
+        back = jnp.argmax(cand, axis=0)
+        m = jnp.max(cand, axis=0) + u_l
+        return m, back
+
+    m0 = u[0]
+    m_final, backs = jax.lax.scan(step, m0, (u[1:], mask[1:]))
+    y_last = jnp.argmax(m_final)
+
+    def back_step(y_next, back_l):
+        return back_l[y_next], back_l[y_next]
+
+    _, ys_rev = jax.lax.scan(back_step, y_last, backs, reverse=True)
+    return jnp.concatenate([ys_rev, y_last[None]]).astype(jnp.int32)
+
+
+def _plane(x: jnp.ndarray, y_true: jnp.ndarray, y_pred: jnp.ndarray,
+           mask: jnp.ndarray, num_labels: int, n: int) -> jnp.ndarray:
+    """Assemble phi^{iy} = [ (phi(x,y)-phi(x,y_i))/n , Delta/n ]."""
+    L, f = x.shape
+    C = num_labels
+    m = mask.astype(x.dtype)
+    length = jnp.maximum(jnp.sum(m), 1.0)
+    # Unary part: sum_l onehot(y_l) (x) x_l, masked.
+    oh_pred = jax.nn.one_hot(y_pred, C, dtype=x.dtype) * m[:, None]
+    oh_true = jax.nn.one_hot(y_true, C, dtype=x.dtype) * m[:, None]
+    unary = ((oh_pred - oh_true).T @ x).reshape(-1)          # (C*f,)
+    # Pairwise part: transition indicator counts over valid adjacent pairs.
+    pm = (mask[:-1] & mask[1:]).astype(x.dtype)
+    pair_pred = jax.nn.one_hot(y_pred[:-1], C, dtype=x.dtype).T @ \
+        (jax.nn.one_hot(y_pred[1:], C, dtype=x.dtype) * pm[:, None])
+    pair_true = jax.nn.one_hot(y_true[:-1], C, dtype=x.dtype).T @ \
+        (jax.nn.one_hot(y_true[1:], C, dtype=x.dtype) * pm[:, None])
+    pair = (pair_pred - pair_true).reshape(-1)               # (C*C,)
+    loss = jnp.sum((y_pred != y_true) * m) / length
+    star = jnp.concatenate([unary, pair]) / n
+    return jnp.concatenate([star, (loss / n)[None]])
+
+
+def make_problem(features: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray, num_labels: int) -> SSVMProblem:
+    """features: (n, L, f); labels: (n, L) int32; mask: (n, L) bool."""
+    n, L, f = features.shape
+    C = num_labels
+    d = C * f + C * C
+
+    def oracle(w: jnp.ndarray, ex: Dict[str, Any]) -> jnp.ndarray:
+        x, y, m = ex["x"], ex["y"], ex["mask"]
+        wu = w[: C * f].reshape(C, f)
+        wp = w[C * f:].reshape(C, C)
+        length = jnp.maximum(jnp.sum(m.astype(x.dtype)), 1.0)
+        # Loss-augmented unaries: <w_c, x_l> + [c != y_l] / L_i.
+        unary = x @ wu.T + (1.0 - jax.nn.one_hot(y, C, dtype=x.dtype)) / length
+        y_hat = viterbi_decode(unary, wp, m)
+        return _plane(x, y, y_hat, m, C, n)
+
+    data = {"x": features.astype(jnp.float32),
+            "y": labels.astype(jnp.int32), "mask": mask.astype(bool)}
+    return SSVMProblem(n=n, d=d, data=data, oracle=oracle,
+                       meta={"num_labels": C, "f": f, "L": L})

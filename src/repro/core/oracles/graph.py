@@ -1,0 +1,123 @@
+"""Graph-labeling max-oracle (paper appendix A.3, HorseSeg-style).
+
+Binary superpixel labeling with learned unaries and a fixed attractive
+pairwise term: the oracle maximizes
+
+    sum_l  [ <w_{y'_l}, x_l> + [y'_l != y_l] / L ]  -  sum_{k~l} [y'_k != y'_l]
+
+(the pairwise sign is attractive/submodular — the paper's eq. 10 prints a
+"+" but fixes the weight so the *energy* stays submodular; see DESIGN.md).
+
+TPU adaptation: the paper minimizes this energy exactly with BK maxflow,
+which is pointer-chasing and has no TPU analogue.  We instead run red-black
+**parallel ICM sweeps** — a vectorized approximate oracle.  MP-BCFW/BCFW
+explicitly tolerate approximate oracles (convergence to an approximate
+optimum, [15] App. C); the working-set machinery is oblivious to how planes
+were produced, and every returned plane is a genuine lower-bound plane.
+On trees / weak coupling the oracle is exact (unit-tested vs brute force).
+
+The number of sweeps is the "oracle cost" knob that reproduces the paper's
+costly-oracle regime (HorseSeg: ~2.2 s/call, 99% of BCFW runtime).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..types import SSVMProblem
+
+
+def _neighbor_ones(labels, edges, edge_mask, L):
+    """For each node: (# valid neighbors labeled 1, degree)."""
+    lab = labels.astype(jnp.float32)
+    em = edge_mask.astype(jnp.float32)
+    a, b = edges[:, 0], edges[:, 1]
+    nb1 = (jnp.zeros((L,), jnp.float32)
+           .at[a].add(em * lab[b])
+           .at[b].add(em * lab[a]))
+    deg = (jnp.zeros((L,), jnp.float32)
+           .at[a].add(em)
+           .at[b].add(em))
+    return nb1, deg
+
+
+def icm_decode(unary: jnp.ndarray, edges: jnp.ndarray, edge_mask: jnp.ndarray,
+               color: jnp.ndarray, mask: jnp.ndarray,
+               num_sweeps: int) -> jnp.ndarray:
+    """Red-black ICM for max_y sum_l unary[l, y_l] - cut(y).
+
+    unary: (L, 2); edges: (E, 2) int32; color: (L,) in {0,1} (a 2-coloring
+    of the graph so that same-color nodes are non-adjacent and can be
+    updated in parallel); mask: (L,) node validity.
+    """
+    L = unary.shape[0]
+    udiff = unary[:, 1] - unary[:, 0]
+    y = (udiff > 0.0) & mask  # warm start from unaries
+
+    def half_sweep(y, phase):
+        nb1, deg = _neighbor_ones(y, edges, edge_mask, L)
+        # score(1) - score(0) at each node given neighbours fixed:
+        #   udiff - [(deg - nb1) - nb1] = udiff - deg + 2 nb1.
+        diff = udiff - deg + 2.0 * nb1
+        upd = (color == phase) & mask
+        return jnp.where(upd, diff > 0.0, y)
+
+    def sweep(y, _):
+        y = half_sweep(y, 0)
+        y = half_sweep(y, 1)
+        return y, None
+
+    y, _ = jax.lax.scan(sweep, y, None, length=num_sweeps)
+    return y.astype(jnp.int32)
+
+
+def _cut(labels, edges, edge_mask):
+    em = edge_mask.astype(jnp.float32)
+    a, b = edges[:, 0], edges[:, 1]
+    return jnp.sum(em * (labels[a] != labels[b]).astype(jnp.float32))
+
+
+def _plane(x, y_true, y_pred, mask, edges, edge_mask, n):
+    """phi^{iy}: unary feature diff / n; circ = (loss + cut(y)-cut(y'))/n."""
+    m = mask.astype(x.dtype)
+    length = jnp.maximum(jnp.sum(m), 1.0)
+    oh_pred = jax.nn.one_hot(y_pred, 2, dtype=x.dtype) * m[:, None]
+    oh_true = jax.nn.one_hot(y_true, 2, dtype=x.dtype) * m[:, None]
+    star = ((oh_pred - oh_true).T @ x).reshape(-1) / n
+    loss = jnp.sum((y_pred != y_true) * m) / length
+    circ = (loss + _cut(y_true, edges, edge_mask)
+            - _cut(y_pred, edges, edge_mask)) / n
+    return jnp.concatenate([star, circ[None]])
+
+
+def make_problem(features: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray, edges: jnp.ndarray,
+                 edge_mask: jnp.ndarray, color: jnp.ndarray,
+                 num_sweeps: int = 20) -> SSVMProblem:
+    """features: (n, L, f); labels/mask/color: (n, L); edges: (n, E, 2)."""
+    n, L, f = features.shape
+    d = 2 * f
+
+    def oracle(w: jnp.ndarray, ex: Dict[str, Any]) -> jnp.ndarray:
+        x, y, m = ex["x"], ex["y"], ex["mask"]
+        e, em, col = ex["edges"], ex["edge_mask"], ex["color"]
+        wc = w.reshape(2, f)
+        length = jnp.maximum(jnp.sum(m.astype(x.dtype)), 1.0)
+        unary = x @ wc.T + (1.0 - jax.nn.one_hot(y, 2, dtype=x.dtype)) / length
+        unary = jnp.where(m[:, None], unary, 0.0)
+        y_hat = icm_decode(unary, e, em, col, m, num_sweeps)
+        cand = _plane(x, y, y_hat, m, e, em, n)
+        # Approximate oracles can return a plane *worse* than the incumbent
+        # ground-truth plane (score < 0); clamp to the zero plane in that
+        # case so H_i >= 0 stays a valid lower bound direction.
+        score = jnp.dot(cand[:-1], w) + cand[-1]
+        return jnp.where(score > 0.0, cand, jnp.zeros_like(cand))
+
+    data = {"x": features.astype(jnp.float32), "y": labels.astype(jnp.int32),
+            "mask": mask.astype(bool), "edges": edges.astype(jnp.int32),
+            "edge_mask": edge_mask.astype(bool),
+            "color": color.astype(jnp.int32)}
+    return SSVMProblem(n=n, d=d, data=data, oracle=oracle,
+                       meta={"f": f, "L": L, "num_sweeps": num_sweeps})

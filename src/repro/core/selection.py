@@ -1,0 +1,72 @@
+"""Automatic pass-selection rule (paper Sec. 3.4, parameter M).
+
+After each approximate pass, compare
+
+  * slope_last = dF of the last approximate pass / its runtime, with
+  * slope_iter = dF since the beginning of the current outer iteration
+                 (including the exact pass) / total runtime of the iteration.
+
+If slope_last < slope_iter the expected yield of another approximate pass
+is too low; end the iteration and do an exact pass next.  Geometrically this
+extrapolates the recent runtime-vs-dual curve: continue only while the last
+segment is steeper than the chord of the whole iteration.
+
+Runtime is supplied by the caller (wall clock in production, an injected
+deterministic cost model in tests / simulation), which keeps the rule pure
+and unit-testable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass
+class IterationTracker:
+    """Tracks (time, dual) checkpoints within one outer iteration."""
+
+    t0: float = 0.0
+    f0: float = 0.0
+    history: List[tuple] = field(default_factory=list)  # [(t, f), ...]
+
+    def start(self, t: float, f: float) -> None:
+        self.t0, self.f0 = t, f
+        self.history = [(t, f)]
+
+    def record(self, t: float, f: float) -> None:
+        self.history.append((t, f))
+
+    def continue_approx(self) -> bool:
+        """The paper's slope criterion; called after each approximate pass."""
+        if len(self.history) < 2:
+            return True
+        t_prev, f_prev = self.history[-2]
+        t_last, f_last = self.history[-1]
+        dt_last = max(t_last - t_prev, 1e-12)
+        dt_iter = max(t_last - self.t0, 1e-12)
+        slope_last = (f_last - f_prev) / dt_last
+        slope_iter = (f_last - self.f0) / dt_iter
+        return slope_last >= slope_iter
+
+
+@dataclass
+class CostModel:
+    """Deterministic time source for simulation and tests.
+
+    ``exact_pass(n)`` / ``approx_pass(total_planes)`` advance a virtual
+    clock; this models a max-oracle costing ``oracle_cost`` seconds per
+    call and an approximate step costing ``plane_cost`` per cached plane,
+    mirroring the Theta(|W_i| d) analysis of the paper.
+    """
+
+    oracle_cost: float = 1.0
+    plane_cost: float = 1e-3
+    now: float = 0.0
+
+    def exact_pass(self, n_calls: int) -> float:
+        self.now += self.oracle_cost * n_calls
+        return self.now
+
+    def approx_pass(self, total_planes: int) -> float:
+        self.now += self.plane_cost * max(total_planes, 1)
+        return self.now

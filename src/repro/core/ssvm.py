@@ -1,0 +1,69 @@
+"""SSVM objective helpers: dual bound F, primal objective, duality gap.
+
+The SSVM primal (paper eq. 1/4) is
+
+    P(w) = lam/2 ||w||^2 + sum_i H_i(w),
+    H_i(w) = max_y <phi^{iy}, [w 1]>,
+
+and any feasible dual vector ``phi = sum_i phi_i`` yields the lower bound
+
+    F(phi) = min_w lam/2 ||w||^2 + <phi, [w 1]>
+           = -||phi_star||^2 / (2 lam) + phi_circ.            (paper eq. 5)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import BCFWState, SSVMProblem
+
+
+def dual_value(phi: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """F(phi) (paper eq. 5)."""
+    return -jnp.dot(phi[:-1], phi[:-1]) / (2.0 * lam) + phi[-1]
+
+
+def weights_of(phi: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """Primal weights induced by a dual vector: w = -phi_star / lam."""
+    return -phi[:-1] / lam
+
+
+def plane_score(phi: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """<phi, [w 1]> = <phi_star, w> + phi_circ."""
+    return jnp.dot(phi[:-1], w) + phi[-1]
+
+
+def batched_oracle(problem: SSVMProblem, w: jnp.ndarray) -> jnp.ndarray:
+    """Call the max-oracle for every example at the same ``w``.
+
+    Returns (n, d+1) planes.  This is the expensive operation the paper is
+    about; it is used here for primal evaluation and by the tau-nice
+    distributed pass (oracles at a shared, possibly stale, ``w``).
+    """
+    return jax.vmap(lambda ex: problem.oracle(w, ex))(problem.data)
+
+
+def primal_value(problem: SSVMProblem, w: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """P(w) = lam/2 ||w||^2 + sum_i H_i(w).  Costs n oracle calls."""
+    planes = batched_oracle(problem, w)
+    hinge = jnp.sum(planes[:, :-1] @ w + planes[:, -1])
+    return 0.5 * lam * jnp.dot(w, w) + hinge
+
+
+def duality_gap(problem: SSVMProblem, state: BCFWState, lam: float) -> jnp.ndarray:
+    """gap = P(w(phi)) - F(phi) >= 0 (certificate of suboptimality)."""
+    w = weights_of(state.phi, lam)
+    return primal_value(problem, w, lam) - dual_value(state.phi, lam)
+
+
+def init_state(problem: SSVMProblem) -> BCFWState:
+    """Start from the ground-truth planes phi^{i y_i} = 0 (so w = 0).
+
+    ``phi^{iy}`` with ``y = y_i`` has zero feature difference and zero loss,
+    hence is the all-zero plane; this is the standard BCFW initialization.
+    """
+    phi_i = jnp.zeros((problem.n, problem.d + 1), jnp.float32)
+    phi = jnp.zeros((problem.d + 1,), jnp.float32)
+    return BCFWState(phi_i=phi_i, phi=phi,
+                     n_exact=jnp.zeros((), jnp.int32),
+                     n_approx=jnp.zeros((), jnp.int32))

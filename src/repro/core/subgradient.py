@@ -1,0 +1,49 @@
+"""Pegasos-style stochastic subgradient baseline (paper Sec. 2.1, [19,22]).
+
+One of the classical alternatives MP-BCFW is compared against: at step t,
+pick a block i, call its oracle at the current w, and take
+
+    w <- (1 - 1/t) w - (1/(lam t)) * n * phi_hat_star
+
+(the n factor undoes the 1/n folded into the planes).  No line search, no
+dual certificate — convergence depends on the 1/(lam t) schedule, which is
+exactly the practical drawback the FW family removes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import SSVMProblem
+
+
+def ssg_pass(problem: SSVMProblem, w: jnp.ndarray, t0: jnp.ndarray,
+             perm: jnp.ndarray, lam: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One pass of stochastic subgradient over blocks in ``perm``."""
+
+    def body(carry, i):
+        w, t = carry
+        ex = jax.tree_util.tree_map(lambda a: a[i], problem.data)
+        phi_hat = problem.oracle(w, ex)
+        step = 1.0 / (lam * t.astype(jnp.float32))
+        # subgrad of lam/2||w||^2 + n * H_i-term sampled uniformly:
+        w = (1.0 - 1.0 / t.astype(jnp.float32)) * w \
+            - step * problem.n * phi_hat[:-1]
+        return (w, t + 1), None
+
+    (w, t0), _ = jax.lax.scan(body, (w, t0), perm)
+    return w, t0
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
+def _jit_ssg_pass(oracle, n, data, w, t0, perm, *, lam: float):
+    prob = SSVMProblem(n=n, d=w.shape[0], data=data, oracle=oracle)
+    return ssg_pass(prob, w, t0, perm, lam)
+
+
+def jit_ssg_pass(problem: SSVMProblem, w, t0, perm, *, lam: float):
+    return _jit_ssg_pass(problem.oracle, problem.n, problem.data, w, t0,
+                         perm, lam=lam)

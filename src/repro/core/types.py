@@ -1,0 +1,88 @@
+"""Core value types for the MP-BCFW optimizer.
+
+All containers are JAX pytrees (NamedTuples of arrays) so that every pass of
+the optimizer can live inside a single ``jax.jit``/``lax.scan`` without host
+round-trips.  Conventions follow the paper:
+
+  * a *plane* is a vector ``phi in R^{d+1}``; ``phi[:d]`` is the linear part
+    (``phi_star``) and ``phi[d]`` is the offset (``phi_circ``),
+  * the dual objective is ``F(phi) = -||phi_star||^2 / (2 lam) + phi_circ``,
+  * ``w = -phi_star / lam`` recovers the primal weight vector.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax.numpy as jnp
+
+
+class BCFWState(NamedTuple):
+    """Dual state of (MP-)BCFW.
+
+    Attributes:
+      phi_i:   (n, d+1) per-block planes (convex combinations of data planes).
+      phi:     (d+1,)   running sum of ``phi_i`` (kept for O(d) updates).
+      n_exact: ()       int32, number of exact oracle calls so far.
+      n_approx:()       int32, number of approximate (cached) oracle calls.
+    """
+
+    phi_i: jnp.ndarray
+    phi: jnp.ndarray
+    n_exact: jnp.ndarray
+    n_approx: jnp.ndarray
+
+
+class AveragingState(NamedTuple):
+    """Two-track weighted averaging (paper Sec. 3.6).
+
+    ``bar_exact`` is updated after every exact oracle call with weights
+    ``k/(k+2), 2/(k+2)``; ``bar_approx`` after every approximate call.  At
+    extraction time the best-F interpolation of the two is used.
+    """
+
+    bar_exact: jnp.ndarray   # (d+1,)
+    bar_approx: jnp.ndarray  # (d+1,)
+    k_exact: jnp.ndarray     # () int32
+    k_approx: jnp.ndarray    # () int32
+
+
+class WorkSet(NamedTuple):
+    """Fixed-capacity per-block working sets of planes (paper Sec. 3.3).
+
+    Attributes:
+      planes:      (n, cap, d+1) stored planes.
+      valid:       (n, cap) bool, slot occupancy.
+      last_active: (n, cap) int32, outer-iteration index at which the slot's
+                   plane was last returned by an (exact or approximate)
+                   oracle call.  Used for LRU eviction and the TTL rule.
+    """
+
+    planes: jnp.ndarray
+    valid: jnp.ndarray
+    last_active: jnp.ndarray
+
+
+class SSVMProblem(NamedTuple):
+    """A structural SVM training problem in plane form.
+
+    ``oracle(w, example) -> (d+1,)`` is the max-oracle for one example: it
+    returns ``argmax_{phi^{iy}} <phi, [w 1]>`` over the example's label space.
+    ``example`` is ``tree_map(lambda a: a[i], data)``.
+
+    ``data`` is a pytree whose leaves all have leading dimension ``n``.
+    """
+
+    n: int
+    d: int
+    data: Any
+    oracle: Callable[[jnp.ndarray, Any], jnp.ndarray]
+    # Optional metadata (e.g. number of classes); opaque to the optimizer.
+    meta: Any = None
+
+
+class PassStats(NamedTuple):
+    """Telemetry returned by one optimization pass (for the slope rule)."""
+
+    dual: jnp.ndarray      # F(phi) after the pass
+    n_exact: jnp.ndarray   # cumulative exact oracle calls
+    n_approx: jnp.ndarray  # cumulative approximate calls

@@ -1,0 +1,85 @@
+"""Per-example working sets of cached oracle planes (paper Sec. 3.3/3.4).
+
+The paper stores a list of planes per training example; planes are added on
+every exact oracle call, and removed (a) by LRU when the hard cap ``N`` is
+exceeded and (b) by a TTL rule: planes that were not *active* (returned as
+the argmax of an exact or approximate oracle call) during the last ``T``
+outer iterations are dropped.
+
+TPU adaptation: the sets are a dense ``(n, cap, d+1)`` ring with ``valid``
+and ``last_active`` metadata, so that all operations are vectorized /
+`lax.scan`-compatible and the approximate oracle is a single masked matvec.
+The *effective* working-set size is data-dependent exactly as in the paper
+(the TTL rule invalidates slots); ``cap`` only bounds memory.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import WorkSet
+
+# Score assigned to invalid slots so they never win the argmax.
+NEG_INF = jnp.float32(-1e30)
+
+
+def init_workset(n: int, cap: int, d: int) -> WorkSet:
+    return WorkSet(
+        planes=jnp.zeros((n, cap, d + 1), jnp.float32),
+        valid=jnp.zeros((n, cap), bool),
+        last_active=jnp.full((n, cap), -1, jnp.int32),
+    )
+
+
+def add_plane(ws: WorkSet, i: jnp.ndarray, plane: jnp.ndarray,
+              it: jnp.ndarray) -> WorkSet:
+    """Insert ``plane`` into block ``i``'s set, evicting LRU if full.
+
+    The slot chosen is the first invalid slot if one exists, otherwise the
+    valid slot with the smallest ``last_active`` ("inactive the longest",
+    paper Alg. 3 step 3).  The new plane is marked active at iteration
+    ``it`` (it was just returned by the exact oracle).
+    """
+    valid_i = ws.valid[i]
+    age_i = ws.last_active[i]
+    # Prefer empty slots: give them age -inf so argmin picks them first.
+    key = jnp.where(valid_i, age_i, jnp.int32(-2**31 + 1))
+    slot = jnp.argmin(key)
+    return WorkSet(
+        planes=ws.planes.at[i, slot].set(plane),
+        valid=ws.valid.at[i, slot].set(True),
+        last_active=ws.last_active.at[i, slot].set(it),
+    )
+
+
+def approx_oracle(ws: WorkSet, i: jnp.ndarray, w: jnp.ndarray):
+    """argmax over block i's cached planes of <phi, [w 1]>.
+
+    Returns ``(plane, slot, score)``; callers must mark ``slot`` active.
+    If the set is empty the zero plane is returned (score 0 >= NEG_INF
+    guard keeps behaviour well-defined; H~_i >= 0 always holds because the
+    ground-truth plane is the zero plane).
+    """
+    planes_i = ws.planes[i]                      # (cap, d+1)
+    scores = planes_i[:, :-1] @ w + planes_i[:, -1]
+    scores = jnp.where(ws.valid[i], scores, NEG_INF)
+    slot = jnp.argmax(scores)
+    best = scores[slot]
+    any_valid = jnp.any(ws.valid[i])
+    plane = jnp.where(any_valid, planes_i[slot], jnp.zeros_like(planes_i[slot]))
+    return plane, slot, jnp.where(any_valid, best, 0.0)
+
+
+def mark_active(ws: WorkSet, i: jnp.ndarray, slot: jnp.ndarray,
+                it: jnp.ndarray) -> WorkSet:
+    return ws._replace(last_active=ws.last_active.at[i, slot].set(it))
+
+
+def evict_stale(ws: WorkSet, it: jnp.ndarray, ttl: int) -> WorkSet:
+    """Drop planes not active during the last ``ttl`` outer iterations."""
+    keep = ws.valid & (it - ws.last_active <= ttl)
+    return ws._replace(valid=keep)
+
+
+def sizes(ws: WorkSet) -> jnp.ndarray:
+    """Current per-block working-set sizes (paper Fig. 5 telemetry)."""
+    return jnp.sum(ws.valid, axis=1)

@@ -1,0 +1,2 @@
+from .stragglers import StragglerPolicy, simulate_oracle_outcomes  # noqa: F401
+from .restart import RestartManager  # noqa: F401

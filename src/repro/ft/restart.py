@@ -1,0 +1,41 @@
+"""Restart/elasticity manager: crash-consistent resume of the trainer.
+
+Composes the checkpoint manager with the data pipeline's O(1) stream state
+so a restart is exact: (params, opt_state, step) from the checkpoint, and
+the next data batch is batch(step) by construction.  ``resume_or_init``
+is the single entry point used by launch/train.py — on a healthy start it
+initializes, after a crash it restores, and if the mesh changed (elastic
+upscale/downscale) it re-places arrays via restore_resharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager, restore_resharded
+
+
+class RestartManager:
+    def __init__(self, ckpt_dir: str, save_every: int = 100, keep: int = 3):
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep)
+        self.save_every = save_every
+
+    def resume_or_init(self, init_fn: Callable[[], Any],
+                       shardings: Optional[Any] = None):
+        """Returns (state_tree, start_step)."""
+        step = self.mgr.latest_step()
+        if step is None:
+            return init_fn(), 0
+        template = jax.eval_shape(init_fn)
+        if shardings is not None:
+            tree, manifest = restore_resharded(self.mgr, template, shardings)
+        else:
+            tree, manifest = self.mgr.restore(template)
+        return tree, int(manifest["step"])
+
+    def maybe_save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        if step % self.save_every == 0 and step > 0:
+            self.mgr.save(step, tree, extra)
+            return True
+        return False

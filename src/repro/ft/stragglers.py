@@ -1,0 +1,37 @@
+"""Straggler mitigation for distributed MP-BCFW.
+
+The key observation (DESIGN.md Sec. 4): the paper's approximate oracle is
+*also* a fault-tolerance mechanism.  In the tau-nice pass, every block
+whose exact oracle misses the deadline (slow node, preemption, network
+blip) transparently falls back to its cached working set — a step that is
+still monotone in the dual and costs O(|W_i| d) locally.  Training never
+blocks on the slowest node; it just takes a slightly smaller step for the
+affected blocks, and the TTL machinery keeps their caches warm.
+
+``simulate_oracle_outcomes`` models per-node oracle latencies (lognormal
+with a straggler tail) against a deadline, for CI and for the benchmark
+that quantifies the dual-progress cost of fallbacks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class StragglerPolicy:
+    deadline_factor: float = 3.0     # deadline = factor * median latency
+    straggler_prob: float = 0.02     # chance a node is pathologically slow
+    straggler_scale: float = 20.0    # tail multiplier
+    sigma: float = 0.3               # lognormal spread of healthy nodes
+
+
+def simulate_oracle_outcomes(n_blocks: int, policy: StragglerPolicy,
+                             rng: np.random.RandomState):
+    """Returns (done_mask, latencies): done[b] = oracle finished in time."""
+    lat = np.exp(rng.randn(n_blocks) * policy.sigma)
+    slow = rng.rand(n_blocks) < policy.straggler_prob
+    lat = np.where(slow, lat * policy.straggler_scale, lat)
+    deadline = np.median(lat) * policy.deadline_factor
+    return lat <= deadline, lat

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: causal flash attention (LM-substrate hot spot).
+
+Standard streaming-softmax formulation: the grid is (batch*heads, q_blocks,
+kv_blocks) with the kv axis innermost; running max / normalizer / weighted
+accumulator live in VMEM scratch across the kv sweep and the output tile is
+written once at the last kv block.  Blocks above the causal diagonal are
+skipped with ``pl.when`` (zero compute, the tiles are still fetched — on
+real hardware a megacore grid split or a q-dependent kv extent removes the
+fetches too; see EXPERIMENTS.md #Perf for the measured effect of block
+sizes on the roofline terms).
+
+Tiling: (block_q, head_dim) and (block_k, head_dim) tiles; head_dim is the
+lane dimension (padded to 128), block_q/block_k default to 128 => the
+scores tile is MXU-shaped (128, 128).
+
+The models use the pure-jnp chunked oracle (:func:`repro.models.attention.
+chunked_causal_attention`) on non-TPU backends; this kernel is the TPU
+fast path and is validated against the oracle in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30  # python float: jnp scalars may not be captured by kernels
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            sm_scale: float, block_q: int, block_k: int, kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki <= qi)  # blocks fully above the causal diagonal are no-ops
+    def _compute():
+        q = q_ref[0]                       # (block_q, d)
+        k = k_ref[0]                       # (block_k, d)
+        v = v_ref[0]                       # (block_k, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(rows >= cols, s, _NEG)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        m_scr[...] = m_new
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "sm_scale", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    sm_scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """Causal attention. q, k, v: (BH, S, D) with S % block == 0 handled
+    by padding; D padded to 128 lanes.  Returns (BH, S, D)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    bh, s, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    s_pad = -s % max(block_q, block_k)
+    d_pad = -d % 128
+    pad = lambda x: jnp.pad(x, ((0, 0), (0, s_pad), (0, d_pad)))
+    qp, kp, vp = pad(q), pad(k), pad(v)
+    sp, dp = qp.shape[1], qp.shape[2]
+    kv_blocks = sp // block_k
+    grid = (bh, sp // block_q, kv_blocks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, sm_scale=sm_scale, block_q=block_q,
+                          block_k=block_k, kv_blocks=kv_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dp), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dp), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dp), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dp), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s, :d]

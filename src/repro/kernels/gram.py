@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: plane Gram matrix G = P P^T (paper Sec. 3.5).
+
+Feeds the inner-product cache of the multi-step approximate scheme: after
+an oracle call inserts a plane, its Gram row is refreshed; a full rebuild
+(this kernel) is used when loading checkpoints or re-sharding working sets.
+
+Classic three-loop matmul tiling with the contraction innermost:
+``(block_i, block_k) x (block_j, block_k) -> (block_i, block_j)`` MXU
+tiles accumulated in a VMEM-resident output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d",
+                                             "interpret"))
+def gram(planes: jnp.ndarray, *, block_n: int = 128, block_d: int = 512,
+         interpret: bool = False) -> jnp.ndarray:
+    """G[a, b] = <planes[a], planes[b]> for planes: (N, d) float32."""
+    n, d = planes.shape
+    block_n = min(block_n, max(8, n))
+    block_d = min(block_d, max(128, d))
+    n_pad = -n % block_n
+    d_pad = -d % block_d
+    p = jnp.pad(planes, ((0, n_pad), (0, d_pad)))
+    np_, dp_ = p.shape
+    grid = (np_ // block_n, np_ // block_n, dp_ // block_d)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
+        interpret=interpret,
+    )(p, p)
+    return out[:n, :n]

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused grouped expert FFN (SwiGLU) for MoE layers.
+
+The roofline hillclimb (EXPERIMENTS.md #Perf, deepseek-v3 train) shows the
+dominant post-flash memory term is MoE dispatch traffic; a large share is
+the (E, C, F) gate/up intermediates round-tripping HBM.  This kernel fuses
+
+    y[e] = (silu(x[e] @ wg[e]) * (x[e] @ wu[e])) @ wd[e]
+
+per expert with the F dimension tiled as the innermost grid axis: the
+(block_c, block_f) intermediate lives only in registers/VMEM and the
+(block_c, D) output tile accumulates across F tiles — the intermediates
+never touch HBM.
+
+Tiling: x (1, block_c, D) ~ 3.7 MiB for D=7168/block_c=128 fp32;
+wg/wu (1, D, block_f) and wd (1, block_f, D) ~ 3.7 MiB bf16 at
+block_f=256 — everything fits VMEM with MXU-aligned dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, out_ref):
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[0]                      # (block_c, D)
+    g = jax.lax.dot_general(x, wg_ref[0], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu_ref[0], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(wd_ref.dtype)   # (block_c, block_f)
+    out_ref[0] += jax.lax.dot_general(
+        h, wd_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f",
+                                             "interpret"))
+def moe_ffn(xs: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+            wd: jnp.ndarray, *, block_c: int = 128, block_f: int = 256,
+            interpret: bool = False) -> jnp.ndarray:
+    """xs: (E, C, D); wg/wu: (E, D, F); wd: (E, F, D) -> (E, C, D)."""
+    E, C, D = xs.shape
+    F = wg.shape[-1]
+    block_c = min(block_c, max(8, C))
+    block_f = min(block_f, max(128, F))
+    c_pad = -C % block_c
+    f_pad = -F % block_f
+    xs_p = jnp.pad(xs, ((0, 0), (0, c_pad), (0, 0)))
+    wg_p = jnp.pad(wg, ((0, 0), (0, 0), (0, f_pad)))
+    wu_p = jnp.pad(wu, ((0, 0), (0, 0), (0, f_pad)))
+    wd_p = jnp.pad(wd, ((0, 0), (0, f_pad), (0, 0)))
+    Cp, Fp = xs_p.shape[1], wg_p.shape[2]
+    grid = (E, Cp // block_c, Fp // block_f)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, D), lambda e, c, f: (e, c, 0)),
+            pl.BlockSpec((1, D, block_f), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, D, block_f), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, block_f, D), lambda e, c, f: (e, f, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, D), lambda e, c, f: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, D), jnp.float32),
+        interpret=interpret,
+    )(xs_p, wg_p, wu_p, wd_p)
+    return out[:, :C].astype(xs.dtype)

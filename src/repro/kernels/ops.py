@@ -1,0 +1,56 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run; everywhere else (this CPU container, CI)
+the wrappers fall back to interpret mode (``interpret=True`` executes the
+kernel body faithfully) or, for bulk use inside models, to the pure-jnp
+reference — selected via :func:`use_pallas`.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import flash_attention as _fa
+from . import moe_ffn as _moe
+from . import gram as _gram
+from . import plane_scores as _ps
+from . import viterbi as _vit
+from . import ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas() -> bool:
+    """Compiled Pallas only on real TPU; callers may force via config."""
+    return on_tpu()
+
+
+def plane_scores(planes, w, offsets, **kw):
+    if use_pallas():
+        return _ps.plane_scores(planes, w, offsets, **kw)
+    return ref.plane_scores_ref(planes, w, offsets)
+
+
+def gram(planes, **kw):
+    if use_pallas():
+        return _gram.gram(planes, **kw)
+    return ref.gram_ref(planes)
+
+
+def viterbi_step(m, trans, **kw):
+    if use_pallas():
+        return _vit.viterbi_step(m, trans, **kw)
+    return ref.viterbi_step_ref(m, trans)
+
+
+def flash_attention(q, k, v, sm_scale=None, **kw):
+    if use_pallas():
+        return _fa.flash_attention(q, k, v, sm_scale=sm_scale, **kw)
+    return ref.flash_attention_ref(q, k, v, sm_scale)
+
+
+def moe_ffn(xs, wg, wu, wd, **kw):
+    if use_pallas():
+        return _moe.moe_ffn(xs, wg, wu, wd, **kw)
+    return ref.moe_ffn_ref(xs, wg, wu, wd)

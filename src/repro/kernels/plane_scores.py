@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: working-set plane scoring (the approximate oracle).
+
+Computes ``scores = P @ w + b`` for a stack of cached planes — the inner
+loop of MP-BCFW's approximate pass (paper Sec. 3.3).  On TPU the plane
+stack lives in HBM; the kernel streams ``(block_n, block_d)`` tiles of P
+through VMEM and accumulates partial dot products into the (block_n, 1)
+output tile, with the reduction dimension as the innermost grid axis so
+each output tile stays resident in VMEM across the accumulation.
+
+Tiling: block_d is a multiple of 128 (lane width), block_n a multiple of 8
+(sublane) — MXU/VPU aligned.  For the production setting (cap <= 1024,
+d ~ 1e4-1e5) one (block_n, block_d) = (128, 512) tile is 256 KiB of VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, w_ref, b_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = b_ref[...]
+
+    out_ref[...] += p_ref[...] @ w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d",
+                                             "interpret"))
+def plane_scores(planes: jnp.ndarray, w: jnp.ndarray,
+                 offsets: jnp.ndarray, *, block_n: int = 128,
+                 block_d: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """scores[i] = <planes[i], w> + offsets[i].
+
+    planes: (N, d) float32; w: (d,); offsets: (N,).  N, d are padded to the
+    block grid internally; callers pass any shape.
+    """
+    n, d = planes.shape
+    block_n = min(block_n, max(8, n))
+    block_d = min(block_d, max(128, d))
+    n_pad = -n % block_n
+    d_pad = -d % block_d
+    p = jnp.pad(planes, ((0, n_pad), (0, d_pad)))
+    wv = jnp.pad(w, (0, d_pad)).reshape(-1, 1)
+    b = jnp.pad(offsets, (0, n_pad)).reshape(-1, 1)
+    grid = (p.shape[0] // block_n, p.shape[1] // block_d)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((block_d, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p.shape[0], 1), jnp.float32),
+        interpret=interpret,
+    )(p, wv, b)
+    return out[:n, 0]

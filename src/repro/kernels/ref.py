@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors one kernel's contract exactly; kernel tests sweep
+shapes/dtypes and ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def plane_scores_ref(planes: jnp.ndarray, w: jnp.ndarray,
+                     offsets: jnp.ndarray) -> jnp.ndarray:
+    return planes @ w + offsets
+
+
+def gram_ref(planes: jnp.ndarray) -> jnp.ndarray:
+    return planes @ planes.T
+
+
+def viterbi_step_ref(m: jnp.ndarray, trans: jnp.ndarray):
+    cand = m[:, :, None] + trans[None, :, :]
+    return jnp.max(cand, axis=1), jnp.argmax(cand, axis=1).astype(jnp.int32)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        sm_scale: float | None = None) -> jnp.ndarray:
+    bh, s, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * sm_scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def moe_ffn_ref(xs: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+                wd: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("ecd,edf->ecf", xs, wg)
+    u = jnp.einsum("ecd,edf->ecf", xs, wu)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      wd).astype(xs.dtype)

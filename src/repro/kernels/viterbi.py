@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: batched max-plus Viterbi step (chain oracle hot loop).
+
+One DP step of loss-augmented Viterbi for a batch of chains:
+
+    m_out[b, c]  = max_c' ( m_in[b, c'] + trans[c', c] ) + unary[b, c]
+    back[b, c]   = argmax_c' ( ... )
+
+The label alphabet C is padded to the 128-lane width; the (block_b, C, C)
+broadcast tile lives in VMEM (e.g. 8 x 128 x 128 fp32 = 512 KiB).  This is
+a VPU (max/add) kernel, not an MXU one — max-plus algebra has no systolic
+unit, so wide vectorization over the batch is the TPU-native formulation
+(vs. the paper's per-sequence C++ loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(m_ref, t_ref, out_ref, back_ref):
+    m = m_ref[...]            # (bb, C)
+    t = t_ref[...]            # (C, C)
+    cand = m[:, :, None] + t[None, :, :]        # (bb, C', C)
+    out_ref[...] = jnp.max(cand, axis=1)
+    back_ref[...] = jnp.argmax(cand, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def viterbi_step(m: jnp.ndarray, trans: jnp.ndarray, *, block_b: int = 8,
+                 interpret: bool = False):
+    """m: (B, C) running scores; trans: (C, C).  Returns (m_out, backptr).
+
+    C is padded to a multiple of 128 with -inf scores / 0 transitions so
+    padded labels never win; B is padded to block_b.
+    """
+    B, C = m.shape
+    c_pad = -C % 128
+    b_pad = -B % block_b
+    neg = jnp.float32(-1e30)
+    mp = jnp.pad(m, ((0, b_pad), (0, c_pad)), constant_values=neg)
+    tp = jnp.pad(trans, ((0, c_pad), (0, c_pad)))
+    Bp, Cp = mp.shape
+    grid = (Bp // block_b,)
+    out, back = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, Cp), lambda i: (i, 0)),
+            pl.BlockSpec((Cp, Cp), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, Cp), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, Cp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Cp), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Cp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mp, tp)
+    return out[:B, :C], back[:B, :C]

@@ -1,0 +1,370 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the host-device override before any other import (jax locks the
+device count on first init).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"  # noqa: E402
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                                   # noqa: E402
+from repro.launch import hlo_analysis                        # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.models import common, registry                    # noqa: E402
+from repro.optim import AdamWConfig, adamw_init, adamw_update  # noqa: E402
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+
+
+def build_config(arch: str, shape_name: str, overrides: dict):
+    cfg = configs.get_config(arch)
+    if shape_name == "long_500k":
+        cfg = dataclasses.replace(cfg, **configs.long_context_overrides(arch))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def batch_shardings(tree, mesh):
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1:
+            axs = [a for a in ("pod", "data") if a in mesh.axis_names]
+            total = int(np.prod([mesh.shape[a] for a in axs]))
+            if axs and leaf.shape[0] % total == 0 and leaf.shape[0] > 1:
+                spec[0] = tuple(axs)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def cache_shardings(cache_shapes, cfg, batch: int, mesh,
+                    seq_len: int = 0, seq_shard: bool = True):
+    """Heuristic cache sharding: data-shard the batch axis, model-shard the
+    *sequence* axis (preferred — attention contracts over S, so softmax
+    partials reduce with tiny all-reduces instead of all-gathering the
+    cache; works regardless of kv-head divisibility), falling back to a
+    kv-head axis where divisible."""
+    model_n = mesh.shape.get("model", 1)
+    axs = [a for a in ("pod", "data") if a in mesh.axis_names]
+    dp = int(np.prod([mesh.shape[a] for a in axs]))
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        done_batch = done_model = False
+        for i, dim in enumerate(leaf.shape[:4]):
+            if not done_batch and dim == batch and batch > 1 \
+                    and dim % dp == 0:
+                spec[i] = tuple(axs)
+                done_batch = True
+            elif done_batch and not done_model and seq_shard \
+                    and seq_len and dim == seq_len \
+                    and dim % model_n == 0 and "model" in mesh.axis_names:
+                spec[i] = "model"
+                done_model = True
+        if not done_model:
+            for i, dim in enumerate(leaf.shape[:4]):
+                if spec[i] is None and done_batch \
+                        and dim in (cfg.num_kv_heads, cfg.num_heads) \
+                        and dim % model_n == 0 \
+                        and "model" in mesh.axis_names:
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+
+
+def make_train_step(cfg, ocfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: registry.loss_fn(p, cfg, batch))(params)
+        params, opt_state, stats = adamw_update(grads, opt_state, params,
+                                                ocfg)
+        return params, opt_state, loss, stats["grad_norm"]
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return registry.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def serve_step(params, cache, tokens, pos):
+        return registry.decode_step(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Model-FLOPs accounting (6*N*D; MoE: active params only)
+
+
+def count_params(specs) -> dict:
+    import math
+    total = 0
+    expert = 0
+
+    def walk(tree, path):
+        nonlocal total, expert
+        if isinstance(tree, common.ParamSpec):
+            n = math.prod(tree.shape)
+            total += n
+            if "experts" in tree.axes:
+                expert += n
+            return
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, path + (k,))
+        elif isinstance(tree, (list, tuple)):
+            for i, v in enumerate(tree):
+                walk(v, path + (str(i),))
+
+    walk(specs, ())
+    return {"total": total, "expert": expert}
+
+
+def model_flops(cfg, counts: dict, tokens: int, kind: str) -> float:
+    n_total, n_expert = counts["total"], counts["expert"]
+    if cfg.moe and cfg.num_experts:
+        active_frac = cfg.experts_per_token / cfg.num_experts
+        n_active = n_total - n_expert * (1.0 - active_frac)
+    else:
+        n_active = n_total
+    per_tok = 6.0 * n_active if kind == "train" else 2.0 * n_active
+    return per_tok * tokens
+
+
+# ---------------------------------------------------------------------------
+# One cell
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None, opt_dtype: str = "float32",
+             donate: bool = True, mesh_shape: tuple | None = None,
+             replicate_fsdp: bool = False) -> dict:
+    cell = configs.SHAPES[shape_name]
+    cfg = build_config(arch, shape_name, overrides or {})
+    if mesh_shape is not None:
+        # per-arch mesh reshaping (perf knob): same chip count, different
+        # data/model split, e.g. (32, 8) so 40-head archs TP-shard cleanly
+        axes = ("pod", "data", "model") if len(mesh_shape) == 3 \
+            else ("data", "model")
+        mesh = jax.make_mesh(tuple(mesh_shape), axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "chips": chips,
+           "ok": False}
+    specs = registry.param_specs(cfg)
+    counts = count_params(specs)
+    rec["params_total"] = counts["total"]
+    rec["params_expert"] = counts["expert"]
+
+    aparams = common.abstract_params(specs)
+    rules = None
+    if replicate_fsdp:
+        # inference sharding profile: no optimizer state, so FSDP weight
+        # all-gathers buy nothing — replicate over data, keep TP/EP only
+        rules = dict(common.DEFAULT_RULES, embed=())
+    psh = common.param_shardings(specs, mesh, rules)
+
+    t0 = time.time()
+    if cell.kind == "train":
+        ocfg = AdamWConfig(state_dtype=getattr(jnp, opt_dtype))
+        aopt = jax.eval_shape(lambda p: adamw_init(p, ocfg), aparams)
+        osh = type(aopt)(step=NamedSharding(mesh, P()), m=psh, v=psh)
+        abatch = registry.train_input_specs(cfg, cell.global_batch,
+                                            cell.seq_len)
+        bsh = batch_shardings(abatch, mesh)
+        fn = jax.jit(make_train_step(cfg, ocfg),
+                     in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, NamedSharding(mesh, P()),
+                                    NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1) if donate else ())
+        lowered = fn.lower(aparams, aopt, abatch)
+        tokens = cell.global_batch * cell.seq_len
+    elif cell.kind == "prefill":
+        abatch = registry.train_input_specs(cfg, cell.global_batch,
+                                            cell.seq_len)
+        bsh = batch_shardings(abatch, mesh)
+        fn = jax.jit(make_prefill_step(cfg), in_shardings=(psh, bsh))
+        lowered = fn.lower(aparams, abatch)
+        tokens = cell.global_batch * cell.seq_len
+    else:  # decode
+        tokens_s, pos_s, cache_s = registry.decode_input_specs(
+            cfg, cell.global_batch, cell.seq_len)
+        csh = cache_shardings(cache_s, cfg, cell.global_batch, mesh,
+                              seq_len=cell.seq_len,
+                              seq_shard=bool((overrides or {}).get(
+                                  "seq_shard_cache", True)))
+        tsh = batch_shardings(tokens_s, mesh)
+        fn = jax.jit(make_decode_step(cfg),
+                     in_shardings=(psh, csh, tsh, NamedSharding(mesh, P())),
+                     out_shardings=(None, csh),
+                     donate_argnums=(1,) if donate else ())
+        lowered = fn.lower(aparams, cache_s, tokens_s, pos_s)
+        tokens = cell.global_batch
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "transcendentals",
+                                          "utilization operand")}
+        rec["flops"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": str(e)}
+        rec["flops"] = 0.0
+        rec["bytes_accessed"] = 0.0
+
+    hlo = compiled.as_text()
+    rec["hlo_bytes"] = len(hlo)
+    coll = hlo_analysis.collective_bytes(hlo)
+    rec["collective_bytes_static"] = coll.total_bytes
+    rec["collective_by_kind"] = coll.bytes_by_kind
+    rec["collective_counts"] = coll.count_by_kind
+    rec["while_trip_counts"] = hlo_analysis.while_trip_counts(hlo)[:32]
+
+    rec["model_flops"] = model_flops(cfg, counts, tokens, cell.kind)
+    rec["tokens"] = tokens
+    rec["ok"] = True
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver (one subprocess per cell for isolation)
+
+
+def all_cells():
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        for shape in configs.supported_shapes(cfg):
+            yield arch, shape
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. attn_chunk=2048")
+    ap.add_argument("--opt-dtype", default="float32")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. 32,8 — chips must still multiply to 256/512")
+    ap.add_argument("--replicate-fsdp", action="store_true",
+                    help="inference profile: weights replicated over data")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split(","))
+                  if args.mesh_shape else None)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        failures = 0
+        for arch, shape in all_cells():
+            for mesh in args.meshes.split(","):
+                tag = f"{arch}_{shape}_{mesh}_{args.tag}"
+                path = outdir / f"{tag}.json"
+                if path.exists() and json.loads(path.read_text()).get("ok"):
+                    print(f"[skip] {tag}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh,
+                       "--out", str(outdir), "--tag", args.tag,
+                       "--opt-dtype", args.opt_dtype]
+                for ov in args.override:
+                    cmd += ["--override", ov]
+                print(f"[run ] {tag}", flush=True)
+                try:
+                    subprocess.run(cmd, check=True, timeout=args.timeout)
+                except Exception as e:
+                    failures += 1
+                    path.write_text(json.dumps(
+                        {"arch": arch, "shape": shape, "mesh": mesh,
+                         "ok": False, "error": f"subprocess: {e}"}))
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+        print(f"sweep done, failures={failures}")
+        sys.exit(1 if failures else 0)
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    tag = f"{args.arch}_{args.shape}_{args.mesh}_{args.tag}"
+    path = outdir / f"{tag}.json"
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+                       overrides, args.opt_dtype, mesh_shape=mesh_shape,
+                       replicate_fsdp=args.replicate_fsdp)
+    except Exception as e:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "ok": False, "error": repr(e),
+               "traceback": traceback.format_exc()}
+    path.write_text(json.dumps(rec, indent=2))
+    status = "OK" if rec.get("ok") else f"ERROR: {rec.get('error')}"
+    print(f"{tag}: {status}  "
+          f"(lower {rec.get('lower_s', '?')}s, "
+          f"compile {rec.get('compile_s', '?')}s, "
+          f"flops {rec.get('flops', 0):.3e})")
+    if not rec.get("ok"):
+        print(rec.get("traceback", ""))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

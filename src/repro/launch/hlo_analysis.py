@@ -1,0 +1,126 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute/memory terms come from ``compiled.cost_analysis()``; the collective
+term is NOT in cost_analysis, so we parse the optimized HLO text and sum
+the result-operand bytes of every communication op (all-gather, all-reduce,
+reduce-scatter, all-to-all, collective-permute).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (3 links/chip on a 2D torus slice).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.5 = bf16[16,512,7168]{2,1,0} all-gather(...)
+_RESULT_RE = re.compile(r"(\w[\w\-.]*)\[([0-9,]*)\]")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result bytes of every collective op in (optimized) HLO text.
+
+    Collectives inside while-loop bodies (scan-over-layers) execute once
+    per layer; the HLO text contains the body once.  We multiply by the
+    trip count when the op sits inside a computation referenced by a
+    while-loop whose trip count is statically inferable from the name
+    (XLA names scan loops ``while``; trip counts are not in the text), so
+    instead we conservatively report *static* bytes and also expose the
+    per-kind op counts — the launcher multiplies by layer counts where it
+    knows the structure (see dryrun.py: ``loop_multiplier``).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        kind = None
+        for c in _COLLECTIVES:
+            # match op invocation: "<result> = <type> <kind>(" or fused name
+            if f" {c}(" in s or f" {c}-start(" in s or f" {c}-done(" in s:
+                kind = c
+                break
+        if kind is None:
+            continue
+        if f" {kind}-done(" in s:
+            continue  # counted at -start
+        lhs = s.split(f" {kind}(")[0].split(f" {kind}-start(")[0]
+        if "=" in lhs:
+            lhs = lhs.split("=", 1)[1]
+        total = 0
+        for dtype, dims in _RESULT_RE.findall(lhs):
+            if dtype in _DTYPE_BYTES:
+                total += _bytes_of(dtype, dims)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + total
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def while_trip_counts(hlo_text: str):
+    """Best-effort: extract scan trip counts from while-loop conditions.
+
+    XLA lowers ``lax.scan(..., length=L)`` to a while loop with a
+    ``compare(iv, L)`` in its condition; we grep constants in compare ops
+    of computations named ``*while*cond*``.
+    """
+    counts = []
+    in_cond = False
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") and "cond" in s.split("(")[0] and "{" in s:
+            in_cond = True
+        elif in_cond and s.startswith("ROOT") and "compare" in s:
+            m = re.findall(r"constant\((\d+)\)", s)
+            in_cond = False
+        elif in_cond and "constant(" in s:
+            m = re.findall(r"constant\((\d+)\)", s)
+            if m:
+                counts.append(int(m[-1]))
+            in_cond = False
+    return counts
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int):
+    """The three roofline times in seconds (per step, per chip).
+
+    ``flops``/``hbm_bytes`` are per-chip (cost_analysis of the partitioned
+    module); ``coll_bytes`` is per-chip collective traffic.
+    """
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Shapes: one v5e pod = (data=16, model=16) = 256
+chips; the multi-pod config adds a leading 'pod' axis (2, 16, 16) = 512.
+DP runs over ('pod','data'), TP/EP over 'model'; FSDP weight sharding maps
+'embed' onto the data axis (see repro.models.common.DEFAULT_RULES).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the local device (smoke tests, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,4 @@
+"""LM substrate: the 10 assigned architectures as composable JAX modules."""
+from . import (attention, common, encdec, hybrid, layers, moe, registry,
+               ssm, transformer, xlstm, xlstm_lm)  # noqa: F401
+from .common import ModelConfig, ParamSpec  # noqa: F401

@@ -1,0 +1,292 @@
+"""Attention: GQA (full/chunked/sliding-window) and MLA (deepseek-v3).
+
+Training/prefill uses *chunked causal attention*: a ``lax.scan`` over query
+chunks that materializes only a (B, H, chunk, S) score slab — the pure-jnp
+analogue of flash attention (the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU fast path, validated against
+this).  Decode uses a one-token query against a preallocated KV cache; MLA
+decode uses the *absorbed* formulation (scores against the compressed
+kv-lora cache directly) so the per-token cache is kv_lora+rope wide, not
+heads*hd.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+from .layers import apply_rope, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+
+
+def attn_specs(cfg: ModelConfig, prefix_shape=()) -> dict:
+    ax = ("layers",) * len(prefix_shape)
+    if cfg.mla:
+        qk_hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        s = {
+            "wq_a": ParamSpec(prefix_shape + (cfg.d_model, cfg.q_lora_rank),
+                              ax + ("embed", None), cfg.dtype),
+            "q_norm": ParamSpec(prefix_shape + (cfg.q_lora_rank,),
+                                ax + (None,), cfg.dtype, scale=1.0),
+            "wq_b": ParamSpec(
+                prefix_shape + (cfg.q_lora_rank, cfg.num_heads * qk_hd),
+                ax + (None, "heads"), cfg.dtype),
+            "wkv_a": ParamSpec(
+                prefix_shape + (cfg.d_model,
+                                cfg.kv_lora_rank + cfg.qk_rope_dim),
+                ax + ("embed", None), cfg.dtype),
+            "kv_norm": ParamSpec(prefix_shape + (cfg.kv_lora_rank,),
+                                 ax + (None,), cfg.dtype, scale=1.0),
+            "wkv_b": ParamSpec(
+                prefix_shape + (cfg.kv_lora_rank,
+                                cfg.num_heads * (cfg.qk_nope_dim
+                                                 + cfg.v_head_dim)),
+                ax + (None, "heads"), cfg.dtype),
+            "wo": ParamSpec(
+                prefix_shape + (cfg.num_heads * cfg.v_head_dim, cfg.d_model),
+                ax + ("heads", "embed"), cfg.dtype),
+        }
+        return s
+    hd = cfg.hd
+    s = {
+        "wq": ParamSpec(prefix_shape + (cfg.d_model, cfg.num_heads * hd),
+                        ax + ("embed", "heads"), cfg.dtype),
+        "wk": ParamSpec(prefix_shape + (cfg.d_model, cfg.num_kv_heads * hd),
+                        ax + ("embed", "kv"), cfg.dtype),
+        "wv": ParamSpec(prefix_shape + (cfg.d_model, cfg.num_kv_heads * hd),
+                        ax + ("embed", "kv"), cfg.dtype),
+        "wo": ParamSpec(prefix_shape + (cfg.num_heads * hd, cfg.d_model),
+                        ax + ("heads", "embed"), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec(prefix_shape + (cfg.num_heads * hd,),
+                            ax + ("heads",), cfg.dtype, scale=0.0)
+        s["bk"] = ParamSpec(prefix_shape + (cfg.num_kv_heads * hd,),
+                            ax + ("kv",), cfg.dtype, scale=0.0)
+        s["bv"] = ParamSpec(prefix_shape + (cfg.num_kv_heads * hd,),
+                            ax + ("kv",), cfg.dtype, scale=0.0)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention (training / prefill)
+
+
+def chunked_causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                             chunk: int, sliding_window: int = 0,
+                             score_dtype: str = "f32") -> jnp.ndarray:
+    """q, k, v: (B, S, H, hd) — kv already repeated to H heads.
+
+    Scans over S/chunk query blocks; each block sees keys [0, block_end)
+    (optionally windowed), so peak score memory is (B, H, chunk, S).
+    ``score_dtype='bf16'`` keeps the (chunk, S) score slab in bf16 through
+    the softmax — halves the dominant HBM term at ~2-digit softmax
+    precision (perf knob; the TPU Pallas kernel keeps slabs in VMEM
+    entirely, see kernels/flash_attention.py).
+    """
+    B, S, H, hd = q.shape
+    vd = v.shape[-1]            # MLA: v head dim may differ from qk head dim
+    sdt = jnp.bfloat16 if score_dtype == "bf16" else jnp.float32
+    scale = hd ** -0.5
+    chunk = min(chunk, S)
+    pad = -S % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // chunk
+    qc = q.reshape(B, nq, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    kT = k.transpose(0, 2, 3, 1)  # (B, H, hd, S)
+    vT = v.transpose(0, 2, 1, 3)  # (B, H, S, hd)
+    col = jnp.arange(S)
+
+    def block(ci, qb):
+        # qb: (B, chunk, H, hd)
+        row = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bhdk->bhqk", qb.astype(sdt),
+                       kT.astype(sdt)) * jnp.asarray(scale, sdt)
+        mask = row[:, None] >= col[None, :]
+        if sliding_window > 0:
+            mask &= col[None, :] > row[:, None] - sliding_window
+        s = jnp.where(mask[None, None], s, jnp.asarray(-1e30, sdt))
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bqhd", p,
+                          vT.astype(sdt)).astype(q.dtype)
+
+    out = jax.lax.map(lambda args: block(*args),
+                      (jnp.arange(nq), qc))        # (nq, B, chunk, H, vd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * chunk, H, vd)
+    return out[:, :S]
+
+
+def repeat_kv(x: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head H/K times."""
+    B, S, K, hd = x.shape
+    if K == num_heads:
+        return x
+    return jnp.repeat(x, num_heads // K, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (training / prefill)
+
+
+def gqa_forward(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig) -> jnp.ndarray:
+    B, S, D = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = repeat_kv(k, cfg.num_heads)
+    v = repeat_kv(v, cfg.num_heads)
+    if cfg.attn_impl == "stub":
+        o = v + 0.0 * q  # ablation probe: projections kept, no S^2 slab
+    else:
+        o = chunked_causal_attention(q, k, v, cfg.attn_chunk,
+                                     cfg.sliding_window,
+                                     score_dtype=cfg.attn_score_dtype)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# GQA decode (one token, KV cache)
+
+
+def gqa_decode(p: dict, x: jnp.ndarray, cache: Tuple[jnp.ndarray, jnp.ndarray],
+               pos: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, 1, D); cache: (k, v) each (B, Smax, K, hd); pos: () int32."""
+    B = x.shape[0]
+    hd = cfg.hd
+    ck, cv = cache
+    Smax = ck.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, cfg.num_heads, hd)
+    k = k.reshape(B, 1, cfg.num_kv_heads, hd)
+    v = v.reshape(B, 1, cfg.num_kv_heads, hd)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos, 0, 0))
+    kk = repeat_kv(ck, cfg.num_heads)
+    vv = repeat_kv(cv, cfg.num_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * hd ** -0.5
+    idx = jnp.arange(Smax)
+    valid = idx[None, None, None, :] <= pos
+    if cfg.sliding_window > 0:
+        valid &= idx[None, None, None, :] > pos - cfg.sliding_window
+    s = jnp.where(valid, s, -1e30)
+    pw = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pw, vv.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, 1, -1)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+
+
+def _mla_qkv(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Project to q (nope+rope) and the compressed kv stream."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                  cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", ql, p["wq_b"]).reshape(B, S, H, qk_hd)
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:]                    # (B, S, rope)
+    return q, c_kv, k_rope
+
+
+def mla_forward(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig) -> jnp.ndarray:
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q, c_kv, k_rope = _mla_qkv(p, x, cfg)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)                    # (B,S,1,rope)
+    kvb = p["wkv_b"].reshape(cfg.kv_lora_rank, H,
+                             cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, kvb[..., :cfg.qk_nope_dim])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, kvb[..., cfg.qk_nope_dim:])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.qk_rope_dim))], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    if cfg.attn_impl == "stub":
+        o = v + 0.0 * jnp.sum(qq, axis=-1, keepdims=True)
+    else:
+        o = chunked_causal_attention(qq, k, v, cfg.attn_chunk,
+                                     score_dtype=cfg.attn_score_dtype)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def mla_decode(p: dict, x: jnp.ndarray, cache, pos: jnp.ndarray,
+               cfg: ModelConfig):
+    """Absorbed MLA decode: cache = (c_kv (B,Smax,rank), k_rope (B,Smax,r)).
+
+    q_nope is absorbed through wkv_b's key half so scores are taken against
+    the compressed cache directly; the value path re-expands after the
+    softmax.  Per-token cache cost: kv_lora_rank + rope dims (not H*hd).
+    """
+    B = x.shape[0]
+    H = cfg.num_heads
+    cc, cr = cache
+    Smax = cc.shape[1]
+    q, c_kv, k_rope = _mla_qkv(p, x, cfg)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)       # (B,1,H,r)
+    k_rope = apply_rope(k_rope[:, :, None, :], posv,
+                        cfg.rope_theta)[:, :, 0, :]         # (B,1,r)
+    cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, pos, 0))
+    cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype),
+                                      (0, pos, 0))
+    kvb = p["wkv_b"].reshape(cfg.kv_lora_rank, H,
+                             cfg.qk_nope_dim + cfg.v_head_dim)
+    # Absorb: q_eff[b,h,r] = sum_k q_nope[b,h,k] kvb_k[r,h,k]
+    q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, kvb[..., :cfg.qk_nope_dim])
+    s = (jnp.einsum("bqhr,bkr->bhqk", q_eff.astype(jnp.float32),
+                    cc.astype(jnp.float32))
+         + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                      cr.astype(jnp.float32)))
+    s = s * (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    valid = jnp.arange(Smax)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    pw = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhqk,bkr->bqhr", pw, cc.astype(jnp.float32))
+    o = jnp.einsum("bqhr,rhk->bqhk", o_c.astype(x.dtype),
+                   kvb[..., cfg.qk_nope_dim:])
+    o = o.reshape(B, 1, -1)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (cc, cr)
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, seq: int, layers: int):
+    hd = cfg.hd
+    shape = (layers, batch, seq, cfg.num_kv_heads, hd)
+    return (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq: int, layers: int):
+    return (jnp.zeros((layers, batch, seq, cfg.kv_lora_rank), cfg.dtype),
+            jnp.zeros((layers, batch, seq, cfg.qk_rope_dim), cfg.dtype))

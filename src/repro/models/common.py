@@ -1,0 +1,293 @@
+"""Shared model plumbing: configs, parameter specs, sharding rules.
+
+Every architecture is described by a :class:`ModelConfig`; its parameters
+are declared as a pytree of :class:`ParamSpec` (shape + logical axes), from
+which we derive (a) abstract ShapeDtypeStructs for the dry-run, (b) real
+initialized arrays for smoke tests, and (c) NamedShardings for any mesh.
+
+Logical axis -> mesh axis rules (MaxText-style):
+  * "embed"   -> FSDP over the data axis (weights all-gathered per layer),
+  * "heads" / "mlp" / "vocab" / "experts" / "kv" -> tensor/expert parallel
+    over the model axis,
+  * "layers" and small axes -> replicated.
+A logical axis is only sharded if its size divides the mesh axis size
+(``maybe_shard``); otherwise it is replicated — e.g. qwen2's 14 heads stay
+replicated on a 16-way model axis while its d_ff=4864 is TP-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# ---------------------------------------------------------------------------
+# Config
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 => d_model // num_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    # --- MoE ---
+    moe: bool = False
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0
+    first_dense_layers: int = 0     # deepseek-v3: first k layers are dense
+    capacity_factor: float = 1.25
+    # --- MLA (deepseek-v3) ---
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp: bool = False               # multi-token-prediction auxiliary head
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0             # zamba2: shared attn block period
+    # --- xLSTM ---
+    xlstm: bool = False
+    slstm_every: int = 4            # every k-th block is sLSTM
+    # --- enc-dec (whisper) ---
+    encdec: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 0            # audio frame count from the stub frontend
+    # --- VLM ---
+    vision_tokens: int = 0          # patch embeddings prepended (stub)
+    # --- long context ---
+    sliding_window: int = 0         # >0: sliding-window attention
+    subquadratic: bool = False      # can run the long_500k cell
+    # --- attention impl ---
+    attn_chunk: int = 1024          # q-chunk for chunked causal attention
+    # --- analysis ---
+    probe_unroll: bool = False      # unroll layer scans (cost probing only)
+    # --- perf knobs (hillclimbing; see EXPERIMENTS.md #Perf) ---
+    attn_score_dtype: str = "f32"   # "bf16" halves attention HBM traffic
+    remat_policy: str = "nothing"   # nothing | dots | selective | none
+    attn_impl: str = "chunked"      # "stub" ablates the S^2 slab (the
+                                    # measurement basis for the TPU-kernel-
+                                    # adjusted memory term; see roofline.py)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    def param_count(self) -> int:
+        specs = jax.tree_util.tree_leaves(
+            self._registry_specs(), is_leaf=lambda x: isinstance(x, ParamSpec))
+        return int(sum(math.prod(s.shape) for s in specs))
+
+    def _registry_specs(self):
+        from . import registry
+        return registry.param_specs(self)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (len == ndim)
+    dtype: Any = jnp.bfloat16
+    scale: float = 0.02              # init stddev (0 => zeros, 1.0 => ones)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(specs) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=_is_spec)
+
+
+def init_params(specs, rng: jax.Array) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def make(s: ParamSpec, k):
+        if s.scale == 0.0:
+            return jnp.zeros(s.shape, s.dtype)
+        if s.scale == 1.0 and len(s.shape) <= 1:
+            return jnp.ones(s.shape, s.dtype)
+        return (jax.random.normal(k, s.shape, jnp.float32)
+                * s.scale).astype(s.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(s, k) for s, k in zip(leaves, keys)])
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+
+#: logical axis -> preferred mesh axis (in priority order)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("data",),          # FSDP
+    "heads": ("model",),         # TP (flattened heads*hd dims)
+    "kv": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),       # EP
+    "batch": ("pod", "data"),
+    "seq": (),                   # SP is opt-in via perf flags
+    "layers": (),
+    "conv": (),
+    "state": (),
+}
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                    mesh: Mesh, rules=None,
+                    batch_axes: Tuple[str, ...] = ("pod", "data")
+                    ) -> PartitionSpec:
+    """Map logical axes to a PartitionSpec, replicating non-divisible dims."""
+    rules = rules or DEFAULT_RULES
+    used = set()
+    out = []
+    for ax_name, dim in zip(axes, shape):
+        entry: Any = None
+        if ax_name is not None:
+            candidates = rules.get(ax_name, ())
+            if ax_name == "batch":
+                # batch may shard over several mesh axes jointly
+                axs = [a for a in candidates
+                       if a in mesh.axis_names and a not in used]
+                total = int(np.prod([mesh.shape[a] for a in axs])) if axs else 1
+                if axs and dim % total == 0:
+                    entry = tuple(axs)
+                    used.update(axs)
+            else:
+                for cand in candidates:
+                    if cand in mesh.axis_names and cand not in used \
+                            and dim % mesh.shape[cand] == 0:
+                        entry = cand
+                        used.add(cand)
+                        break
+        out.append(entry)
+    return PartitionSpec(*out)
+
+
+def param_shardings(specs, mesh: Mesh, rules=None):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(
+            mesh, logical_to_spec(s.axes, s.shape, mesh, rules)),
+        specs, is_leaf=_is_spec)
+
+
+def activation_sharding(mesh: Mesh, *axes: Optional[str]) -> NamedSharding:
+    """Sharding for an activation with the given logical axes."""
+    spec = []
+    for a in axes:
+        if a == "batch":
+            axs = tuple(x for x in ("pod", "data") if x in mesh.axis_names)
+            spec.append(axs if axs else None)
+        elif a == "model" and "model" in mesh.axis_names:
+            spec.append("model")
+        else:
+            spec.append(None)
+    return NamedSharding(mesh, PartitionSpec(*spec))
+
+
+def scan_layers(body, init, xs, unroll: bool = False):
+    """``lax.scan`` over stacked layer params, or a Python unroll.
+
+    The unrolled form exists for *differential depth probing*: XLA's
+    cost_analysis counts a while-loop body once regardless of trip count,
+    so the roofline harness lowers tiny UNROLLED depths (L=1, 2, ...) and
+    solves cost = a + sum_i c_i * L_i exactly (see launch/roofline.py).
+    Production lowering always uses the scan (O(1) HLO in depth).
+    """
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    leaves = jax.tree_util.tree_leaves(xs)
+    L = leaves[0].shape[0] if leaves else 0
+    carry = init
+    ys = []
+    for i in range(L):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if not ys or all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def remat_wrap(cfg: "ModelConfig", fn):
+    """Apply the configured activation-checkpoint policy to a layer body.
+
+    "nothing"   recompute everything in backward (min live memory),
+    "dots"      save dot outputs without batch dims,
+    "selective" save the named small (B,S,D) block outputs only — avoids
+                re-running attention when differentiating the FFN half and
+                vice versa, while the big score/dispatch slabs stay
+                rematerialized (the deployable middle point, see
+                EXPERIMENTS.md #Perf),
+    "none"      no remat (bounds recompute cost; infeasible at depth).
+    """
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif cfg.remat_policy == "selective":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "ffn_out")
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# Process-global probe switch (set by the roofline prober around lowering;
+# production code never touches it, so scans stay scans).
+_PROBE_UNROLL = False
+
+
+def set_probe_unroll(value: bool) -> None:
+    global _PROBE_UNROLL
+    _PROBE_UNROLL = bool(value)
+
+
+def layer_scan(body, init, xs):
+    """Module-internal alias used by all layer stacks (see scan_layers)."""
+    return scan_layers(body, init, xs, _PROBE_UNROLL)
+
+
+def shard_batch(x: jnp.ndarray, mesh: Optional[Mesh]) -> jnp.ndarray:
+    if mesh is None:
+        return x
+    axes = ["batch"] + [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, activation_sharding(mesh, *axes))

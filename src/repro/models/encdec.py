@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a stub: ``input_specs()`` provides
+precomputed frame embeddings (B, T_frames, d_model); the model is the
+transformer backbone — a bidirectional encoder over frames and a causal
+decoder with cross-attention.  Decode uses a self-attention KV cache plus a
+precomputed cross-attention KV cache (built once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .common import ModelConfig, ParamSpec
+from .common import layer_scan as _scan
+from .layers import (apply_rope, cross_entropy, embed_specs, embed_tokens,
+                     lm_logits, mlp_specs, rms_norm, swiglu)
+
+
+def _xattn_specs(cfg: ModelConfig, pre=()) -> dict:
+    ax = ("layers",) * len(pre)
+    hd = cfg.hd
+    return {
+        "wq": ParamSpec(pre + (cfg.d_model, cfg.num_heads * hd),
+                        ax + ("embed", "heads"), cfg.dtype),
+        "wk": ParamSpec(pre + (cfg.d_model, cfg.num_heads * hd),
+                        ax + ("embed", "heads"), cfg.dtype),
+        "wv": ParamSpec(pre + (cfg.d_model, cfg.num_heads * hd),
+                        ax + ("embed", "heads"), cfg.dtype),
+        "wo": ParamSpec(pre + (cfg.num_heads * hd, cfg.d_model),
+                        ax + ("heads", "embed"), cfg.dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    enc_n, dec_n = cfg.encoder_layers, cfg.num_layers
+    s: Dict[str, Any] = dict(embed_specs(cfg))
+    s["enc_layers"] = {
+        "ln1": ParamSpec((enc_n, cfg.d_model), ("layers", None), cfg.dtype,
+                         scale=1.0),
+        "attn": attn.attn_specs(cfg, (enc_n,)),
+        "ln2": ParamSpec((enc_n, cfg.d_model), ("layers", None), cfg.dtype,
+                         scale=1.0),
+        "mlp": mlp_specs(cfg, prefix_shape=(enc_n,)),
+    }
+    s["dec_layers"] = {
+        "ln1": ParamSpec((dec_n, cfg.d_model), ("layers", None), cfg.dtype,
+                         scale=1.0),
+        "self_attn": attn.attn_specs(cfg, (dec_n,)),
+        "lnx": ParamSpec((dec_n, cfg.d_model), ("layers", None), cfg.dtype,
+                         scale=1.0),
+        "cross_attn": _xattn_specs(cfg, (dec_n,)),
+        "ln2": ParamSpec((dec_n, cfg.d_model), ("layers", None), cfg.dtype,
+                         scale=1.0),
+        "mlp": mlp_specs(cfg, prefix_shape=(dec_n,)),
+    }
+    s["enc_norm"] = ParamSpec((cfg.d_model,), (None,), cfg.dtype, scale=1.0)
+    s["final_norm"] = ParamSpec((cfg.d_model,), (None,), cfg.dtype,
+                                scale=1.0)
+    return s
+
+
+def _bidir_attention(p, x, cfg):
+    """Full bidirectional attention (encoder)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, -1, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, -1, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, -1, hd)
+    k = attn.repeat_kv(k, cfg.num_heads)
+    v = attn.repeat_kv(v, cfg.num_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    pw = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pw, v.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, S, -1)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"])
+
+
+def _cross_attention(p, x, enc_out, cfg):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, -1, hd)
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(
+        B, enc_out.shape[1], -1, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(
+        B, enc_out.shape[1], -1, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    pw = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pw, v.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, S, -1)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"])
+
+
+def encode(params: dict, cfg: ModelConfig,
+           frames: jnp.ndarray) -> jnp.ndarray:
+    x = frames.astype(cfg.dtype)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + _bidir_attention(lp["attn"], h, cfg)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        m = lp["mlp"]
+        return x + swiglu(h, m["gate"], m["up"], m["down"]), None
+
+    x, _ = _scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder(params, cfg, x, positions, enc_out):
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn.gqa_forward(lp["self_attn"], h, positions, cfg)
+        h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _cross_attention(lp["cross_attn"], h, enc_out, cfg)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        m = lp["mlp"]
+        return x + swiglu(h, m["gate"], m["up"], m["down"]), None
+
+    from .common import remat_wrap
+    body = remat_wrap(cfg, body)
+    x, _ = _scan(body, x, params["dec_layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = _decoder(params, cfg, x, positions, enc_out)
+    logits = lm_logits(params, h, cfg)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    n = cfg.num_layers
+    hd = cfg.hd
+    return {
+        "self": attn.init_gqa_cache(cfg, batch, seq, n),
+        "cross_k": jnp.zeros((n, batch, cfg.encoder_seq, cfg.num_heads, hd),
+                             cfg.dtype),
+        "cross_v": jnp.zeros((n, batch, cfg.encoder_seq, cfg.num_heads, hd),
+                             cfg.dtype),
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    x = embed_tokens(params, tokens, cfg)
+    hd = cfg.hd
+
+    def body(x, inp):
+        lp, (ck, cv), xk, xv = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, (ck, cv) = attn.gqa_decode(lp["self_attn"], h, (ck, cv), pos, cfg)
+        x = x + a
+        h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        B = x.shape[0]
+        q = jnp.einsum("bsd,dh->bsh", h, lp["cross_attn"]["wq"]).reshape(
+            B, 1, -1, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       xk.astype(jnp.float32)) * hd ** -0.5
+        pw = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", pw, xv.astype(jnp.float32))
+        o = o.astype(x.dtype).reshape(B, 1, -1)
+        x = x + jnp.einsum("bsh,hd->bsd", o, lp["cross_attn"]["wo"])
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        m = lp["mlp"]
+        return x + swiglu(h, m["gate"], m["up"], m["down"]), (ck, cv)
+
+    x, new_self = _scan(
+        body, x, (params["dec_layers"], cache["self"],
+                  cache["cross_k"], cache["cross_v"]))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), dict(cache, self=new_self)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict):
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = _decoder(params, cfg, x, positions, enc_out)
+    return lm_logits(params, h[:, -1:], cfg)

@@ -1,0 +1,191 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single *shared* attention block
+applied every ``attn_every`` layers (params reused, per-invocation KV cache).
+
+The layer stack is scanned in groups of ``attn_every`` mamba layers followed
+by one shared-attention invocation, so depth stays O(1) in the HLO.  The
+trailing layers (num_layers % attn_every) run in a tail scan without
+attention.  For the 500k-token cell the shared block uses sliding-window
+attention (cfg.sliding_window), keeping the whole model sub-quadratic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ssm
+from .common import ModelConfig, ParamSpec
+from .common import layer_scan as _scan
+from .layers import (cross_entropy, embed_specs, embed_tokens, lm_logits,
+                     mlp_specs, rms_norm, swiglu)
+
+
+def _groups(cfg: ModelConfig):
+    k = cfg.attn_every
+    n_groups = cfg.num_layers // k
+    tail = cfg.num_layers - n_groups * k
+    return n_groups, k, tail
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    n_groups, k, tail = _groups(cfg)
+    s: Dict[str, Any] = dict(embed_specs(cfg))
+    s["mamba_groups"] = ssm.ssm_specs(cfg, prefix_shape=(n_groups, k))
+    if tail:
+        s["mamba_tail"] = ssm.ssm_specs(cfg, prefix_shape=(tail,))
+    s["shared_attn"] = {
+        "ln1": ParamSpec((cfg.d_model,), (None,), cfg.dtype, scale=1.0),
+        "attn": attn.attn_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), (None,), cfg.dtype, scale=1.0),
+        "mlp": mlp_specs(cfg),
+    }
+    s["norm_in"] = ParamSpec((cfg.num_layers, cfg.d_model),
+                             ("layers", None), cfg.dtype, scale=1.0)
+    s["final_norm"] = ParamSpec((cfg.d_model,), (None,), cfg.dtype,
+                                scale=1.0)
+    return s
+
+
+def _mamba_layer(cfg, p, norm_scale, x):
+    return x + ssm.ssd_forward(p, rms_norm(x, norm_scale, cfg.norm_eps), cfg)
+
+
+def _shared_attn(cfg, p, x, positions):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn.gqa_forward(p["attn"], h, positions, cfg)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    n_groups, k, tail = _groups(cfg)
+    norm_in = params["norm_in"].reshape((n_groups, k, -1)) if not tail else \
+        params["norm_in"][:n_groups * k].reshape((n_groups, k, -1))
+
+    from .common import remat_wrap
+
+    @functools.partial(remat_wrap, cfg)
+    def group_body(x, inp):
+        gp, gnorm = inp
+
+        def inner(x, inp2):
+            lp, nrm = inp2
+            return _mamba_layer(cfg, lp, nrm, x), None
+
+        x, _ = _scan(inner, x, (gp, gnorm))
+        return _shared_attn(cfg, params["shared_attn"], x, positions)
+
+    def scan_fn(x, inp):
+        return group_body(x, inp), None
+
+    x, _ = _scan(scan_fn, x, (params["mamba_groups"], norm_in))
+    if tail:
+        tail_norm = params["norm_in"][n_groups * k:]
+
+        def tail_fn(x, inp2):
+            lp, nrm = inp2
+            return _mamba_layer(cfg, lp, nrm, x), None
+
+        x, _ = _scan(tail_fn, x, (params["mamba_tail"], tail_norm))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, h, cfg)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    n_groups, k, tail = _groups(cfg)
+    hd = cfg.hd
+    kv_shape = (n_groups, batch, seq, cfg.num_kv_heads, hd)
+    return {
+        "ssm_groups": jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, k) + a.shape[1:]),
+            ssm.init_ssm_cache(cfg, batch, n_groups * k)),
+        "ssm_tail": ssm.init_ssm_cache(cfg, batch, tail) if tail else None,
+        "attn_k": jnp.zeros(kv_shape, cfg.dtype),
+        "attn_v": jnp.zeros(kv_shape, cfg.dtype),
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    x = embed_tokens(params, tokens, cfg)
+    n_groups, k, tail = _groups(cfg)
+    norm_in = params["norm_in"][:n_groups * k].reshape((n_groups, k, -1))
+
+    def group_body(x, inp):
+        gp, gnorm, gcache, ck, cv = inp
+
+        def inner(x, inp2):
+            lp, nrm, lcache = inp2
+            h = rms_norm(x, nrm, cfg.norm_eps)
+            out, lcache = ssm.ssd_decode(lp, h, lcache, cfg)
+            return x + out, lcache
+
+        x, gcache = _scan(inner, x, (gp, gnorm, gcache))
+        p = params["shared_attn"]
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, (ck, cv) = attn.gqa_decode(p["attn"], h, (ck, cv), pos, cfg)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+        return x, (gcache, ck, cv)
+
+    def scan_fn(x, inp):
+        return group_body(x, inp)
+
+    x, (ssm_g, ck, cv) = _scan(
+        scan_fn, x, (params["mamba_groups"], norm_in,
+                     cache["ssm_groups"], cache["attn_k"], cache["attn_v"]))
+    new_cache = dict(cache, ssm_groups=ssm_g, attn_k=ck, attn_v=cv)
+    if tail:
+        tail_norm = params["norm_in"][n_groups * k:]
+
+        def tail_fn(x, inp2):
+            lp, nrm, lcache = inp2
+            h = rms_norm(x, nrm, cfg.norm_eps)
+            out, lcache = ssm.ssd_decode(lp, h, lcache, cfg)
+            return x + out, lcache
+
+        x, new_tail = _scan(
+            tail_fn, x, (params["mamba_tail"], tail_norm, cache["ssm_tail"]))
+        new_cache["ssm_tail"] = new_tail
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), new_cache
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict):
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    n_groups, k, tail = _groups(cfg)
+    norm_in = params["norm_in"][:n_groups * k].reshape((n_groups, k, -1))
+
+    def group_body(x, inp):
+        gp, gnorm = inp
+
+        def inner(x, inp2):
+            lp, nrm = inp2
+            return _mamba_layer(cfg, lp, nrm, x), None
+
+        x, _ = _scan(inner, x, (gp, gnorm))
+        return _shared_attn(cfg, params["shared_attn"], x, positions), None
+
+    x, _ = _scan(group_body, x, (params["mamba_groups"], norm_in))
+    if tail:
+        tail_norm = params["norm_in"][n_groups * k:]
+
+        def tail_fn(x, inp2):
+            lp, nrm = inp2
+            return _mamba_layer(cfg, lp, nrm, x), None
+
+        x, _ = _scan(tail_fn, x, (params["mamba_tail"], tail_norm))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h[:, -1:], cfg)

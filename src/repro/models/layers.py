@@ -1,0 +1,88 @@
+"""Common neural layers: norms, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: (silu(x W_g) * (x W_u)) W_d; weights (D,F),(D,F),(F,D)."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None,
+              prefix_shape=()) -> dict:
+    f = d_ff or cfg.d_ff
+    ax = ("layers",) * len(prefix_shape)
+    return {
+        "gate": ParamSpec(prefix_shape + (cfg.d_model, f),
+                          ax + ("embed", "mlp"), cfg.dtype),
+        "up": ParamSpec(prefix_shape + (cfg.d_model, f),
+                        ax + ("embed", "mlp"), cfg.dtype),
+        "down": ParamSpec(prefix_shape + (f, cfg.d_model),
+                          ax + ("mlp", "embed"), cfg.dtype),
+    }
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    out = {"embedding": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                  ("vocab", "embed"), cfg.dtype)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"), cfg.dtype)
+    return out
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def lm_logits(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    head = (params["embedding"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return jnp.einsum("...d,dv->...v", x, head)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross entropy; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,77 @@
+"""Mixture-of-Experts layer with capacity-based routing (EP over 'model').
+
+Routing is *expert-choice over the token-choice gate*: each token's top-k
+experts define the gate mask/weights (softmax-normalized over the selected
+experts, deepseek-style), and each expert then takes its top-C tokens by
+gate score with C = T*k/E * capacity_factor.  This keeps dispatch/combine
+as two gathers + one scatter-add — no data-dependent shapes, no global
+sort — which partitions cleanly under pjit with experts sharded over the
+'model' axis.  Overflow tokens fall through to the shared expert (if any)
+or the residual path, standard capacity-drop semantics.
+
+FLOP accounting (what the roofline reads) matches token-choice top-k MoE:
+E*C == T*k*cf expert-token slots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+from .layers import mlp_specs, swiglu
+
+
+def moe_specs(cfg: ModelConfig, prefix_shape=()) -> dict:
+    ax = ("layers",) * len(prefix_shape)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    s = {
+        "router": ParamSpec(prefix_shape + (D, E), ax + ("embed", None),
+                            jnp.float32),
+        "w_gate": ParamSpec(prefix_shape + (E, D, F),
+                            ax + ("experts", "embed", "mlp"), cfg.dtype),
+        "w_up": ParamSpec(prefix_shape + (E, D, F),
+                          ax + ("experts", "embed", "mlp"), cfg.dtype),
+        "w_down": ParamSpec(prefix_shape + (E, F, D),
+                            ax + ("experts", "mlp", "embed"), cfg.dtype),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = mlp_specs(
+            cfg, d_ff=cfg.moe_d_ff * cfg.num_shared_experts,
+            prefix_shape=prefix_shape)
+    return s
+
+
+def moe_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    # token-choice top-k gate, normalized over the chosen experts
+    topv, topi = jax.lax.top_k(logits, k)                  # (T, k)
+    gate_k = jax.nn.softmax(topv, axis=-1)                 # (T, k)
+    gates = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], topi].set(gate_k)          # (T, E)
+
+    C = max(1, int(T * k * cfg.capacity_factor) // E)
+    # expert-choice: each expert takes its top-C tokens by gate score
+    ev, ei = jax.lax.top_k(gates.T, C)                     # (E, C)
+    keep = ev > 0.0                                        # dropped slots
+    xs = jnp.take(xf, ei, axis=0)                          # (E, C, D)
+    from repro.kernels import ops as kernel_ops
+    if kernel_ops.on_tpu():
+        # fused Pallas grouped FFN: (E,C,F) intermediates stay in VMEM
+        y = kernel_ops.moe_ffn(xs, p["w_gate"], p["w_up"], p["w_down"])
+    else:
+        g = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xs, p["w_up"])
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+    w = (ev * keep).astype(y.dtype)[..., None]             # (E, C, 1)
+    out = jnp.zeros((T, D), y.dtype).at[ei.reshape(-1)].add(
+        (y * w).reshape(E * C, D))
+    if cfg.num_shared_experts:
+        sh = p["shared"]
+        out = out + swiglu(xf, sh["gate"], sh["up"], sh["down"])
+    return out.reshape(B, S, D).astype(x.dtype)

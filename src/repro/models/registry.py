@@ -1,0 +1,90 @@
+"""Family registry: dispatches model entry points + declares input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a dry-run cell (weak-type-correct, shardable, no device
+allocation); ``*_step`` functions are what the launcher lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, transformer, xlstm_lm
+from .common import ModelConfig
+
+_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": hybrid,
+    "ssm": xlstm_lm,
+    "audio": encdec,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _MODULES[cfg.family]
+
+
+def param_specs(cfg: ModelConfig):
+    return module_for(cfg).param_specs(cfg)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    return module_for(cfg).loss_fn(params, cfg, batch)
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    return module_for(cfg).prefill(params, cfg, batch)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    return module_for(cfg).decode_step(params, cfg, cache, tokens, pos)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    return module_for(cfg).init_cache(cfg, batch, seq)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — nothing is allocated)
+
+
+def train_input_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    specs = {"tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int, seq: int):
+    """(tokens, pos, cache-specs) for one serve step with a seq-long cache."""
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, seq))
+    tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, pos, cache
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int, rng):
+    """Concrete random batch with the same pytree as train_input_specs."""
+    import numpy as np
+    r = np.random.RandomState(rng)
+    out = {
+        "tokens": jnp.asarray(
+            r.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+    }
+    out["labels"] = out["tokens"]
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jnp.asarray(
+            r.randn(batch, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            r.randn(batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out

@@ -1,0 +1,179 @@
+"""Mamba2 (SSD) blocks — training via the chunked SSD algorithm, decode via
+the state recurrence.  Used by zamba2 (hybrid) and available standalone.
+
+Chunked SSD (Dao & Gu 2024), ngroups=1: within a chunk the output is an
+attention-like (Q x Q) masked product; across chunks a (H, p, N) state is
+propagated by a ``lax.scan``.  This is the TPU-native formulation: all the
+heavy ops are MXU einsums over chunk-sized tiles, and the sequential scan
+is O(S/chunk) steps — the reason the hybrid archs can run the 500k-token
+cell that quadratic attention cannot.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+
+HEADDIM = 64
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // HEADDIM
+    return d_inner, nheads, cfg.ssm_state
+
+
+def ssm_specs(cfg: ModelConfig, prefix_shape=()) -> dict:
+    ax = ("layers",) * len(prefix_shape)
+    d_inner, nheads, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "in_proj": ParamSpec(
+            prefix_shape + (cfg.d_model, 2 * d_inner + 2 * N + nheads),
+            ax + ("embed", "mlp"), cfg.dtype),
+        "conv_w": ParamSpec(prefix_shape + (cfg.ssm_conv, conv_dim),
+                            ax + (None, "conv"), cfg.dtype),
+        "conv_b": ParamSpec(prefix_shape + (conv_dim,), ax + ("conv",),
+                            cfg.dtype, scale=0.0),
+        "A_log": ParamSpec(prefix_shape + (nheads,), ax + (None,),
+                           jnp.float32, scale=1.0),
+        "D": ParamSpec(prefix_shape + (nheads,), ax + (None,), jnp.float32,
+                       scale=1.0),
+        "dt_bias": ParamSpec(prefix_shape + (nheads,), ax + (None,),
+                             jnp.float32, scale=0.0),
+        "norm": ParamSpec(prefix_shape + (d_inner,), ax + (None,),
+                          cfg.dtype, scale=1.0),
+        "out_proj": ParamSpec(prefix_shape + (d_inner, cfg.d_model),
+                              ax + ("mlp", "embed"), cfg.dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv: x (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(p, x, cfg):
+    d_inner, nheads, N = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + d_inner + 2 * N]
+    dt = zxbcdt[..., -nheads:]
+    return z, xBC, dt
+
+
+def ssd_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D) via chunked SSD."""
+    Bsz, S, _ = x.shape
+    d_inner, H, N = ssm_dims(cfg)
+    pdim = HEADDIM
+    Q = min(cfg.ssm_chunk, S)
+    pad = -S % Q
+    z, xBC, dt = _split_proj(p, x, cfg)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    if pad:
+        xBC = jnp.pad(xBC, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = xBC.shape[1]
+    nc = Sp // Q
+    xs = xBC[..., :d_inner].reshape(Bsz, nc, Q, H, pdim)
+    Bm = xBC[..., d_inner:d_inner + N].reshape(Bsz, nc, Q, N)
+    Cm = xBC[..., d_inner + N:].reshape(Bsz, nc, Q, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"]).reshape(Bsz, nc, Q, H)
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+    a = dt * A                                                # (B,nc,Q,H)
+    cum = jnp.cumsum(a, axis=2)                               # (B,nc,Q,H)
+
+    # intra-chunk: L[q,s] = exp(cum_q - cum_s) for s <= q
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Q,Q,H)
+    qi = jnp.arange(Q)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))
+    scores = cb[..., None] * L * dt[:, :, None, :, :]         # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", scores,
+                         xs.astype(jnp.float32))
+
+    # chunk summaries: S_c = sum_s exp(cum_Q - cum_s) dt_s B_s x_s^T
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,nc,Q,H)
+    sc = jnp.einsum("bcsh,bcsn,bcshp->bchnp",
+                    dt * decay_out, Bm.astype(jnp.float32),
+                    xs.astype(jnp.float32))                   # (B,nc,H,N,p)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+
+    def scan_fn(state, inp):
+        sc_c, dec_c = inp                                     # (B,H,N,p),(B,H)
+        out_state = state
+        state = state * dec_c[..., None, None] + sc_c
+        return state, out_state
+
+    init = jnp.zeros((Bsz, H, N, pdim), jnp.float32)
+    _, states = jax.lax.scan(
+        scan_fn, init,
+        (sc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    states = states.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,N,p)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cm.astype(jnp.float32), jnp.exp(cum), states)
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, pdim)[:, :S]
+    y = y + p["D"][None, None, :, None] * \
+        xBC[..., :d_inner].reshape(Bsz, Sp, H, pdim)[:, :S]
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # grouped RMSNorm
+    dt_ = y.dtype
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(dt_)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, layers: int):
+    d_inner, H, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "state": jnp.zeros((layers, batch, H, N, HEADDIM), jnp.float32),
+        "conv": jnp.zeros((layers, batch, cfg.ssm_conv - 1, conv_dim),
+                          cfg.dtype),
+    }
+
+
+def ssd_decode(p: dict, x: jnp.ndarray, cache: dict, cfg: ModelConfig):
+    """One-token decode. x: (B, 1, D); cache: {'state','conv'} (per layer)."""
+    Bsz = x.shape[0]
+    d_inner, H, N = ssm_dims(cfg)
+    pdim = HEADDIM
+    z, xBC, dt = _split_proj(p, x, cfg)
+    # rolling conv buffer
+    hist = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B, K, conv_dim)
+    w = p["conv_w"]
+    out = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"]
+    xBC1 = jax.nn.silu(out)[:, None, :]
+    new_conv = hist[:, 1:]
+    xs = xBC1[..., :d_inner].reshape(Bsz, H, pdim)
+    Bm = xBC1[..., d_inner:d_inner + N].reshape(Bsz, N)
+    Cm = xBC1[..., d_inner + N:].reshape(Bsz, N)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dtv * A)                                    # (B, H)
+    state = cache["state"] * dec[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dtv, Bm.astype(jnp.float32),
+        xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, {"state": state, "conv": new_conv}

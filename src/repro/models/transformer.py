@@ -1,0 +1,204 @@
+"""Decoder-only transformer LM (dense / MoE / MLA / VLM-backbone).
+
+Layers are *stacked* (leading L axis) and executed with ``lax.scan`` +
+``jax.checkpoint`` so that (a) the lowered HLO is O(1) in depth — a 61-layer
+deepseek-v3 compiles as fast as a 2-layer toy — and (b) activation memory
+is one layer deep (remat recomputes the block in the backward pass).
+MoE models with leading dense layers (deepseek-v3) run two scans.
+
+Entry points (same contract for every family in the registry):
+  * ``param_specs(cfg)``             parameter pytree of ParamSpec
+  * ``loss_fn(params, cfg, batch)``  mean-token CE (training)
+  * ``prefill(params, cfg, batch)``  full-sequence logits + KV cache
+  * ``decode_step(params, cfg, cache, tokens, pos)`` one-token serve step
+  * ``init_cache(cfg, batch, seq)``
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from .common import ModelConfig, ParamSpec
+from .common import layer_scan as _scan
+from .layers import (cross_entropy, embed_specs, embed_tokens, lm_logits,
+                     mlp_specs, rms_norm, swiglu)
+
+
+def _block_specs(cfg: ModelConfig, kind: str, n_layers: int) -> dict:
+    pre = (n_layers,)
+    s = {
+        "ln1": ParamSpec(pre + (cfg.d_model,), ("layers", None), cfg.dtype,
+                         scale=1.0),
+        "ln2": ParamSpec(pre + (cfg.d_model,), ("layers", None), cfg.dtype,
+                         scale=1.0),
+        "attn": attn.attn_specs(cfg, pre),
+    }
+    if kind == "moe":
+        s["moe"] = moe_mod.moe_specs(cfg, pre)
+    else:
+        s["mlp"] = mlp_specs(cfg, prefix_shape=pre)
+    return s
+
+
+def _layer_groups(cfg: ModelConfig):
+    """[(name, kind, n_layers)] — MoE models may lead with dense layers."""
+    if cfg.moe:
+        groups = []
+        if cfg.first_dense_layers:
+            groups.append(("dense_layers", "dense", cfg.first_dense_layers))
+        groups.append(("moe_layers", "moe",
+                       cfg.num_layers - cfg.first_dense_layers))
+        return groups
+    return [("layers", "dense", cfg.num_layers)]
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    s: Dict[str, Any] = dict(embed_specs(cfg))
+    for name, kind, n in _layer_groups(cfg):
+        s[name] = _block_specs(cfg, kind, n)
+    s["final_norm"] = ParamSpec((cfg.d_model,), (None,), cfg.dtype,
+                                scale=1.0)
+    if cfg.vision_tokens:
+        # stub frontend: a single projection from precomputed patch embeds
+        s["vision_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                     ("embed", None), cfg.dtype)
+    if cfg.mtp:
+        s["mtp"] = {**_block_specs(cfg, "dense", 1),
+                    "proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                                      ("embed", None), cfg.dtype)}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Forward
+
+
+def _block(cfg: ModelConfig, kind: str, p: dict, x: jnp.ndarray,
+           positions: jnp.ndarray):
+    from jax.ad_checkpoint import checkpoint_name
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a = attn.mla_forward(p["attn"], h, positions, cfg)
+    else:
+        a = attn.gqa_forward(p["attn"], h, positions, cfg)
+    x = x + checkpoint_name(a, "attn_out")
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        f = moe_mod.moe_forward(p["moe"], h, cfg)
+    else:
+        f = swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+    return x + checkpoint_name(f, "ffn_out")
+
+
+def backbone(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+             positions: jnp.ndarray) -> jnp.ndarray:
+    for name, kind, n in _layer_groups(cfg):
+        from .common import remat_wrap
+        body = remat_wrap(cfg, functools.partial(_block, cfg, kind))
+
+        def scan_fn(carry, layer_params):
+            return body(layer_params, carry, positions), None
+
+        x, _ = _scan(scan_fn, x, params[name])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.vision_tokens:
+        ve = jnp.einsum("bpd,dk->bpk", batch["vision_embeds"],
+                        params["vision_proj"]).astype(x.dtype)
+        x = jnp.concatenate([ve, x[:, cfg.vision_tokens:]], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    x, positions = _embed_inputs(params, cfg, batch)
+    h = backbone(params, cfg, x, positions)
+    logits = lm_logits(params, h, cfg)
+    loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                         batch.get("mask", None))
+    if cfg.mtp:
+        # multi-token prediction: one extra block predicts token t+2 from
+        # [h_t ; emb(token_{t+1})] (deepseek-v3 App. — single MTP module)
+        emb_next = embed_tokens(params, batch["labels"], cfg)
+        h2_in = jnp.einsum(
+            "bsd,dk->bsk",
+            jnp.concatenate([h, emb_next], axis=-1), params["mtp"]["proj"])
+        mtp_block = jax.tree_util.tree_map(
+            lambda a: a[0],
+            {k: v for k, v in params["mtp"].items() if k != "proj"})
+        h2 = _block(cfg, "dense", mtp_block, h2_in, positions)
+        logits2 = lm_logits(params, h2, cfg)
+        loss = loss + 0.3 * cross_entropy(logits2[:, :-2],
+                                          batch["labels"][:, 2:])
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    caches = {}
+    for name, kind, n in _layer_groups(cfg):
+        if cfg.mla:
+            caches[name] = attn.init_mla_cache(cfg, batch, seq, n)
+        else:
+            caches[name] = attn.init_gqa_cache(cfg, batch, seq, n)
+    return caches
+
+
+def _decode_block(cfg: ModelConfig, kind: str, p: dict, x: jnp.ndarray,
+                  cache, pos: jnp.ndarray):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a, cache = attn.mla_decode(p["attn"], h, cache, pos, cfg)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], h, cache, pos, cfg)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        f = moe_mod.moe_forward(p["moe"], h, cfg)
+    else:
+        f = swiglu(h, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"])
+    return x + f, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    """tokens: (B, 1); pos: () int32.  Returns (logits, new_cache)."""
+    x = embed_tokens(params, tokens, cfg)
+    new_caches = {}
+    for name, kind, n in _layer_groups(cfg):
+
+        def scan_fn(x, inp):
+            layer_params, layer_cache = inp
+            x, layer_cache = _decode_block(cfg, kind, layer_params, x,
+                                           layer_cache, pos)
+            return x, layer_cache
+
+        x, new_caches[name] = _scan(
+            scan_fn, x, (params[name], cache[name]))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h, cfg), new_caches
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict):
+    """Full-sequence forward returning logits (cache build is folded into
+    the same attention pass on TPU; here we lower the logits path, and the
+    decode cells measure the cached path)."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    h = backbone(params, cfg, x, positions)
+    # serving semantics: only the last position's logits are needed to
+    # start decoding — skips (B, S, V) logit materialization entirely
+    return lm_logits(params, h[:, -1:], cfg)

@@ -1,0 +1,216 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, recurrent scan) — arXiv:2405.04517, adapted to TPU.
+
+mLSTM is trained with the same chunked decay-linear-attention scheme as
+SSD: per head, state S in R^{hd x hd} with per-token scalar forget f_t
+(sigmoid) and input gate i_t; within-chunk quadratic masked product,
+across-chunk state scan.  sLSTM keeps per-head recurrent mixing (R h_{t-1}
+in the gates) and therefore runs as a true ``lax.scan`` over time — it is
+the sub-quadratic recurrence that lets xlstm run the 500k decode cell.
+
+Simplification vs the paper (noted in DESIGN.md): gates use bounded
+sigmoid parameterizations instead of the exp-gate + running-max
+stabilizer; block structure (proj factors, heads) follows the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+from .layers import rms_norm
+
+PROJ_FACTOR = 2  # mLSTM up-projection factor
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_inner = PROJ_FACTOR * cfg.d_model
+    hd = d_inner // cfg.num_heads
+    return d_inner, cfg.num_heads, hd
+
+
+def mlstm_specs(cfg: ModelConfig, prefix_shape=()) -> dict:
+    ax = ("layers",) * len(prefix_shape)
+    d_inner, H, hd = mlstm_dims(cfg)
+    return {
+        "up": ParamSpec(prefix_shape + (cfg.d_model, 2 * d_inner),
+                        ax + ("embed", "mlp"), cfg.dtype),
+        "wq": ParamSpec(prefix_shape + (d_inner, d_inner),
+                        ax + (None, "heads"), cfg.dtype),
+        "wk": ParamSpec(prefix_shape + (d_inner, d_inner),
+                        ax + (None, "heads"), cfg.dtype),
+        "wv": ParamSpec(prefix_shape + (d_inner, d_inner),
+                        ax + (None, "heads"), cfg.dtype),
+        "wif": ParamSpec(prefix_shape + (d_inner, 2 * H),
+                         ax + (None, None), cfg.dtype),
+        "norm": ParamSpec(prefix_shape + (d_inner,), ax + (None,),
+                          cfg.dtype, scale=1.0),
+        "down": ParamSpec(prefix_shape + (d_inner, cfg.d_model),
+                          ax + ("mlp", "embed"), cfg.dtype),
+    }
+
+
+def mlstm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                  chunk: int = 128) -> jnp.ndarray:
+    B, S, _ = x.shape
+    d_inner, H, hd = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dk->bsk", x, p["up"])
+    u, z = up[..., :d_inner], up[..., d_inner:]
+    q = jnp.einsum("bsk,kh->bsh", u, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsk,kh->bsh", u, p["wk"]).reshape(B, S, H, hd) / hd ** 0.5
+    v = jnp.einsum("bsk,kh->bsh", u, p["wv"]).reshape(B, S, H, hd)
+    gif = jnp.einsum("bsk,kh->bsh", u, p["wif"]).astype(jnp.float32)
+    i_g = jax.nn.sigmoid(gif[..., :H])                     # (B,S,H)
+    f_g = jax.nn.sigmoid(gif[..., H:] + 2.0)
+
+    Q = min(chunk, S)
+    pad = -S % Q
+    pd = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    qp, kp, vp = pd(q), pd(k), pd(v)
+    ip, fp = pd(i_g), pd(f_g)
+    Sp = qp.shape[1]
+    nc = Sp // Q
+    rs = lambda a: a.reshape((B, nc, Q) + a.shape[2:])
+    qc, kc, vc, ic, fc = rs(qp), rs(kp), rs(vp), rs(ip), rs(fp)
+
+    logf = jnp.log(jnp.maximum(fc, 1e-6))
+    cum = jnp.cumsum(logf, axis=2)                         # (B,nc,Q,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    qi = jnp.arange(Q)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0)               # (B,nc,Q,Q,H)
+    qk = jnp.einsum("bcqhd,bcshd->bcqsh", qc.astype(jnp.float32),
+                    kc.astype(jnp.float32))
+    scores = qk * L * ic[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqsh,bcshd->bcqhd", scores,
+                         vc.astype(jnp.float32))
+
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,Q,H)
+    sc = jnp.einsum("bcsh,bcshd,bcshe->bchde", ic * dec_out,
+                    kc.astype(jnp.float32), vc.astype(jnp.float32))
+    cdec = jnp.exp(cum[:, :, -1, :])
+
+    def scan_fn(state, inp):
+        sc_c, dc = inp
+        out = state
+        return state * dc[..., None, None] + sc_c, out
+
+    init = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, states = jax.lax.scan(scan_fn, init,
+                             (sc.transpose(1, 0, 2, 3, 4),
+                              cdec.transpose(1, 0, 2)))
+    states = states.transpose(1, 0, 2, 3, 4)               # (B,nc,H,hd,hd)
+    y_inter = jnp.einsum("bcqhd,bcqh,bchde->bcqhe",
+                         qc.astype(jnp.float32), jnp.exp(cum), states)
+    y = (y_intra + y_inter).reshape(B, Sp, d_inner)[:, :S]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["down"])
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, layers: int):
+    _, H, hd = mlstm_dims(cfg)
+    return jnp.zeros((layers, batch, H, hd, hd), jnp.float32)
+
+
+def mlstm_decode(p: dict, x: jnp.ndarray, state: jnp.ndarray,
+                 cfg: ModelConfig):
+    """x: (B,1,D); state: (B,H,hd,hd)."""
+    B = x.shape[0]
+    d_inner, H, hd = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dk->bsk", x, p["up"])
+    u, z = up[..., :d_inner], up[..., d_inner:]
+    q = jnp.einsum("bsk,kh->bsh", u, p["wq"]).reshape(B, H, hd)
+    k = jnp.einsum("bsk,kh->bsh", u, p["wk"]).reshape(B, H, hd) / hd ** 0.5
+    v = jnp.einsum("bsk,kh->bsh", u, p["wv"]).reshape(B, H, hd)
+    gif = jnp.einsum("bsk,kh->bsh", u, p["wif"])[:, 0].astype(jnp.float32)
+    i_g = jax.nn.sigmoid(gif[..., :H])
+    f_g = jax.nn.sigmoid(gif[..., H:] + 2.0)
+    state = state * f_g[..., None, None] + jnp.einsum(
+        "bh,bhd,bhe->bhde", i_g, k.astype(jnp.float32),
+        v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), state)
+    y = y.reshape(B, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["down"]), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def slstm_specs(cfg: ModelConfig, prefix_shape=()) -> dict:
+    ax = ("layers",) * len(prefix_shape)
+    D, H = cfg.d_model, cfg.num_heads
+    hd = D // H
+    return {
+        "wx": ParamSpec(prefix_shape + (D, 4 * D), ax + ("embed", "mlp"),
+                        cfg.dtype),
+        "rh": ParamSpec(prefix_shape + (H, hd, 4 * hd),
+                        ax + (None, None, None), cfg.dtype),
+        "norm": ParamSpec(prefix_shape + (D,), ax + (None,), cfg.dtype,
+                          scale=1.0),
+        "down": ParamSpec(prefix_shape + (D, cfg.d_model),
+                          ax + ("mlp", "embed"), cfg.dtype),
+    }
+
+
+def slstm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Recurrent sLSTM over the sequence (lax.scan over time)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    gx = jnp.einsum("bsd,dk->bsk", x, p["wx"])             # (B,S,4D)
+    gx = gx.reshape(B, S, H, 4 * hd).transpose(1, 0, 2, 3)  # (S,B,H,4hd)
+
+    def step(carry, g_t):
+        h, c, n = carry                                    # (B,H,hd) each
+        g = g_t + jnp.einsum("bhd,hdk->bhk", h, p["rh"])
+        gi, gf, gz, go = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+        i_t = jnp.exp(jnp.minimum(gi, 8.0))
+        f_t = jax.nn.sigmoid(gf)
+        z_t = jnp.tanh(gz)
+        o_t = jax.nn.sigmoid(go)
+        c = f_t * c + i_t * z_t
+        n = f_t * n + i_t
+        h = (o_t * c / jnp.maximum(jnp.abs(n), 1.0)).astype(x.dtype)
+        return (h, c, n), h
+
+    h0 = jnp.zeros((B, H, hd), x.dtype)
+    c0 = jnp.zeros((B, H, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    _, hs = jax.lax.scan(step, (h0, c0, n0), gx)
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dk->bsk", y, p["down"])
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, layers: int):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    return {
+        "h": jnp.zeros((layers, batch, H, hd), cfg.dtype),
+        "c": jnp.zeros((layers, batch, H, hd), jnp.float32),
+        "n": jnp.zeros((layers, batch, H, hd), jnp.float32),
+    }
+
+
+def slstm_decode(p: dict, x: jnp.ndarray, cache: dict, cfg: ModelConfig):
+    B = x.shape[0]
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    g_t = jnp.einsum("bsd,dk->bsk", x, p["wx"])[:, 0].reshape(B, H, 4 * hd)
+    h, c, n = cache["h"], cache["c"], cache["n"]
+    g = g_t + jnp.einsum("bhd,hdk->bhk", h, p["rh"])
+    gi, gf, gz, go = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    i_t = jnp.exp(jnp.minimum(gi, 8.0))
+    f_t = jax.nn.sigmoid(gf)
+    z_t = jnp.tanh(gz)
+    o_t = jax.nn.sigmoid(go)
+    c = f_t * c + i_t * z_t
+    n = f_t * n + i_t
+    h = (o_t * c / jnp.maximum(jnp.abs(n), 1.0)).astype(x.dtype)
+    y = h.reshape(B, 1, -1)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", y, p["down"])
+    return out, {"h": h, "c": c, "n": n}

@@ -1,0 +1,137 @@
+"""xLSTM language model: interleaved mLSTM / sLSTM block stack.
+
+Block pattern (xLSTM[a:b] notation): every ``slstm_every``-th block is an
+sLSTM, the rest are mLSTM — scanned in groups of (slstm_every-1) mLSTM
+blocks + 1 sLSTM block.  Fully recurrent => runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import xlstm
+from .common import ModelConfig, ParamSpec
+from .common import layer_scan as _scan
+from .layers import cross_entropy, embed_specs, embed_tokens, lm_logits, \
+    rms_norm
+
+
+def _groups(cfg: ModelConfig):
+    k = cfg.slstm_every
+    n_groups = cfg.num_layers // k
+    tail = cfg.num_layers - n_groups * k
+    return n_groups, k, tail
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    n_groups, k, tail = _groups(cfg)
+    s: Dict[str, Any] = dict(embed_specs(cfg))
+    s["m_norm"] = ParamSpec((n_groups, k - 1, cfg.d_model),
+                            ("layers", None, None), cfg.dtype, scale=1.0)
+    s["mlstm"] = xlstm.mlstm_specs(cfg, prefix_shape=(n_groups, k - 1))
+    s["s_norm"] = ParamSpec((n_groups, cfg.d_model), ("layers", None),
+                            cfg.dtype, scale=1.0)
+    s["slstm"] = xlstm.slstm_specs(cfg, prefix_shape=(n_groups,))
+    if tail:
+        s["tail_norm"] = ParamSpec((tail, cfg.d_model), ("layers", None),
+                                   cfg.dtype, scale=1.0)
+        s["mlstm_tail"] = xlstm.mlstm_specs(cfg, prefix_shape=(tail,))
+    s["final_norm"] = ParamSpec((cfg.d_model,), (None,), cfg.dtype,
+                                scale=1.0)
+    return s
+
+
+def _forward(params, cfg, x):
+    n_groups, k, tail = _groups(cfg)
+
+    def group(x, inp):
+        mp, mn, sp, sn = inp
+
+        def inner(x, inp2):
+            lp, nrm = inp2
+            return x + xlstm.mlstm_forward(
+                lp, rms_norm(x, nrm, cfg.norm_eps), cfg), None
+
+        x, _ = _scan(inner, x, (mp, mn))
+        x = x + xlstm.slstm_forward(
+            sp, rms_norm(x, sn, cfg.norm_eps), cfg)
+        return x, None
+
+    from .common import remat_wrap
+    group = remat_wrap(cfg, group)
+    x, _ = _scan(group, x, (params["mlstm"], params["m_norm"],
+                                   params["slstm"], params["s_norm"]))
+    if tail:
+        def inner(x, inp2):
+            lp, nrm = inp2
+            return x + xlstm.mlstm_forward(
+                lp, rms_norm(x, nrm, cfg.norm_eps), cfg), None
+
+        x, _ = _scan(inner, x,
+                            (params["mlstm_tail"], params["tail_norm"]))
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    x = embed_tokens(params, batch["tokens"], cfg)
+    h = _forward(params, cfg, x)
+    logits = lm_logits(params, h, cfg)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict):
+    x = embed_tokens(params, batch["tokens"], cfg)
+    h = _forward(params, cfg, x)
+    return lm_logits(params, h[:, -1:], cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int):
+    n_groups, k, tail = _groups(cfg)
+    mc = xlstm.init_mlstm_cache(cfg, batch, n_groups * (k - 1))
+    return {
+        "mlstm": mc.reshape((n_groups, k - 1) + mc.shape[1:]),
+        "slstm": xlstm.init_slstm_cache(cfg, batch, n_groups),
+        "mlstm_tail": (xlstm.init_mlstm_cache(cfg, batch, tail)
+                       if tail else None),
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    del pos  # recurrent: no positional cache indexing
+    x = embed_tokens(params, tokens, cfg)
+    n_groups, k, tail = _groups(cfg)
+
+    def group(x, inp):
+        mp, mn, sp, sn, mcache, scache = inp
+
+        def inner(x, inp2):
+            lp, nrm, st = inp2
+            out, st = xlstm.mlstm_decode(
+                lp, rms_norm(x, nrm, cfg.norm_eps), st, cfg)
+            return x + out, st
+
+        x, mcache = _scan(inner, x, (mp, mn, mcache))
+        out, scache = xlstm.slstm_decode(
+            sp, rms_norm(x, sn, cfg.norm_eps), scache, cfg)
+        return x + out, (mcache, scache)
+
+    x, (mc, sc) = _scan(
+        group, x, (params["mlstm"], params["m_norm"], params["slstm"],
+                   params["s_norm"], cache["mlstm"], cache["slstm"]))
+    new_cache = dict(cache, mlstm=mc, slstm=sc)
+    if tail:
+        def inner(x, inp2):
+            lp, nrm, st = inp2
+            out, st = xlstm.mlstm_decode(
+                lp, rms_norm(x, nrm, cfg.norm_eps), st, cfg)
+            return x + out, st
+
+        x, mt = _scan(inner, x, (params["mlstm_tail"],
+                                        params["tail_norm"],
+                                        cache["mlstm_tail"]))
+        new_cache["mlstm_tail"] = mt
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, h[:, -1:], cfg), new_cache

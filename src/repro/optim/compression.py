@@ -1,0 +1,43 @@
+"""Error-feedback int8 gradient compression (opt-in distributed trick).
+
+Quantize each gradient leaf to int8 with a per-leaf scale before the
+(all-)reduce, keep the quantization residual locally, and add it back to
+the next step's gradient (error feedback preserves convergence).  At pod
+scale this cuts DP all-reduce bytes 4x; the roofline harness can lower
+train_step with this enabled to measure the collective-term change.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads, residual: Optional[Any] = None
+                   ) -> Tuple[Any, Any, Any]:
+    """Returns (int8 payload, scales, new residual)."""
+    if residual is not None:
+        grads = jax.tree_util.tree_map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    else:
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+
+    def q(g):
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        qi = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        res = g - qi.astype(jnp.float32) * scale
+        return qi, scale, res
+
+    out = jax.tree_util.tree_map(q, grads)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple))
+    unflat = lambda i: jax.tree_util.tree_unflatten(
+        treedef, [x[i] for x in leaves])
+    return unflat(0), unflat(1), unflat(2)
+
+
+def decompress_grads(payload, scales):
+    return jax.tree_util.tree_map(
+        lambda qi, s: qi.astype(jnp.float32) * s, payload, scales)

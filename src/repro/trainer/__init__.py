@@ -1,0 +1,1 @@
+from . import ssvm_head  # noqa: F401

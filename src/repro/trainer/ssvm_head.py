@@ -1,0 +1,82 @@
+"""SSVM-head training: the paper's technique as a first-class trainer mode.
+
+A structured (chain-CRF) output head is trained with MP-BCFW on top of
+token features produced by any backbone from the model zoo.  The backbone
+forward is the expensive feature extractor (frozen here — the SSVM
+objective is convex in the head weights, which is what the paper's theory
+covers); the max-oracle is loss-augmented Viterbi over the tag space, so
+the "costly oracle" regime of the paper reappears whenever the tag space
+or sequence length is large.
+
+``build_problem`` also covers the paper's three scenarios directly from
+synthetic data (multiclass / chain / graph) for the benchmark harness.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.oracles import chain, graph, multiclass
+from repro.core.types import SSVMProblem
+from repro.data import synthetic
+
+
+def build_problem(sc) -> SSVMProblem:
+    """Instantiate one of the paper's scenarios from a SSVMScenario."""
+    if sc.kind == "multiclass":
+        x, y = synthetic.usps_like(n=sc.n, f=sc.f,
+                                   num_classes=sc.num_classes)
+        return multiclass.make_problem(jnp.asarray(x), jnp.asarray(y),
+                                       sc.num_classes)
+    if sc.kind == "chain":
+        X, Y, M = synthetic.ocr_like(n=sc.n, f=sc.f,
+                                     num_labels=sc.num_classes,
+                                     mean_len=sc.mean_len,
+                                     max_len=sc.max_len)
+        return chain.make_problem(jnp.asarray(X), jnp.asarray(Y),
+                                  jnp.asarray(M), sc.num_classes)
+    if sc.kind == "graph":
+        Xg, Yg, Mg, Eg, EMg, Cg = synthetic.horseseg_like(
+            n=sc.n, grid=sc.grid, f=sc.f)
+        return graph.make_problem(
+            jnp.asarray(Xg), jnp.asarray(Yg), jnp.asarray(Mg),
+            jnp.asarray(Eg), jnp.asarray(EMg), jnp.asarray(Cg),
+            num_sweeps=sc.oracle_sweeps)
+    raise ValueError(sc.kind)
+
+
+def backbone_chain_problem(cfg, params, tokens: jnp.ndarray,
+                           tags: jnp.ndarray, mask: jnp.ndarray,
+                           num_tags: int,
+                           feature_dim: Optional[int] = None) -> SSVMProblem:
+    """Chain SSVM over *backbone token features*.
+
+    tokens: (n, L) int32; tags: (n, L) int32 gold tag sequences.  Features
+    are the final hidden states of the backbone (computed once — the SSVM
+    head is convex given frozen features; re-extraction per pass would put
+    the 'costly oracle' in the feature path instead, which the tau-nice
+    pass parallelizes the same way).
+    """
+    from repro.models import registry
+    from repro.models.layers import rms_norm
+
+    @jax.jit
+    def features(tokens):
+        batch = {"tokens": tokens, "labels": tokens}
+        # reuse the model's prefill path up to final hidden states: take
+        # logits' pre-projection via a forward hook-free trick — recompute
+        # hidden states with lm_head folded out by projecting onto the
+        # first feature_dim dims of the final norm output.
+        from repro.models import transformer
+        x, positions = transformer._embed_inputs(params, cfg, batch)
+        h = transformer.backbone(params, cfg, x, positions)
+        return h
+
+    feats = features(tokens)
+    if feature_dim is not None and feature_dim < feats.shape[-1]:
+        feats = feats[..., :feature_dim]
+    return chain.make_problem(feats.astype(jnp.float32), tags, mask,
+                              num_tags)

@@ -1,0 +1,43 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 device;
+only launch/dryrun.py and launch/roofline.py force 512 host devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def multiclass_problem():
+    from repro.core.oracles import multiclass
+    from repro.data import synthetic
+
+    x, y = synthetic.usps_like(n=48, f=12, num_classes=5, seed=0)
+    return multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), 5)
+
+
+@pytest.fixture(scope="session")
+def chain_problem():
+    from repro.core.oracles import chain
+    from repro.data import synthetic
+
+    X, Y, M = synthetic.ocr_like(n=24, f=8, num_labels=5, mean_len=6,
+                                 max_len=8, seed=1)
+    return chain.make_problem(jnp.asarray(X), jnp.asarray(Y),
+                              jnp.asarray(M), 5)
+
+
+@pytest.fixture(scope="session")
+def graph_problem():
+    from repro.core.oracles import graph
+    from repro.data import synthetic
+
+    Xg, Yg, Mg, Eg, EMg, Cg = synthetic.horseseg_like(
+        n=16, grid=(4, 4), f=8, seed=2)
+    return graph.make_problem(
+        jnp.asarray(Xg), jnp.asarray(Yg), jnp.asarray(Mg), jnp.asarray(Eg),
+        jnp.asarray(EMg), jnp.asarray(Cg), num_sweeps=8)

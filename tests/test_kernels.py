@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import gram as gr
+from repro.kernels import plane_scores as ps
+from repro.kernels import ref
+from repro.kernels import viterbi as vit
+
+
+@pytest.mark.parametrize("n,d", [(1, 16), (7, 100), (37, 300), (64, 513),
+                                 (130, 128)])
+def test_plane_scores_shapes(n, d):
+    r = np.random.RandomState(n * 1000 + d)
+    P = jnp.asarray(r.randn(n, d).astype(np.float32))
+    w = jnp.asarray(r.randn(d).astype(np.float32))
+    b = jnp.asarray(r.randn(n).astype(np.float32))
+    out = ps.plane_scores(P, w, b, interpret=True)
+    assert_allclose(np.asarray(out), np.asarray(ref.plane_scores_ref(P, w, b)),
+                    rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("block_n,block_d", [(8, 128), (16, 256), (128, 512)])
+def test_plane_scores_blockings(block_n, block_d):
+    r = np.random.RandomState(0)
+    P = jnp.asarray(r.randn(50, 700).astype(np.float32))
+    w = jnp.asarray(r.randn(700).astype(np.float32))
+    b = jnp.asarray(r.randn(50).astype(np.float32))
+    out = ps.plane_scores(P, w, b, block_n=block_n, block_d=block_d,
+                          interpret=True)
+    assert_allclose(np.asarray(out), np.asarray(ref.plane_scores_ref(P, w, b)),
+                    rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("n,d", [(4, 32), (33, 200), (64, 512)])
+def test_gram_shapes(n, d):
+    r = np.random.RandomState(n + d)
+    P = jnp.asarray(r.randn(n, d).astype(np.float32))
+    out = gr.gram(P, interpret=True)
+    assert_allclose(np.asarray(out), np.asarray(ref.gram_ref(P)),
+                    rtol=3e-5, atol=3e-4)
+    assert_allclose(np.asarray(out), np.asarray(out).T, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,C", [(1, 5), (8, 26), (20, 26), (3, 130)])
+def test_viterbi_step_shapes(B, C):
+    r = np.random.RandomState(B * 100 + C)
+    m = jnp.asarray(r.randn(B, C).astype(np.float32))
+    t = jnp.asarray(r.randn(C, C).astype(np.float32))
+    mo, bo = vit.viterbi_step(m, t, interpret=True)
+    mr, br = ref.viterbi_step_ref(m, t)
+    assert_allclose(np.asarray(mo), np.asarray(mr), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(bo) == np.asarray(br)).all()
+
+
+@pytest.mark.parametrize("bh,s,d", [(1, 64, 32), (2, 200, 64), (4, 128, 128)])
+def test_flash_attention_shapes(bh, s, d):
+    r = np.random.RandomState(bh + s + d)
+    q = jnp.asarray(r.randn(bh, s, d).astype(np.float32))
+    k = jnp.asarray(r.randn(bh, s, d).astype(np.float32))
+    v = jnp.asarray(r.randn(bh, s, d).astype(np.float32))
+    out = fa.flash_attention(q, k, v, interpret=True, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_bf16():
+    r = np.random.RandomState(0)
+    q = jnp.asarray(r.randn(2, 128, 64)).astype(jnp.bfloat16)
+    k = jnp.asarray(r.randn(2, 128, 64)).astype(jnp.bfloat16)
+    v = jnp.asarray(r.randn(2, 128, 64)).astype(jnp.bfloat16)
+    out = fa.flash_attention(q, k, v, interpret=True, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32),
+                    rtol=5e-2, atol=5e-2)
+
+
+def test_kernel_viterbi_full_decode_agrees_with_chain_oracle():
+    """End-to-end: stacking kernel steps reproduces viterbi_decode."""
+    import jax
+    from repro.core.oracles.chain import viterbi_decode
+    r = np.random.RandomState(0)
+    L, C = 9, 7
+    unary = r.randn(L, C).astype(np.float32)
+    trans = r.randn(C, C).astype(np.float32)
+    mask = np.ones(L, bool)
+    # kernel-driven forward pass (batch of 1)
+    m = jnp.asarray(unary[0][None])
+    backs = []
+    for l in range(1, L):
+        mo, bo = vit.viterbi_step(m, jnp.asarray(trans), interpret=True)
+        m = mo + unary[l][None]
+        backs.append(np.asarray(bo)[0])
+    y_last = int(np.argmax(np.asarray(m)[0]))
+    ys = [y_last]
+    for back in reversed(backs):
+        ys.append(int(back[ys[-1]]))
+    y_kernel = np.asarray(ys[::-1])
+    y_ref = np.asarray(viterbi_decode(jnp.asarray(unary), jnp.asarray(trans),
+                                      jnp.asarray(mask)))
+    # scores must match (paths may tie)
+    def score(y):
+        return sum(unary[l, y[l]] for l in range(L)) + \
+            sum(trans[y[l], y[l + 1]] for l in range(L - 1))
+    np.testing.assert_allclose(score(y_kernel), score(y_ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("E,C,D,F", [(2, 8, 64, 32), (3, 130, 128, 300)])
+def test_moe_ffn_shapes(E, C, D, F):
+    from repro.kernels import moe_ffn as mf
+    r = np.random.RandomState(E * C + F)
+    xs = jnp.asarray(r.randn(E, C, D).astype(np.float32))
+    wg = jnp.asarray(r.randn(E, D, F).astype(np.float32) * 0.1)
+    wu = jnp.asarray(r.randn(E, D, F).astype(np.float32) * 0.1)
+    wd = jnp.asarray(r.randn(E, F, D).astype(np.float32) * 0.1)
+    out = mf.moe_ffn(xs, wg, wu, wd, block_c=64, block_f=128,
+                     interpret=True)
+    expect = ref.moe_ffn_ref(xs, wg, wu, wd)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-4,
+                    atol=2e-4)

@@ -1,0 +1,153 @@
+"""Oracle correctness: each max-oracle vs brute force on small spaces."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.oracles import chain, graph, multiclass
+from repro.core.oracles.chain import viterbi_decode
+from repro.core.oracles.graph import icm_decode
+
+
+# ---------------------------------------------------------------------------
+# Multiclass
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_multiclass_oracle_is_argmax(seed):
+    r = np.random.RandomState(seed)
+    C, f, n = 4, 6, 10
+    prob = multiclass.make_problem(
+        jnp.asarray(r.randn(n, f).astype(np.float32)),
+        jnp.asarray(r.randint(0, C, n)), C)
+    w = jnp.asarray(r.randn(prob.d).astype(np.float32))
+    i = r.randint(n)
+    ex = jax.tree_util.tree_map(lambda a: a[i], prob.data)
+    plane = prob.oracle(w, ex)
+    score = float(plane[:-1] @ w + plane[-1])
+    # brute force over labels
+    x, y = np.asarray(ex["x"]), int(ex["y"])
+    wc = np.asarray(w).reshape(C, f)
+    best = -np.inf
+    for c in range(C):
+        s = (float(wc[c] @ x - wc[y] @ x) + (c != y)) / n
+        best = max(best, s)
+    np.testing.assert_allclose(score, best, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Chain / Viterbi
+
+
+def _brute_viterbi(unary, trans, mask):
+    L, C = unary.shape
+    valid = int(mask.sum())
+    best, best_y = -np.inf, None
+    for ys in itertools.product(range(C), repeat=valid):
+        s = sum(unary[l, ys[l]] for l in range(valid))
+        s += sum(trans[ys[l], ys[l + 1]] for l in range(valid - 1))
+        if s > best:
+            best, best_y = s, ys
+    return best, best_y
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 5), st.integers(2, 4))
+def test_viterbi_exact_vs_brute_force(seed, L, C):
+    r = np.random.RandomState(seed)
+    unary = r.randn(L, C).astype(np.float32)
+    trans = r.randn(C, C).astype(np.float32)
+    mask = np.ones(L, bool)
+    y = np.asarray(viterbi_decode(jnp.asarray(unary), jnp.asarray(trans),
+                                  jnp.asarray(mask)))
+    score = sum(unary[l, y[l]] for l in range(L)) + \
+        sum(trans[y[l], y[l + 1]] for l in range(L - 1))
+    best, _ = _brute_viterbi(unary, trans, mask)
+    np.testing.assert_allclose(score, best, rtol=1e-5, atol=1e-5)
+
+
+def test_viterbi_respects_mask():
+    r = np.random.RandomState(0)
+    L, C = 6, 3
+    unary = r.randn(L, C).astype(np.float32)
+    trans = r.randn(C, C).astype(np.float32)
+    mask = np.array([True] * 4 + [False] * 2)
+    y = np.asarray(viterbi_decode(jnp.asarray(unary), jnp.asarray(trans),
+                                  jnp.asarray(mask)))
+    masked_unary = np.where(mask[:, None], unary, 0.0)
+    score = sum(masked_unary[l, y[l]] for l in range(4)) + \
+        sum(trans[y[l], y[l + 1]] for l in range(3))
+    best, _ = _brute_viterbi(unary[:4], trans, np.ones(4, bool))
+    np.testing.assert_allclose(score, best, rtol=1e-5, atol=1e-5)
+
+
+def test_chain_plane_score_consistency(chain_problem):
+    """<phi,[w 1]> returned by the oracle == explicit hinge at the decoded
+    labels; and >= score at the ground truth (0)."""
+    prob = chain_problem
+    r = np.random.RandomState(0)
+    w = jnp.asarray(r.randn(prob.d).astype(np.float32) * 0.1)
+    planes = jax.vmap(lambda ex: prob.oracle(w, ex))(prob.data)
+    scores = np.asarray(planes[:, :-1] @ w + planes[:, -1])
+    assert (scores >= -1e-6).all()  # zero plane is always available
+
+
+# ---------------------------------------------------------------------------
+# Graph / ICM
+
+
+def _brute_graph(unary, edges, mask):
+    L = unary.shape[0]
+    valid = int(mask.sum())
+    best, ybest = -np.inf, None
+    for bits in itertools.product([0, 1], repeat=valid):
+        s = sum(unary[l, bits[l]] for l in range(valid))
+        s -= sum(bits[a] != bits[b] for a, b in edges
+                 if a < valid and b < valid)
+        if s > best:
+            best, ybest = s, bits
+    return best, ybest
+
+
+def test_icm_exact_on_chain_graph():
+    """On a 1D chain with weak coupling, red-black ICM finds the optimum."""
+    r = np.random.RandomState(0)
+    L = 8
+    unary = (3.0 * r.randn(L, 2)).astype(np.float32)  # strong unaries
+    edges = np.asarray([(i, i + 1) for i in range(L - 1)], np.int32)
+    color = np.asarray([i % 2 for i in range(L)], np.int32)
+    mask = np.ones(L, bool)
+    y = np.asarray(icm_decode(jnp.asarray(unary), jnp.asarray(edges),
+                              jnp.ones(L - 1, bool), jnp.asarray(color),
+                              jnp.asarray(mask), num_sweeps=20))
+    s = sum(unary[l, y[l]] for l in range(L)) - \
+        sum(int(y[a] != y[b]) for a, b in edges)
+    best, _ = _brute_graph(unary, edges, mask)
+    np.testing.assert_allclose(s, best, rtol=1e-5, atol=1e-5)
+
+
+def test_graph_oracle_planes_never_negative_score(graph_problem):
+    """Approximate oracle clamps to the zero plane: H~_i >= 0 directions."""
+    prob = graph_problem
+    r = np.random.RandomState(3)
+    w = jnp.asarray(r.randn(prob.d).astype(np.float32))
+    planes = jax.vmap(lambda ex: prob.oracle(w, ex))(prob.data)
+    scores = np.asarray(planes[:, :-1] @ w + planes[:, -1])
+    assert (scores >= -1e-6).all()
+
+
+def test_graph_ground_truth_plane_is_zero(graph_problem):
+    """phi^{i y_i} == 0 by construction (loss 0, features cancel, cut
+    constant folded)."""
+    prob = graph_problem
+    # at w pushing towards the ground truth, the oracle should return ~0
+    # eventually; directly verify the plane built from y_true is zero.
+    from repro.core.oracles.graph import _plane
+    ex = jax.tree_util.tree_map(lambda a: a[0], prob.data)
+    p = _plane(ex["x"], ex["y"], ex["y"], ex["mask"], ex["edges"],
+               ex["edge_mask"], prob.n)
+    np.testing.assert_allclose(np.asarray(p), 0.0, atol=1e-7)
