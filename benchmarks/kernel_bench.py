@@ -1,20 +1,24 @@
 """Microbenchmarks of the MP-BCFW hot paths (measured wall time on this
-host — the kernels' compiled TPU path is exercised via interpret-mode
-correctness tests; here we time the jnp reference implementations that the
-CPU fallback actually runs, plus the full approximate pass).
+host — on TPU the compiled Pallas kernels run; elsewhere the Pallas path is
+exercised in interpret mode (functional, slower) next to the pure-jnp
+reference that the CPU dispatcher actually selects, so both sides of the
+``kernels.ops`` backend switch are timed on the same shapes).
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mpbcfw
+from repro.core import mpbcfw, workset as ws_ops
 from repro.core.oracles import multiclass
+from repro.core.ssvm import dual_value
 from repro.data import synthetic
-from repro.kernels import ref
+from repro.kernels import ops, ref
+from repro.kernels import plane_scores as ps
 
 
 def _time(fn, *args, iters=20):
@@ -27,33 +31,52 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def main():
+def main(smoke: bool = False):
     rows = []
     r = np.random.RandomState(0)
-    planes = jnp.asarray(r.randn(256, 2560).astype(np.float32))
-    w = jnp.asarray(r.randn(2560).astype(np.float32))
-    b = jnp.asarray(r.randn(256).astype(np.float32))
+    n_planes, d = (64, 512) if smoke else (256, 2560)
+    planes = jnp.asarray(r.randn(n_planes, d).astype(np.float32))
+    w = jnp.asarray(r.randn(d).astype(np.float32))
+    b = jnp.asarray(r.randn(n_planes).astype(np.float32))
     f = jax.jit(ref.plane_scores_ref)
-    rows.append(("kernel_plane_scores_256x2560",
+    rows.append((f"kernel_plane_scores_{n_planes}x{d}",
                  _time(f, planes, w, b), planes.size * 4))
 
     g = jax.jit(ref.gram_ref)
-    rows.append(("kernel_gram_256x2560", _time(g, planes),
-                 256 * 256 * 4))
+    rows.append((f"kernel_gram_{n_planes}x{d}", _time(g, planes),
+                 n_planes * n_planes * 4))
 
     m = jnp.asarray(r.randn(64, 128).astype(np.float32))
     t = jnp.asarray(r.randn(128, 128).astype(np.float32))
     v = jax.jit(ref.viterbi_step_ref)
     rows.append(("kernel_viterbi_step_64x128", _time(v, m, t), m.size))
 
-    # full approximate pass (the paper's Theta(|W| d) step, jitted scan)
-    x, y = synthetic.usps_like(n=256, f=64, num_classes=10, seed=0)
-    prob = multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), 10)
+    # Pallas plane-scores path vs the jnp reference on the flattened
+    # (n*cap, d) workset layout — the exact shapes the approximate oracle
+    # scores.  On TPU this is the compiled kernel; on other backends it
+    # runs in interpret mode (functional check, not a perf claim).
+    n_ex, cap, feat = (32, 8, 32) if smoke else (128, 16, 64)
+    num_classes = 10
+    x, y = synthetic.usps_like(n=n_ex, f=feat, num_classes=num_classes,
+                               seed=0)
+    prob = multiclass.make_problem(jnp.asarray(x), jnp.asarray(y),
+                                   num_classes)
     lam = 1.0 / prob.n
-    mp = mpbcfw.init_mp_state(prob, cap=32)
+    mp = mpbcfw.init_mp_state(prob, cap=cap)
     perm = jnp.arange(prob.n)
     mp = mpbcfw.jit_exact_pass(prob, mp, perm, lam=lam)
+    flat_p, flat_b, _ = ws_ops.flat_view(mp.ws)
+    wq = jnp.asarray(r.randn(prob.d).astype(np.float32))
+    backend = jax.default_backend()
+    pallas_fn = jax.jit(functools.partial(
+        ps.plane_scores, interpret=not ops.on_tpu()))
+    t_pallas = _time(pallas_fn, flat_p, wq, flat_b, iters=3)
+    t_ref = _time(jax.jit(ref.plane_scores_ref), flat_p, wq, flat_b)
+    shape_tag = f"{flat_p.shape[0]}x{flat_p.shape[1]}"
+    rows.append((f"plane_scores_pallas_us_{shape_tag}", t_pallas, backend))
+    rows.append((f"plane_scores_ref_us_{shape_tag}", t_ref, backend))
 
+    # full approximate pass (the paper's Theta(|W| d) step, jitted scan)
     def ap(mp):
         return mpbcfw.jit_approx_pass(prob, mp, perm, lam=lam)
 
@@ -65,6 +88,35 @@ def main():
     jax.block_until_ready(mp2.inner.phi)
     us = (time.perf_counter() - t0) / 5 / prob.n * 1e6
     rows.append(("approx_oracle_step_us_per_block", us, prob.n))
+
+    # batched multi-pass program vs the same passes issued one jit call
+    # (and one host sync) at a time — the tentpole's host-barrier removal.
+    n_passes = 2 if smoke else 8
+    perms = jnp.asarray(np.stack([np.random.RandomState(s).permutation(
+        prob.n) for s in range(n_passes)]))
+    clock = mpbcfw.make_slope_clock(
+        0.0, float(dual_value(mp.inner.phi, lam)), float(prob.n), 1e-3)
+
+    def fused(mp):
+        out, _, stats = mpbcfw.jit_multi_approx_pass(
+            prob, mp, perms, clock, lam=lam, run_all=True)
+        return out.inner.phi, stats
+
+    jax.block_until_ready(fused(mp)[0])
+    t0 = time.perf_counter()
+    jax.block_until_ready(fused(mp)[0])
+    t_fused = (time.perf_counter() - t0) * 1e6
+
+    jax.block_until_ready(ap(mp).inner.phi)
+    t0 = time.perf_counter()
+    mp3 = mp
+    for k in range(n_passes):
+        mp3 = mpbcfw.jit_approx_pass(prob, mp3, perms[k], lam=lam)
+        mp3.inner.phi.block_until_ready()   # the old per-pass host barrier
+    t_seq = (time.perf_counter() - t0) * 1e6
+    rows.append((f"multi_approx_pass_fused_us_{n_passes}p", t_fused, 1))
+    rows.append((f"multi_approx_pass_synced_us_{n_passes}p", t_seq,
+                 n_passes))
     return rows
 
 

@@ -13,6 +13,8 @@ ROOT = pathlib.Path(__file__).resolve().parents[1] / "results"
 
 def load(dirname, pattern):
     out = {}
+    if not (ROOT / dirname).exists():
+        return out
     for p in sorted((ROOT / dirname).glob(pattern)):
         try:
             r = json.loads(p.read_text())

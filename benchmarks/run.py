@@ -5,8 +5,14 @@ Prints ``name,value,derived`` CSV rows:
   * fig4_*   runtime convergence (simulated oracle-cost regimes)
   * fig5_*   working-set size trajectory
   * fig6_*   approximate passes per exact pass
+  * hostsync_* control-loop host syncs per outer iteration (batched vs old)
   * kernel_* hot-path microbenchmarks (us per call)
   * dryrun_/roofline_ summary of the (arch x shape) grid
+
+``--smoke``: a fast CI-friendly subset — 4-iteration convergence runs and
+small-shape kernel benches, skipping the dry-run/roofline grid (which
+needs the multi-minute XLA compile cells).  ``--quick`` only shortens the
+convergence runs of the full suite.
 """
 from __future__ import annotations
 
@@ -15,13 +21,15 @@ import sys
 
 def main() -> None:
     quick = "--quick" in sys.argv
-    from . import kernel_bench, paper_convergence, roofline_report, \
-        workset_stats
+    smoke = "--smoke" in sys.argv
+    from . import kernel_bench, paper_convergence, workset_stats
     rows = []
-    rows += paper_convergence.main(quick=quick)
+    rows += paper_convergence.main(quick=quick or smoke)
     rows += workset_stats.main()
-    rows += kernel_bench.main()
-    rows += roofline_report.main()
+    rows += kernel_bench.main(smoke=smoke)
+    if not smoke:
+        from . import roofline_report
+        rows += roofline_report.main()
     print("name,value,derived")
     for r in rows:
         print(",".join(str(x) for x in r))

@@ -5,11 +5,21 @@ slope rule, TTL eviction, and telemetry.  This is the piece of the paper
 that is inherently an *online control loop* — everything it schedules is a
 compiled JAX program.
 
-Timing modes:
-  * wall clock (production): perf_counter around block_until_ready;
+The MP-BCFW control loop is *batched*: all approximate passes of an outer
+iteration run inside one device-resident :func:`repro.core.mpbcfw.
+multi_approx_pass` program whose stopping rule (the paper's slope
+criterion) is evaluated on device, so the driver performs exactly **one**
+host sync per outer iteration (previously ``n_approx_passes + 1``).  The
+returned per-pass telemetry is replayed into the host-side
+:class:`~repro.core.selection.IterationTracker`:
+
+  * wall clock (production): the measured iteration time is attributed
+    across the batch pro-rata by modeled pass cost, which also calibrates
+    the per-plane cost estimate the device rule uses next iteration;
   * :class:`repro.core.selection.CostModel` (simulation/CI): a virtual
-    clock driven by #oracle-calls and #cached-planes, reproducing the
-    paper's USPS/OCR/HorseSeg regimes deterministically on any host.
+    clock driven by #oracle-calls and #cached-planes replays the per-pass
+    plane counts exactly, reproducing the paper's USPS/OCR/HorseSeg
+    regimes deterministically on any host.
 """
 from __future__ import annotations
 
@@ -23,7 +33,7 @@ import numpy as np
 
 from . import bcfw, gram, mpbcfw, subgradient
 from .averaging import extract, init_averaging
-from .selection import CostModel, IterationTracker
+from .selection import CostModel, IterationTracker, attribute_wall_time
 from .ssvm import batched_oracle, dual_value, init_state, weights_of
 from .types import SSVMProblem
 from .workset import sizes
@@ -40,6 +50,7 @@ class RunConfig:
     ttl: int = 10           # T, plane time-to-live in outer iterations
     max_iters: int = 50
     max_approx_passes: int = 1000   # M (paper: large; slope rule governs)
+    approx_batch: int = 64  # approximate passes fused per device program
     gram_steps: int = 10    # repeats per block for the Sec-3.5 scheme
     seed: int = 0
     cost_model: Optional[CostModel] = None  # None => wall clock
@@ -57,6 +68,7 @@ class TraceRow:
     primal_avg: float       # primal at the averaged iterate (Sec. 3.6)
     ws_mean: float          # mean working-set size (Fig. 5)
     approx_passes: int      # approximate passes this iteration (Fig. 6)
+    host_syncs: int = 1     # device->host syncs in the control loop
 
 
 @dataclass
@@ -103,6 +115,27 @@ def _evaluate(problem: SSVMProblem, phi, avg, lam: float):
     else:
         primal_avg = primal
     return float(primal), float(dual), float(primal_avg)
+
+
+def _fit_pass_costs(xs: List[float], ys: List[float]):
+    """Least-squares fit of iteration time ~ exact_cost + plane_cost * x.
+
+    ``x`` is the iteration's total approximate plane-steps.  Returns
+    ``(exact_cost, plane_cost)`` when the recent window identifies both
+    terms (>= 2 distinct x values, positive coefficients), else ``None``.
+    """
+    if len(xs) < 2:
+        return None
+    x = np.asarray(xs[-8:], np.float64)
+    y = np.asarray(ys[-8:], np.float64)
+    var = float(np.var(x))
+    if var <= 0.0:
+        return None
+    b = float(np.mean((x - x.mean()) * (y - y.mean()))) / var
+    a = float(y.mean() - b * x.mean())
+    if a <= 0.0 or b <= 0.0:
+        return None
+    return a, b
 
 
 def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
@@ -164,48 +197,114 @@ def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
         return res
 
     # --- MP-BCFW family -------------------------------------------------
+    # The control loop syncs with the device exactly once per outer
+    # iteration: the exact pass and the whole batch of approximate passes
+    # are dispatched without blocking, and a single device_get of the
+    # batched telemetry drives all host-side bookkeeping.
     mp = mpbcfw.init_mp_state(problem, cfg.cap)
     gc = gram.init_gram(n, cfg.cap) if cfg.algo == "mpbcfw-gram" else None
     tracker = IterationTracker()
+    cm = cfg.cost_model
+    # Per-pass cost constants for the on-device slope rule.  CostModel mode
+    # uses the model's exact constants (so the device decisions match a
+    # host replay verbatim); wall-clock mode starts from defaults and
+    # recalibrates from the measured iteration time every iteration.
+    est_exact = cm.oracle_cost * n if cm is not None else 1.0
+    est_plane = cm.plane_cost if cm is not None else 1e-3
+    wall_x: List[float] = []   # plane-steps per iteration (regressor)
+    wall_y: List[float] = []   # measured iteration seconds
+    f_end = float(dual_value(mp.inner.phi, lam))
     for it in range(cfg.max_iters):
         mp = mpbcfw.begin_iteration(mp, cfg.ttl)
-        f_start = float(dual_value(mp.inner.phi, lam))
-        tracker.start(clock.now(), f_start)
+        f_start = f_end     # TTL eviction does not change phi, hence F
+        t0 = clock.now()
+        tracker.start(t0, f_start)
 
         perm = jnp.asarray(rng.permutation(n))
         if gc is not None:
-            mp = _exact_pass_gram(problem, mp, gc, perm, lam)
-            mp, gc = mp
+            mp, gc = _exact_pass_gram(problem, mp, gc, perm, lam)
         else:
             mp = mpbcfw.jit_exact_pass(problem, mp, perm, lam=lam)
-        mp.inner.phi.block_until_ready()
-        tracker.record(clock.exact(n), float(dual_value(mp.inner.phi, lam)))
 
-        n_approx_passes = 0
-        while n_approx_passes < cfg.max_approx_passes:
-            total_planes = int(jnp.sum(sizes(mp.ws)))
-            perm = jnp.asarray(rng.permutation(n))
-            if gc is not None:
-                inner, ws, av = gram.jit_approx_pass_gram(
-                    problem, mp.inner, mp.ws, gc, mp.avg, perm, mp.outer_it,
-                    lam=lam, steps=cfg.gram_steps)
-                mp = mp._replace(inner=inner, ws=ws, avg=av)
-            else:
-                mp = mpbcfw.jit_approx_pass(problem, mp, perm, lam=lam)
-            mp.inner.phi.block_until_ready()
-            n_approx_passes += 1
-            tracker.record(clock.approx(total_planes),
-                           float(dual_value(mp.inner.phi, lam)))
-            if not tracker.continue_approx():
+        plane_cost = cm.plane_cost if cm is not None else est_plane
+        # Device times are relative to the iteration start (t0 = 0): the
+        # slope rule is shift-invariant, and absolute virtual times would
+        # outgrow float32 resolution on long runs (t + plane_cost == t).
+        clock_dev = mpbcfw.make_slope_clock(0.0, f_start, est_exact,
+                                            plane_cost)
+        duals_all: List[float] = []
+        planes_all: List[int] = []
+        syncs = 0
+        f_exact = None
+        while len(duals_all) < cfg.max_approx_passes:
+            batch = min(cfg.approx_batch,
+                        cfg.max_approx_passes - len(duals_all))
+            # Permutations for passes the device rule skips are drawn but
+            # unused, so the schedule is deterministic per (seed,
+            # approx_batch); approx_batch=1 reproduces the unbatched
+            # loop's RNG stream exactly.
+            perms = jnp.asarray(
+                np.stack([rng.permutation(n) for _ in range(batch)]))
+            mp, clock_dev, stats = mpbcfw.jit_multi_approx_pass(
+                problem, mp, perms, clock_dev, lam=lam, gc=gc,
+                steps=cfg.gram_steps)
+            st = jax.device_get(stats)  # the iteration's single host sync
+            syncs += 1
+            if f_exact is None:
+                f_exact = float(st.f_entry)
+            k = int(st.passes_run)
+            duals_all += [float(x) for x in st.duals[:k]]
+            planes_all += [int(x) for x in st.planes[:k]]
+            if not bool(st.more):
                 break
+        if f_exact is None:  # cfg.max_approx_passes == 0
+            f_exact = float(dual_value(mp.inner.phi, lam))
+            syncs += 1
 
+        # Replay the device-chosen pass schedule through the host clock
+        # (the tracker mirrors what the device rule saw — telemetry and
+        # validation; the continue decisions themselves happened on device).
+        if cm is not None:
+            tracker.record(clock.exact(n), f_exact)
+            for dv, n_planes in zip(duals_all, planes_all):
+                tracker.record(clock.approx(n_planes), dv)
+        else:
+            elapsed = clock.now() - t0
+            weights = [est_exact] + [est_plane * max(p, 1)
+                                     for p in planes_all]
+            durs = attribute_wall_time(elapsed, weights)
+            ts, t_cursor = [], t0
+            for dur in durs:
+                t_cursor += dur
+                ts.append(t_cursor)
+            tracker.record(ts[0], f_exact)
+            tracker.record_batch(ts[1:], duals_all)
+            # Calibrate the device rule's cost constants.  Pro-rata
+            # attribution alone preserves the est_exact/est_plane *ratio*,
+            # so regress elapsed ~ a + b*plane_steps across iterations
+            # (pass counts vary) to learn the real exact-vs-approx split.
+            wall_x.append(float(sum(max(p, 1) for p in planes_all)))
+            wall_y.append(float(elapsed))
+            fit = _fit_pass_costs(wall_x, wall_y)
+            if fit is not None:
+                est_exact, est_plane = fit
+            else:
+                est_exact = max(durs[0], 1e-9)
+                if planes_all:
+                    tot = sum(max(p, 1) for p in planes_all)
+                    est_plane = max(sum(durs[1:]) / tot, 1e-12)
+
+        n_approx_passes = len(duals_all)
+        ws_mean = (planes_all[-1] / n if planes_all
+                   else float(jnp.mean(sizes(mp.ws))))
         use_avg = mp.avg if cfg.algo.endswith("avg") else None
         primal, dual, primal_avg = _evaluate(problem, mp.inner.phi,
                                              use_avg, lam)
+        f_end = dual
         res.trace.append(TraceRow(
             it, int(mp.inner.n_exact), int(mp.inner.n_approx), clock.now(),
             primal, dual, primal - dual, primal_avg,
-            float(jnp.mean(sizes(mp.ws))), n_approx_passes))
+            ws_mean, n_approx_passes, syncs))
     res.w = np.asarray(weights_of(mp.inner.phi, lam))
     res.w_avg = np.asarray(weights_of(extract(mp.avg, lam), lam))
     return res

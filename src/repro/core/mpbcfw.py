@@ -7,23 +7,29 @@ The algorithm interleaves
   * **approximate passes** — BCFW steps against the *cached* planes only
     (``H~_i(w) = max_{phi in W_i} <phi, [w 1]>``), costing O(|W_i| d) each.
 
-Both passes are single jitted ``lax.scan`` programs.  The decision of how
-many approximate passes to run per exact pass is made host-side by the
-geometric slope rule in :mod:`repro.core.selection`, which is how the paper
-resolves the parameter ``M``; the TTL rule resolves ``N``.
+Both passes are single jitted ``lax.scan`` programs, and the *sequence* of
+approximate passes per exact pass is itself one jitted program:
+:func:`multi_approx_pass` runs up to ``B`` passes inside a
+``lax.while_loop`` with the paper's geometric slope rule (Sec. 3.4,
+parameter ``M``) evaluated **on device** from ``dual_value`` deltas — so
+the host never round-trips between approximate passes.  The host-side
+:mod:`repro.core.selection` tracker replays the returned per-pass telemetry
+through its own clock; the TTL rule resolves ``N``.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .averaging import update_average
 from .bcfw import block_update
-from .types import AveragingState, BCFWState, SSVMProblem, WorkSet
-from .ssvm import weights_of
+from .selection import slope_continue_jnp
+from .ssvm import dual_value, weights_of
+from .types import (ApproxBatchStats, AveragingState, BCFWState, SlopeClock,
+                    SSVMProblem, WorkSet)
 from . import workset as ws_ops
 
 
@@ -114,6 +120,97 @@ def jit_approx_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
                     *, lam: float) -> MPState:
     del problem  # the approximate pass never touches the data
     return jit_approx_pass_impl(mp, perm, lam=lam)
+
+
+def make_slope_clock(t0, f0, t, plane_cost) -> SlopeClock:
+    """Build the device timing state for :func:`multi_approx_pass`."""
+    f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+    return SlopeClock(t0=f32(t0), f0=f32(f0), t=f32(t),
+                      plane_cost=f32(plane_cost))
+
+
+def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
+                      *, lam: float, gc=None, steps: int = 10,
+                      run_all: bool = False
+                      ) -> Tuple[MPState, SlopeClock, ApproxBatchStats]:
+    """Up to ``B = perms.shape[0]`` approximate passes in one device program.
+
+    Replaces the host loop "run a pass, sync, evaluate the slope rule,
+    maybe run another" with a ``lax.while_loop`` whose stopping criterion —
+    :func:`repro.core.selection.slope_continue_jnp` on ``dual_value``
+    deltas, timed by ``clock.plane_cost`` per cached plane — is computed on
+    device.  A stopped loop never executes the remaining passes (true early
+    exit, not masking), so the returned state equals exactly
+    ``passes_run`` sequential :func:`approx_pass` applications.
+
+    ``gc`` switches the pass body to the Sec-3.5 Gram-cache scheme
+    (``steps`` inner repeats per block); ``run_all`` disables the stopping
+    rule (used by equivalence tests and fixed-budget callers).  Chunked
+    callers thread the returned clock into the next batch; the dual on
+    entry (= after the caller's exact pass) is recomputed on device into
+    ``stats.f_entry``, so no host sync is needed to seed the rule.
+    """
+    from . import gram as gram_ops
+
+    n_batch = perms.shape[0]
+    f_entry = dual_value(mp.inner.phi, lam)
+    # Approximate passes never insert/evict planes, so the per-pass cost —
+    # Theta(sum_i |W_i|) — is constant across the batch.
+    total_planes = jnp.sum(ws_ops.sizes(mp.ws)).astype(jnp.int32)
+    cost = clock.plane_cost * jnp.maximum(total_planes, 1).astype(jnp.float32)
+
+    def one_pass(state: MPState, perm: jnp.ndarray) -> MPState:
+        if gc is not None:
+            inner, ws, avg = gram_ops.approx_pass_gram(
+                None, state.inner, state.ws, gc, state.avg, perm,
+                state.outer_it, lam, steps)
+            return state._replace(inner=inner, ws=ws, avg=avg)
+        return approx_pass(None, state, perm, lam)
+
+    def cond(carry):
+        _, k, _, _, cont, *_ = carry
+        return cont & (k < n_batch)
+
+    def body(carry):
+        state, k, t, f, _, duals, times, planes = carry
+        state = one_pass(state, perms[k])
+        f_new = dual_value(state.inner.phi, lam)
+        t_new = t + cost
+        cont = slope_continue_jnp(clock.f0, clock.t0, f, t, f_new, t_new)
+        if run_all:
+            cont = jnp.asarray(True)
+        duals = duals.at[k].set(f_new)
+        times = times.at[k].set(t_new)
+        planes = planes.at[k].set(total_planes)
+        return (state, k + 1, t_new, f_new, cont, duals, times, planes)
+
+    init = (mp, jnp.zeros((), jnp.int32), clock.t, f_entry,
+            jnp.asarray(True),
+            jnp.zeros((n_batch,), jnp.float32),
+            jnp.zeros((n_batch,), jnp.float32),
+            jnp.zeros((n_batch,), jnp.int32))
+    mp, k, t, _, cont, duals, times, planes = jax.lax.while_loop(
+        cond, body, init)
+    stats = ApproxBatchStats(
+        duals=duals, times=times, planes=planes,
+        ran=jnp.arange(n_batch) < k, passes_run=k, f_entry=f_entry,
+        more=cont)
+    return mp, clock._replace(t=t), stats
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "steps", "run_all"))
+def _jit_multi_approx_pass(mp, perms, clock, gc, *, lam, steps, run_all):
+    return multi_approx_pass(mp, perms, clock, lam=lam, gc=gc, steps=steps,
+                             run_all=run_all)
+
+
+def jit_multi_approx_pass(problem: Optional[SSVMProblem], mp: MPState,
+                          perms: jnp.ndarray, clock: SlopeClock, *,
+                          lam: float, gc=None, steps: int = 10,
+                          run_all: bool = False):
+    del problem  # approximate passes never touch the data
+    return _jit_multi_approx_pass(mp, perms, clock, gc, lam=lam, steps=steps,
+                                  run_all=run_all)
 
 
 def init_mp_state(problem: SSVMProblem, cap: int) -> MPState:

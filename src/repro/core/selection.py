@@ -11,6 +11,13 @@ is too low; end the iteration and do an exact pass next.  Geometrically this
 extrapolates the recent runtime-vs-dual curve: continue only while the last
 segment is steeper than the chord of the whole iteration.
 
+The criterion exists in two forms that share the same algebra:
+
+  * :func:`slope_continue` — host floats, used by :class:`IterationTracker`;
+  * :func:`slope_continue_jnp` — traced scalars, used inside the batched
+    on-device loop (:func:`repro.core.mpbcfw.multi_approx_pass`), which is
+    how the driver gets away with a single host sync per outer iteration.
+
 Runtime is supplied by the caller (wall clock in production, an injected
 deterministic cost model in tests / simulation), which keeps the rule pure
 and unit-testable.
@@ -18,7 +25,46 @@ and unit-testable.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List
+from typing import Iterable, List, Sequence
+
+_EPS = 1e-12
+
+
+def slope_continue(f0: float, t0: float, f_prev: float, t_prev: float,
+                   f_last: float, t_last: float) -> bool:
+    """The paper's slope criterion on one (prev, last) checkpoint pair."""
+    dt_last = max(t_last - t_prev, _EPS)
+    dt_iter = max(t_last - t0, _EPS)
+    slope_last = (f_last - f_prev) / dt_last
+    slope_iter = (f_last - f0) / dt_iter
+    return slope_last >= slope_iter
+
+
+def slope_continue_jnp(f0, t0, f_prev, t_prev, f_last, t_last):
+    """Traced twin of :func:`slope_continue` (used under jit/while_loop)."""
+    import jax.numpy as jnp
+
+    dt_last = jnp.maximum(t_last - t_prev, _EPS)
+    dt_iter = jnp.maximum(t_last - t0, _EPS)
+    return (f_last - f_prev) / dt_last >= (f_last - f0) / dt_iter
+
+
+def attribute_wall_time(elapsed: float,
+                        weights: Sequence[float]) -> List[float]:
+    """Split one measured duration over passes pro-rata by cost weight.
+
+    Wall-clock mode cannot time individual passes without a device sync per
+    pass, so the driver measures the whole batched program once and
+    attributes the elapsed time across [exact pass, approx pass 1, ...] in
+    proportion to their modeled costs.  Degenerate weights fall back to a
+    uniform split.
+    """
+    if not weights:
+        return []
+    total = float(sum(weights))
+    if total <= 0.0:
+        return [elapsed / len(weights)] * len(weights)
+    return [elapsed * float(w) / total for w in weights]
 
 
 @dataclass
@@ -36,17 +82,19 @@ class IterationTracker:
     def record(self, t: float, f: float) -> None:
         self.history.append((t, f))
 
+    def record_batch(self, ts: Iterable[float], fs: Iterable[float]) -> None:
+        """Consume batched multi-pass telemetry (one entry per ran pass)."""
+        for t, f in zip(ts, fs):
+            self.record(float(t), float(f))
+
     def continue_approx(self) -> bool:
         """The paper's slope criterion; called after each approximate pass."""
         if len(self.history) < 2:
             return True
         t_prev, f_prev = self.history[-2]
         t_last, f_last = self.history[-1]
-        dt_last = max(t_last - t_prev, 1e-12)
-        dt_iter = max(t_last - self.t0, 1e-12)
-        slope_last = (f_last - f_prev) / dt_last
-        slope_iter = (f_last - self.f0) / dt_iter
-        return slope_last >= slope_iter
+        return slope_continue(self.f0, self.t0, f_prev, t_prev,
+                              f_last, t_last)
 
 
 @dataclass

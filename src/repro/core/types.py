@@ -86,3 +86,36 @@ class PassStats(NamedTuple):
     dual: jnp.ndarray      # F(phi) after the pass
     n_exact: jnp.ndarray   # cumulative exact oracle calls
     n_approx: jnp.ndarray  # cumulative approximate calls
+
+
+class SlopeClock(NamedTuple):
+    """Device-resident timing state for the batched slope rule (Sec. 3.4).
+
+    Times are in the caller's cost units: calibrated seconds in wall-clock
+    mode, virtual seconds under a :class:`repro.core.selection.CostModel`.
+    All fields are () float32 scalars so they can be traced (no recompiles
+    across outer iterations).
+    """
+
+    t0: jnp.ndarray          # iteration start time
+    f0: jnp.ndarray          # dual at iteration start
+    t: jnp.ndarray           # time of the latest recorded checkpoint
+    plane_cost: jnp.ndarray  # cost charged per cached plane per pass
+
+
+class ApproxBatchStats(NamedTuple):
+    """Per-pass telemetry from one batched ``multi_approx_pass`` program.
+
+    Entries past ``passes_run`` are zero-filled; ``ran`` is the prefix mask
+    of passes that actually executed.  The host consumes this with exactly
+    one device sync per outer iteration (``driver.run``), replaying the
+    per-pass plane counts through its own clock.
+    """
+
+    duals: jnp.ndarray       # (B,) f32  dual value after pass k
+    times: jnp.ndarray       # (B,) f32  device-clock time after pass k
+    planes: jnp.ndarray      # (B,) i32  cached planes scored by pass k
+    ran: jnp.ndarray         # (B,) bool pass k executed (prefix mask)
+    passes_run: jnp.ndarray  # ()   i32  number of executed passes
+    f_entry: jnp.ndarray     # ()   f32  dual on entry (after the exact pass)
+    more: jnp.ndarray        # ()   bool rule still wanted another pass

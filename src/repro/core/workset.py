@@ -8,14 +8,21 @@ outer iterations are dropped.
 
 TPU adaptation: the sets are a dense ``(n, cap, d+1)`` ring with ``valid``
 and ``last_active`` metadata, so that all operations are vectorized /
-`lax.scan`-compatible and the approximate oracle is a single masked matvec.
-The *effective* working-set size is data-dependent exactly as in the paper
-(the TTL rule invalidates slots); ``cap`` only bounds memory.
+`lax.scan`-compatible.  Scoring goes through
+:func:`repro.kernels.ops.plane_scores` — the Pallas kernel on TPU, the
+pure-jnp reference elsewhere — and :func:`flat_view` exposes the
+kernel-friendly flattened ``(n*cap, d)`` layout so a *single* kernel launch
+can score every cached plane of every block.  The *effective* working-set
+size is data-dependent exactly as in the paper (the TTL rule invalidates
+slots); ``cap`` only bounds memory.
 """
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax.numpy as jnp
 
+from ..kernels import ops
 from .types import WorkSet
 
 # Score assigned to invalid slots so they never win the argmax.
@@ -51,6 +58,48 @@ def add_plane(ws: WorkSet, i: jnp.ndarray, plane: jnp.ndarray,
     )
 
 
+def flat_view(ws: WorkSet) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Kernel-facing flattened layout of the whole cache.
+
+    Returns ``(P, b, valid)`` with ``P`` the ``(n*cap, d)`` linear parts,
+    ``b`` the ``(n*cap,)`` offsets and ``valid`` the ``(n*cap,)`` slot mask
+    — exactly the operand layout of the ``plane_scores`` kernel, so one
+    launch scores every cached plane of every block.
+    """
+    n, cap, d1 = ws.planes.shape
+    flat = ws.planes.reshape(n * cap, d1)
+    return flat[:, :-1], flat[:, -1], ws.valid.reshape(n * cap)
+
+
+def score_all(ws: WorkSet, w: jnp.ndarray) -> jnp.ndarray:
+    """Masked scores of every cached plane at one shared ``w``: (n, cap).
+
+    Invalid slots score ``NEG_INF``.  One ``plane_scores`` launch over the
+    flattened view — the batched form of :func:`approx_oracle` used by
+    telemetry, benchmarks and shared-``w`` (tau-nice) passes.
+    """
+    p, b, _ = flat_view(ws)
+    n, cap = ws.valid.shape
+    scores = ops.plane_scores(p, w, b).reshape(n, cap)
+    return jnp.where(ws.valid, scores, NEG_INF)
+
+
+def approx_oracle_all(ws: WorkSet, w: jnp.ndarray):
+    """Batched approximate oracle: best cached plane per block at one ``w``.
+
+    Returns ``(planes (n, d+1), slots (n,), scores (n,))``; blocks with an
+    empty set get the zero plane and score 0 (the ground-truth plane).
+    """
+    scores = score_all(ws, w)
+    slots = jnp.argmax(scores, axis=1)
+    best = jnp.take_along_axis(scores, slots[:, None], axis=1)[:, 0]
+    any_valid = jnp.any(ws.valid, axis=1)
+    planes = jnp.take_along_axis(ws.planes, slots[:, None, None], axis=1)[:, 0]
+    planes = jnp.where(any_valid[:, None], planes,
+                       jnp.zeros_like(planes))
+    return planes, slots, jnp.where(any_valid, best, 0.0)
+
+
 def approx_oracle(ws: WorkSet, i: jnp.ndarray, w: jnp.ndarray):
     """argmax over block i's cached planes of <phi, [w 1]>.
 
@@ -60,7 +109,14 @@ def approx_oracle(ws: WorkSet, i: jnp.ndarray, w: jnp.ndarray):
     ground-truth plane is the zero plane).
     """
     planes_i = ws.planes[i]                      # (cap, d+1)
-    scores = planes_i[:, :-1] @ w + planes_i[:, -1]
+    cap, d = planes_i.shape[0], planes_i.shape[1] - 1
+    if cap >= 8 and d >= 128:
+        # Big enough to fill a (8, 128) tile: worth a kernel launch.
+        scores = ops.plane_scores(planes_i[:, :-1], w, planes_i[:, -1])
+    else:
+        # Tiny blocks: padding to the minimum tile would dominate; let XLA
+        # fuse the matvec into the enclosing scan body instead.
+        scores = planes_i[:, :-1] @ w + planes_i[:, -1]
     scores = jnp.where(ws.valid[i], scores, NEG_INF)
     slot = jnp.argmax(scores)
     best = scores[slot]

@@ -20,6 +20,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def effective_blocks(n: int, d: int, block_n: int,
+                     block_d: int) -> tuple:
+    """Clamp the requested block sizes to the problem, keeping alignment.
+
+    The clamp ``min(block_n, n)`` alone can produce non-sublane/lane-aligned
+    tiles (e.g. n=12 -> 12, d=200 -> 200); round the effective sizes up to
+    multiples of 8 (sublane) / 128 (lane) before padding.
+    """
+    block_n = _round_up(min(block_n, max(8, n)), 8)
+    block_d = _round_up(min(block_d, max(128, d)), 128)
+    return block_n, block_d
+
+
 def _kernel(p_ref, w_ref, b_ref, out_ref):
     j = pl.program_id(1)
 
@@ -41,8 +58,7 @@ def plane_scores(planes: jnp.ndarray, w: jnp.ndarray,
     block grid internally; callers pass any shape.
     """
     n, d = planes.shape
-    block_n = min(block_n, max(8, n))
-    block_d = min(block_d, max(128, d))
+    block_n, block_d = effective_blocks(n, d, block_n, block_d)
     n_pad = -n % block_n
     d_pad = -d % block_d
     p = jnp.pad(planes, ((0, n_pad), (0, d_pad)))

@@ -1,9 +1,27 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 device;
-only launch/dryrun.py and launch/roofline.py force 512 host devices."""
+only launch/dryrun.py and launch/roofline.py force 512 host devices.
+
+Tier-1 (`python -m pytest -x -q`) deselects ``slow``-marked tests (the
+multi-minute XLA dry-run compiles); pass ``--runslow`` for the full suite.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run slow tests (multi-minute XLA compile cells)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow XLA compile; use --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
 
 
 @pytest.fixture(scope="session")

@@ -23,6 +23,53 @@ def test_plane_scores_shapes(n, d):
                     rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("n,d", [(12, 200), (9, 130), (3, 50), (12, 8),
+                                 (17, 257)])
+def test_plane_scores_ragged_shapes(n, d):
+    """Pallas kernel path vs jnp reference on non-tile-aligned shapes."""
+    r = np.random.RandomState(n * 7 + d)
+    P = jnp.asarray(r.randn(n, d).astype(np.float32))
+    w = jnp.asarray(r.randn(d).astype(np.float32))
+    b = jnp.asarray(r.randn(n).astype(np.float32))
+    out = ps.plane_scores(P, w, b, interpret=True)
+    assert_allclose(np.asarray(out), np.asarray(ref.plane_scores_ref(P, w, b)),
+                    rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("n,d,block_n,block_d", [
+    (12, 200, 128, 512),   # clamp would give 12 x 200 tiles
+    (7, 100, 128, 512),    # below the minimum tile
+    (50, 700, 12, 200),    # caller-requested ragged blocks
+    (130, 128, 16, 256),
+])
+def test_plane_scores_effective_blocks_aligned(n, d, block_n, block_d):
+    """Effective tile sizes are sublane/lane aligned (docstring claim)."""
+    bn, bd = ps.effective_blocks(n, d, block_n, block_d)
+    assert bn % 8 == 0 and bd % 128 == 0
+    assert bn >= min(block_n, 8) and bd >= min(block_d, 128)
+
+
+def test_workset_flat_view_scores_through_kernel():
+    """flat_view + plane_scores == per-block masked matvecs."""
+    from repro.core import workset
+    r = np.random.RandomState(0)
+    n, cap, d = 6, 4, 40
+    ws = workset.init_workset(n=n, cap=cap, d=d)
+    for i in range(n):
+        for t in range(r.randint(0, cap + 1)):
+            ws = workset.add_plane(
+                ws, jnp.asarray(i),
+                jnp.asarray(r.randn(d + 1).astype(np.float32)),
+                jnp.asarray(t))
+    w = jnp.asarray(r.randn(d).astype(np.float32))
+    P, b, valid = workset.flat_view(ws)
+    assert P.shape == (n * cap, d) and b.shape == (n * cap,)
+    assert (np.asarray(valid) == np.asarray(ws.valid).reshape(-1)).all()
+    scores = np.asarray(ps.plane_scores(P, w, b, interpret=True))
+    expect = np.asarray(ws.planes[:, :, :-1] @ w + ws.planes[:, :, -1])
+    assert_allclose(scores.reshape(n, cap), expect, rtol=3e-5, atol=3e-5)
+
+
 @pytest.mark.parametrize("block_n,block_d", [(8, 128), (16, 256), (128, 512)])
 def test_plane_scores_blockings(block_n, block_d):
     r = np.random.RandomState(0)
