@@ -6,6 +6,8 @@ Prints ``name,value,derived`` CSV rows:
   * fig5_*   working-set size trajectory
   * fig6_*   approximate passes per exact pass
   * hostsync_* control-loop host syncs per outer iteration (batched vs old)
+  * shard_*  sharded-engine smoke: psums per approximate pass, collectives
+             and host syncs per outer iteration vs the host-loop equivalent
   * kernel_* hot-path microbenchmarks (us per call)
   * dryrun_/roofline_ summary of the (arch x shape) grid
 
@@ -22,10 +24,12 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     smoke = "--smoke" in sys.argv
-    from . import kernel_bench, paper_convergence, workset_stats
+    from . import (kernel_bench, paper_convergence, sharded_bench,
+                   workset_stats)
     rows = []
     rows += paper_convergence.main(quick=quick or smoke)
     rows += workset_stats.main()
+    rows += sharded_bench.main(smoke=smoke)
     rows += kernel_bench.main(smoke=smoke)
     if not smoke:
         from . import roofline_report

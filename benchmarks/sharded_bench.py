@@ -1,0 +1,79 @@
+"""Sharded-engine smoke scenario: collective & host-sync accounting.
+
+Runs a few outer iterations of the :mod:`repro.shard` engine (tau-nice
+exact epoch + slope-ruled approximate batch, all device-resident) on the
+USPS-like scenario over the local data mesh and reports, per paper-style
+CSV row:
+
+  * ``shard_psums_per_approx_pass``   trace-time collective sites in the
+    compiled pass body (the engine's design contract: exactly 1),
+  * ``shard_collectives_per_iter``    runtime collectives per outer
+    iteration (1 setup reduction + 1 psum per executed pass),
+  * ``shard_host_syncs_per_iter``     host round-trips per outer iteration
+    (1), with the host-chunk-loop equivalent — ``n/tau`` oracle/fold
+    dispatcher syncs plus one per approximate pass — as the derived
+    column,
+  * ``shard_dual_final``              end dual, sanity that it trains.
+
+Mesh size is whatever the process has (1 device under plain CI; run with
+``--xla_force_host_platform_device_count=8`` to smoke the 8-shard path).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mpbcfw
+from repro.core.oracles import multiclass
+from repro.core.ssvm import dual_value
+from repro.data import synthetic
+from repro.launch.mesh import make_data_mesh
+from repro.shard import ShardEngine
+
+N, TAU, BATCH, ITERS, CAP = 48, 8, 8, 4, 16
+
+
+def main(smoke: bool = True):
+    del smoke  # one size: the scenario is already CI-fast (~seconds)
+    x, y = synthetic.usps_like(n=N, f=12, num_classes=5, seed=0)
+    prob = multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), 5)
+    lam = 1.0 / prob.n
+    eng = ShardEngine(prob, make_data_mesh(), lam=lam)
+    rng = np.random.RandomState(0)
+    mp = eng.init_state(cap=CAP)
+
+    f_prev, passes_total = 0.0, 0
+    for _ in range(ITERS):
+        perm = jnp.asarray(rng.permutation(prob.n))
+        perms = jnp.asarray(np.stack([rng.permutation(prob.n)
+                                      for _ in range(BATCH)]))
+        clock = mpbcfw.make_slope_clock(0.0, f_prev, float(prob.n), 1e-3)
+        mp, clock, stats = eng.outer_iteration(mp, perm, perms, clock,
+                                               tau=TAU, ttl=10)
+        st = eng.read_stats(stats)  # the iteration's single host sync
+        passes_total += int(st.passes_run)
+        f_prev = float(st.duals[int(st.passes_run) - 1]
+                       if int(st.passes_run) else st.f_entry)
+
+    syncs_per_iter = eng.ledger.host_syncs / ITERS
+    coll_per_iter = eng.ledger.collectives / ITERS
+    # what the removed host chunk loop would have paid per iteration:
+    # one dispatch+sync per tau-chunk, plus one sync per approximate pass
+    host_loop_equiv = N // TAU + passes_total / ITERS
+    f_final = float(dual_value(mp.inner.phi, lam))
+    return [
+        ("shard_psums_per_approx_pass", eng.psums_per_approx_pass,
+         eng.setup_psums),
+        ("shard_collectives_per_iter", coll_per_iter,
+         passes_total / ITERS),
+        ("shard_host_syncs_per_iter", syncs_per_iter, host_loop_equiv),
+        ("shard_hostsync_reduction_x",
+         round(host_loop_equiv / max(syncs_per_iter, 1e-9), 2),
+         eng.n_shards),
+        ("shard_dual_final", f_final, ITERS),
+    ]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

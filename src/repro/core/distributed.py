@@ -3,23 +3,34 @@
 The paper's Alg. 3 is strictly sequential (each block update changes ``w``
 before the next oracle call).  At cluster scale the oracle is the expensive
 part, so we adapt: sample ``tau`` distinct blocks, evaluate their
-max-oracles **in parallel at the same (stale) w** — sharded over the mesh's
-data axis — then fold the returned planes in **sequentially** with exact
-line search.  Every returned plane is a genuine data plane regardless of
-which ``w`` produced it, so each fold is monotone in F and all convergence
-guarantees are kept; staleness only costs step quality (tau-nice analysis,
-Lacoste-Julien et al.).  tau = #data-shards gives linear oracle throughput
-scaling.
+max-oracles **in parallel at the same (stale) w**, then fold the returned
+planes in **sequentially** with exact line search.  Every returned plane is
+a genuine data plane regardless of which ``w`` produced it, so each fold is
+monotone in F and all convergence guarantees are kept; staleness only costs
+step quality (tau-nice analysis, Lacoste-Julien et al.).  tau =
+#data-shards gives linear oracle throughput scaling.
 
 Straggler mitigation (ft/): a ``done`` mask marks oracle results that
 arrived in time; missing blocks transparently fall back to their cached
 working set — i.e. the paper's approximate oracle doubles as the
-fault-tolerance path.
+fault-tolerance path.  The fallback is *batched*: every sampled block's
+cache is scored at the chunk's shared stale ``w`` in one
+``workset.approx_oracle_all`` call (one ``plane_scores`` launch), not one
+launch per missing block.
+
+This module holds the single-host *reference* implementation
+(:func:`host_tau_nice_pass`): a Python chunk loop dispatching one oracle
+program and one fold program per chunk.  The production path is the fused
+device-resident engine in :mod:`repro.shard` (``sharded_tau_nice_pass``),
+which runs the whole epoch — oracles under ``shard_map``, batched fallback,
+sequential fold-in — as one program with at most one host sync per outer
+iteration.  On a 1-device mesh the two are bit-for-bit identical; the
+reference exists for exactly that equivalence test and for debugging.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,53 +73,114 @@ def parallel_oracles(problem: SSVMProblem, w: jnp.ndarray,
                    out_shardings=out_shardings)(batch, w)
 
 
+def fallback_planes(ws, block_ids: jnp.ndarray, w: jnp.ndarray):
+    """Best cached plane of every sampled block at one shared stale ``w``.
+
+    Returns ``(planes (tau, d+1), slots (tau,), scores (tau,))`` — the
+    tau-nice straggler fallback for a whole chunk in one batched
+    ``workset.approx_oracle_all`` scoring call over the gathered
+    sub-workset.  Blocks with an empty cache get the zero (ground-truth)
+    plane, which still yields a valid monotone fold step.  Re-exported as
+    ``repro.ft.fallback_planes`` (the fault-tolerance API surface).
+    """
+    return ws_ops.approx_oracle_all(ws_ops.gather_blocks(ws, block_ids), w)
+
+
 def fold_planes(mp: MPState, block_ids: jnp.ndarray, planes: jnp.ndarray,
+                fb_planes: jnp.ndarray, fb_slots: jnp.ndarray,
                 done: jnp.ndarray, lam: float) -> MPState:
     """Sequentially fold tau candidate planes into the dual state.
 
     ``done[b]`` False means block b's oracle result is missing (straggler /
-    failure): fall back to the block's cached working set.  Folding is a
-    cheap O(tau d) scan; each step uses exact line search at the *current*
-    phi, hence monotone in F.
+    failure): the block's *precomputed* fallback — its best cached plane at
+    the chunk's shared stale ``w``, from ``workset.approx_oracle_all`` over
+    the gathered sub-workset — is folded instead.  Folding is a cheap
+    O(tau d) scan; each step uses exact line search at the *current* phi,
+    hence monotone in F no matter which ``w`` produced the candidate.
     """
 
     def body(carry, inp):
         st, ws, av = carry
-        i, plane, ok = inp
-        w = weights_of(st.phi, lam)
-        cached, slot, _ = ws_ops.approx_oracle(ws, i, w)
-        phi_hat = jnp.where(ok, plane, cached)
+        i, plane, fbp, fbs, ok = inp
+        phi_hat = jnp.where(ok, plane, fbp)
         st, _ = block_update(st, i, phi_hat, lam)
         st = st._replace(n_exact=st.n_exact + ok.astype(jnp.int32),
                          n_approx=st.n_approx + (~ok).astype(jnp.int32))
         # Cache the fresh plane; on fallback just refresh activity.
         ws_new = ws_ops.add_plane(ws, i, phi_hat, mp.outer_it)
-        ws_fb = ws_ops.mark_active(ws, i, slot, mp.outer_it)
+        ws_fb = ws_ops.mark_active(ws, i, fbs, mp.outer_it)
         ws = jax.tree_util.tree_map(
             lambda a, b: jnp.where(ok, a, b), ws_new, ws_fb)
         av = update_average(av, st.phi, exact=True)
         return (st, ws, av), None
 
     (inner, ws, avg), _ = jax.lax.scan(
-        body, (mp.inner, mp.ws, mp.avg), (block_ids, planes, done))
+        body, (mp.inner, mp.ws, mp.avg),
+        (block_ids, planes, fb_planes, fb_slots, done))
     return mp._replace(inner=inner, ws=ws, avg=avg)
 
 
-def tau_nice_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
-                  lam: float, tau: int, mesh: Optional[Mesh] = None,
-                  done: Optional[jnp.ndarray] = None) -> MPState:
-    """One epoch over ``perm`` in tau-sized parallel chunks."""
+@functools.partial(jax.jit, static_argnames=("lam",))
+def jit_fold_planes(mp: MPState, block_ids, planes, fb_planes, fb_slots,
+                    done, *, lam: float):
+    return fold_planes(mp, block_ids, planes, fb_planes, fb_slots, done, lam)
+
+
+def tau_chunk(oracle, data, mp: MPState, ids: jnp.ndarray, ok: jnp.ndarray,
+              lam: float, oracle_stage=None) -> MPState:
+    """One tau-nice chunk: parallel oracles at the chunk's stale ``w``,
+    batched cached fallback at the same ``w``, sequential fold-in.
+
+    This is the shared chunk body: the host reference jits it once per
+    chunk shape and loops on the host; the :mod:`repro.shard` engine scans
+    it inside one fused epoch program, passing its ``shard_map``'d oracle
+    sharding as ``oracle_stage(data, w, ids) -> (tau, d+1)``.  Keeping one
+    definition is what makes the two paths bit-for-bit comparable on a
+    1-device mesh.
+    """
+    w = weights_of(mp.inner.phi, lam)
+    if oracle_stage is None:
+        batch = jax.tree_util.tree_map(lambda a: a[ids], data)
+        planes = jax.vmap(lambda ex: oracle(w, ex))(batch)
+    else:
+        planes = oracle_stage(data, w, ids)
+    fbp, fbs, _ = fallback_planes(mp.ws, ids, w)
+    return fold_planes(mp, ids, planes, fbp, fbs, ok, lam)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("lam",))
+def _jit_tau_chunk(oracle, data, mp, ids, ok, *, lam: float):
+    return tau_chunk(oracle, data, mp, ids, ok, lam)
+
+
+def host_tau_nice_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
+                       lam: float, tau: int,
+                       done: Optional[jnp.ndarray] = None) -> MPState:
+    """Single-host reference for one tau-nice epoch over ``perm``.
+
+    A Python loop over ``n // tau`` chunks, each dispatching one jitted
+    :func:`tau_chunk` program — i.e. O(n/tau) dispatches per epoch.
+    Semantically identical to :func:`repro.shard.engine`'s fused
+    ``sharded_tau_nice_pass`` (which runs the whole epoch as one device
+    program); kept as the comparison oracle for its equivalence tests and
+    as a mesh-free debugging path.
+    """
     n = perm.shape[0]
     assert n % tau == 0, "perm length must be divisible by tau"
     for c in range(n // tau):
         ids = perm[c * tau:(c + 1) * tau]
-        w = weights_of(mp.inner.phi, lam)
-        planes = parallel_oracles(problem, w, ids, mesh)
         ok = jnp.ones((tau,), bool) if done is None else done[c]
-        mp = jit_fold_planes(mp, ids, planes, ok, lam=lam)
+        mp = _jit_tau_chunk(problem.oracle, problem.data, mp, ids, ok,
+                            lam=lam)
     return mp
 
 
-@functools.partial(jax.jit, static_argnames=("lam",))
-def jit_fold_planes(mp: MPState, block_ids, planes, done, *, lam: float):
-    return fold_planes(mp, block_ids, planes, done, lam)
+def tau_nice_pass(*args, **kwargs):
+    """Removed host chunk loop — kept only to fail loudly with directions."""
+    raise RuntimeError(
+        "repro.core.distributed.tau_nice_pass was removed: the host chunk "
+        "loop paid one dispatch per chunk and scored straggler fallbacks "
+        "one block at a time.  Use repro.shard.sharded_tau_nice_pass (the "
+        "fused shard_map engine; one device program per epoch, batched "
+        "fallback, <=1 host sync per outer iteration) or, for mesh-free "
+        "debugging, repro.core.distributed.host_tau_nice_pass.")

@@ -129,6 +129,54 @@ def make_slope_clock(t0, f0, t, plane_cost) -> SlopeClock:
                       plane_cost=f32(plane_cost))
 
 
+def slope_batched_loop(carry, perms: jnp.ndarray, clock: SlopeClock, *,
+                       step, f_entry: jnp.ndarray, cost: jnp.ndarray,
+                       planes_per_pass: jnp.ndarray, run_all: bool = False):
+    """Generic batched pass loop governed by the on-device slope rule.
+
+    ``step(carry, perm) -> (carry, f_new)`` runs one pass and reports the
+    dual afterwards.  The loop itself — ``lax.while_loop`` with
+    :func:`repro.core.selection.slope_continue_jnp` on dual deltas, true
+    early exit, zero-filled telemetry tail — is shared between the
+    single-device :func:`multi_approx_pass` and the mesh-sharded twin
+    (:mod:`repro.shard.engine`), so both make bit-identical stopping
+    decisions given bit-identical duals.
+
+    Returns ``(carry, t_end, stats)`` with ``stats`` an
+    :class:`~repro.core.types.ApproxBatchStats`.
+    """
+    n_batch = perms.shape[0]
+
+    def cond(state):
+        _, k, _, _, cont, *_ = state
+        return cont & (k < n_batch)
+
+    def body(state):
+        carry, k, t, f, _, duals, times, planes = state
+        carry, f_new = step(carry, perms[k])
+        t_new = t + cost
+        cont = slope_continue_jnp(clock.f0, clock.t0, f, t, f_new, t_new)
+        if run_all:
+            cont = jnp.asarray(True)
+        duals = duals.at[k].set(f_new)
+        times = times.at[k].set(t_new)
+        planes = planes.at[k].set(planes_per_pass)
+        return (carry, k + 1, t_new, f_new, cont, duals, times, planes)
+
+    init = (carry, jnp.zeros((), jnp.int32), clock.t, f_entry,
+            jnp.asarray(True),
+            jnp.zeros((n_batch,), jnp.float32),
+            jnp.zeros((n_batch,), jnp.float32),
+            jnp.zeros((n_batch,), jnp.int32))
+    carry, k, t, _, cont, duals, times, planes = jax.lax.while_loop(
+        cond, body, init)
+    stats = ApproxBatchStats(
+        duals=duals, times=times, planes=planes,
+        ran=jnp.arange(n_batch) < k, passes_run=k, f_entry=f_entry,
+        more=cont)
+    return carry, t, stats
+
+
 def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
                       *, lam: float, gc=None, steps: int = 10,
                       run_all: bool = False
@@ -152,49 +200,25 @@ def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
     """
     from . import gram as gram_ops
 
-    n_batch = perms.shape[0]
     f_entry = dual_value(mp.inner.phi, lam)
     # Approximate passes never insert/evict planes, so the per-pass cost —
     # Theta(sum_i |W_i|) — is constant across the batch.
     total_planes = jnp.sum(ws_ops.sizes(mp.ws)).astype(jnp.int32)
     cost = clock.plane_cost * jnp.maximum(total_planes, 1).astype(jnp.float32)
 
-    def one_pass(state: MPState, perm: jnp.ndarray) -> MPState:
+    def step(state: MPState, perm: jnp.ndarray):
         if gc is not None:
             inner, ws, avg = gram_ops.approx_pass_gram(
                 None, state.inner, state.ws, gc, state.avg, perm,
                 state.outer_it, lam, steps)
-            return state._replace(inner=inner, ws=ws, avg=avg)
-        return approx_pass(None, state, perm, lam)
+            state = state._replace(inner=inner, ws=ws, avg=avg)
+        else:
+            state = approx_pass(None, state, perm, lam)
+        return state, dual_value(state.inner.phi, lam)
 
-    def cond(carry):
-        _, k, _, _, cont, *_ = carry
-        return cont & (k < n_batch)
-
-    def body(carry):
-        state, k, t, f, _, duals, times, planes = carry
-        state = one_pass(state, perms[k])
-        f_new = dual_value(state.inner.phi, lam)
-        t_new = t + cost
-        cont = slope_continue_jnp(clock.f0, clock.t0, f, t, f_new, t_new)
-        if run_all:
-            cont = jnp.asarray(True)
-        duals = duals.at[k].set(f_new)
-        times = times.at[k].set(t_new)
-        planes = planes.at[k].set(total_planes)
-        return (state, k + 1, t_new, f_new, cont, duals, times, planes)
-
-    init = (mp, jnp.zeros((), jnp.int32), clock.t, f_entry,
-            jnp.asarray(True),
-            jnp.zeros((n_batch,), jnp.float32),
-            jnp.zeros((n_batch,), jnp.float32),
-            jnp.zeros((n_batch,), jnp.int32))
-    mp, k, t, _, cont, duals, times, planes = jax.lax.while_loop(
-        cond, body, init)
-    stats = ApproxBatchStats(
-        duals=duals, times=times, planes=planes,
-        ran=jnp.arange(n_batch) < k, passes_run=k, f_entry=f_entry,
-        more=cont)
+    mp, t, stats = slope_batched_loop(
+        mp, perms, clock, step=step, f_entry=f_entry, cost=cost,
+        planes_per_pass=total_planes, run_all=run_all)
     return mp, clock._replace(t=t), stats
 
 

@@ -98,6 +98,39 @@ class IterationTracker:
 
 
 @dataclass
+class SyncLedger:
+    """Control-loop synchronization telemetry.
+
+    Counts the two quantities the batched/sharded execution engines are
+    designed to minimize: device->host round-trips (``host_syncs``) and
+    cross-device collectives (``collectives``).  Program dispatches are
+    recorded separately — dispatching is asynchronous and free of
+    synchronization; only an explicit :meth:`sync` blocks.
+
+    The counters are *host-side*: ``collectives`` is advanced by the caller
+    from trace-time collective-site counts x runtime pass counts (see
+    :mod:`repro.shard.engine`), not by hooking XLA.
+    """
+
+    host_syncs: int = 0
+    collectives: int = 0
+    dispatches: int = 0
+
+    def sync(self, tree):
+        """Fetch ``tree`` to host (one blocking round-trip), counted."""
+        import jax
+
+        self.host_syncs += 1
+        return jax.device_get(tree)
+
+    def dispatched(self, n: int = 1) -> None:
+        self.dispatches += n
+
+    def collected(self, n: int = 1) -> None:
+        self.collectives += n
+
+
+@dataclass
 class CostModel:
     """Deterministic time source for simulation and tests.
 

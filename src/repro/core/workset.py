@@ -78,10 +78,23 @@ def score_all(ws: WorkSet, w: jnp.ndarray) -> jnp.ndarray:
     flattened view — the batched form of :func:`approx_oracle` used by
     telemetry, benchmarks and shared-``w`` (tau-nice) passes.
     """
-    p, b, _ = flat_view(ws)
+    p, b, valid = flat_view(ws)
     n, cap = ws.valid.shape
-    scores = ops.plane_scores(p, w, b).reshape(n, cap)
-    return jnp.where(ws.valid, scores, NEG_INF)
+    return ops.plane_scores_masked(p, w, b, valid,
+                                   neg=NEG_INF).reshape(n, cap)
+
+
+def gather_blocks(ws: WorkSet, ids: jnp.ndarray) -> WorkSet:
+    """Sub-workset of the rows in ``ids`` (tau-nice chunks, shard views).
+
+    The result is a fully valid :class:`WorkSet` of shape ``(len(ids), cap,
+    ...)``, so the batched operations (:func:`score_all`,
+    :func:`approx_oracle_all`) apply unchanged — this is how the tau-nice
+    straggler fallback scores every sampled block's cache in one
+    ``plane_scores`` launch instead of one launch per block.
+    """
+    return WorkSet(planes=ws.planes[ids], valid=ws.valid[ids],
+                   last_active=ws.last_active[ids])
 
 
 def approx_oracle_all(ws: WorkSet, w: jnp.ndarray):

@@ -1,2 +1,3 @@
-from .stragglers import StragglerPolicy, simulate_oracle_outcomes  # noqa: F401
+from .stragglers import (StragglerPolicy, fallback_planes,  # noqa: F401
+                         simulate_oracle_outcomes)
 from .restart import RestartManager  # noqa: F401

@@ -8,6 +8,14 @@ still monotone in the dual and costs O(|W_i| d) locally.  Training never
 blocks on the slowest node; it just takes a slightly smaller step for the
 affected blocks, and the TTL machinery keeps their caches warm.
 
+The fallback itself is **batched**: all sampled blocks' caches are scored
+at the chunk's shared stale ``w`` in a single
+``workset.approx_oracle_all`` call over the gathered sub-workset (one
+``plane_scores`` kernel launch), instead of one scoring program per missed
+block.  ``fallback_planes`` is that one-call path; both the host reference
+(``core.distributed.host_tau_nice_pass``) and the fused shard engine
+(``repro.shard``) fold its output wherever the ``done`` mask is False.
+
 ``simulate_oracle_outcomes`` models per-node oracle latencies (lognormal
 with a straggler tail) against a deadline, for CI and for the benchmark
 that quantifies the dual-progress cost of fallbacks.
@@ -17,6 +25,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 import numpy as np
+
+# One definition: both the host reference loop and the fused shard engine
+# fold exactly this batched fallback (core.distributed.tau_chunk).
+from ..core.distributed import fallback_planes  # noqa: F401
 
 
 @dataclass(frozen=True)

@@ -32,6 +32,22 @@ def plane_scores(planes, w, offsets, **kw):
     return ref.plane_scores_ref(planes, w, offsets)
 
 
+def plane_scores_masked(planes, w, offsets, valid, *, neg=-1e30, **kw):
+    """Masked plane scoring over a flattened (local) cache view.
+
+    ``planes (m, d)``, ``offsets (m,)``, ``valid (m,)`` is exactly the
+    layout of ``workset.flat_view`` — of the *whole* cache on one device,
+    or of one shard's ``(n_local*cap, d)`` slice inside a ``shard_map``
+    body.  The kernel is launched on the caller's view as-is: per-shard
+    tiles, no implicit gather or collective, so calling this under
+    ``shard_map`` scores only the local planes (the mesh engine reduces
+    the resulting per-shard partials itself, with its single per-pass
+    ``psum``).  Invalid slots score ``neg`` so they never win an argmax.
+    """
+    scores = plane_scores(planes, w, offsets, **kw)
+    return jax.numpy.where(valid, scores, jax.numpy.float32(neg))
+
+
 def gram(planes, **kw):
     if use_pallas():
         return _gram.gram(planes, **kw)

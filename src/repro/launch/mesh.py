@@ -1,22 +1,131 @@
-"""Production mesh construction.
+"""Mesh construction and validation.
 
-A function (not a module-level constant) so importing this module never
-touches jax device state.  Shapes: one v5e pod = (data=16, model=16) = 256
-chips; the multi-pod config adds a leading 'pod' axis (2, 16, 16) = 512.
-DP runs over ('pod','data'), TP/EP over 'model'; FSDP weight sharding maps
-'embed' onto the data axis (see repro.models.common.DEFAULT_RULES).
+Functions (not module-level constants) so importing this module never
+touches jax device state.  Two families:
+
+  * **production meshes** — one v5e pod = (data=16, model=16) = 256 chips;
+    the multi-pod config adds a leading 'pod' axis (2, 16, 16) = 512.  DP
+    runs over ('pod','data'), TP/EP over 'model'; FSDP weight sharding
+    maps 'embed' onto the data axis (see repro.models.common
+    .DEFAULT_RULES).
+  * **data meshes** — the 1-D block-sharding meshes the MP-BCFW shard
+    engine (:mod:`repro.shard`) runs on: training blocks and the plane
+    cache partitioned over ``'data'``, everything else replicated.
+
+``force_host_platform_device_count`` lets CPU-only CI present N fake
+devices (the standard ``--xla_force_host_platform_device_count`` XLA
+flag); it must run before jax initializes its backends, and fails loudly
+instead of silently handing back a 1-device mesh when called too late.
 """
 from __future__ import annotations
 
+import os
+from typing import Optional, Sequence
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
+
+HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def backends_initialized() -> bool:
+    """True once jax has instantiated a backend (device count is locked)."""
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:  # pragma: no cover - private-API drift
+        # Fall back to assuming initialized: the helper then refuses to
+        # edit XLA_FLAGS late rather than editing them ineffectively.
+        return True
+
+
+def force_host_platform_device_count(n: int) -> bool:
+    """Make the CPU platform present ``n`` devices (CI / examples helper).
+
+    Rewrites ``XLA_FLAGS`` (replacing any existing
+    ``--xla_force_host_platform_device_count`` setting).  Returns True if
+    the flag was applied, False if the backend already presents exactly
+    ``n`` devices; raises RuntimeError when jax initialized with a
+    different count — at that point the flag can no longer take effect and
+    the caller must set it in a fresh process (see the ``mesh``-marked
+    subprocess tests).
+    """
+    if n < 1:
+        raise ValueError(f"device count must be >= 1, got {n}")
+    if backends_initialized():
+        have = jax.local_device_count()
+        if have == n:
+            return False
+        raise RuntimeError(
+            f"jax already initialized with {have} device(s); "
+            f"{HOST_DEVICE_FLAG}={n} must be set before the first device "
+            f"query (start a fresh process, call this helper first)")
+    parts = [p for p in os.environ.get("XLA_FLAGS", "").split()
+             if not p.startswith(HOST_DEVICE_FLAG + "=")]
+    parts.append(f"{HOST_DEVICE_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(parts)
+    return True
+
+
+def validate_mesh(mesh: Mesh, required_axes: Sequence[str], *,
+                  id_ordered: bool = False) -> None:
+    """Check axis names and device ordering of a constructed mesh.
+
+    Guards the invariants the shard engine relies on: the required named
+    axes exist, every device appears exactly once, and all devices share
+    one platform.  ``id_ordered=True`` additionally requires device ids in
+    ascending order along the flattened mesh — so block shard ``s`` always
+    lands on the same device across processes and restarts (data meshes
+    want this; topology-optimized production meshes from ``jax.make_mesh``
+    legitimately reorder devices and must not require it).
+    """
+    missing = [a for a in required_axes if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(
+            f"mesh axes {mesh.axis_names} are missing required {missing}")
+    devs = list(mesh.devices.flat)
+    ids = [d.id for d in devs]
+    if len(set(ids)) != len(ids):
+        raise ValueError("mesh contains duplicate devices")
+    platforms = {d.platform for d in devs}
+    if len(platforms) != 1:
+        raise ValueError(f"mesh mixes device platforms: {platforms}")
+    if id_ordered and ids != sorted(ids):
+        raise ValueError(
+            f"mesh device order is not id-ascending: {ids}; "
+            "shard->device placement would not be deterministic")
+
+
+def make_data_mesh(n_devices: Optional[int] = None, *,
+                   axis: str = "data") -> Mesh:
+    """1-D block-sharding mesh over the first ``n_devices`` local devices.
+
+    This is the mesh :mod:`repro.shard` runs on: blocks (and the flattened
+    plane cache) partitioned over ``axis``, weights replicated.  Defaults
+    to all local devices; devices are taken in ascending-id order and the
+    result is validated.
+    """
+    devs = sorted(jax.devices(), key=lambda d: d.id)
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"requested {n} devices, have {len(devs)} "
+            f"(hint: {HOST_DEVICE_FLAG}={n} before jax init, or "
+            "launch.mesh.force_host_platform_device_count)")
+    mesh = Mesh(np.asarray(devs[:n]), (axis,))
+    validate_mesh(mesh, (axis,), id_ordered=True)
+    return mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    mesh = jax.make_mesh(shape, axes)
+    validate_mesh(mesh, axes)
+    return mesh
 
 
-def make_host_mesh():
+def make_host_mesh() -> Mesh:
     """Degenerate 1x1 mesh on the local device (smoke tests, examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))

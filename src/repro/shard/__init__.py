@@ -1,0 +1,70 @@
+"""repro.shard — multi-device MP-BCFW execution engine on ``jax.shard_map``.
+
+Layout
+------
+The engine partitions the *block* dimension over a 1-D mesh axis
+(``'data'``, see :func:`repro.launch.mesh.make_data_mesh`) and replicates
+everything that is O(d):
+
+  =====================  ======================  =======================
+  state                  shape                   placement
+  =====================  ======================  =======================
+  ``inner.phi_i``        ``(n, d+1)``            ``P('data', None)``
+  ``ws.planes``          ``(n, cap, d+1)``       ``P('data', None, None)``
+  ``ws.valid / last_*``  ``(n, cap)``            ``P('data', None)``
+  ``inner.phi`` / ``w``  ``(d+1,)``              replicated
+  ``avg.*``, counters    ``(d+1,)`` / scalars    replicated
+  =====================  ======================  =======================
+
+Because ``n`` is a multiple of the shard count, the flattened
+``(n*cap, d)`` plane-cache view the ``kernels.ops.plane_scores``
+dispatcher consumes stays shard-aligned: each device scores its own
+``(n_local*cap, d)`` slice with a purely local kernel launch
+(:func:`repro.kernels.ops.plane_scores_masked`), never a gather.
+
+Communication pattern
+---------------------
+An *approximate* pass (``sharded_approx_pass`` /
+``sharded_multi_approx_pass``) runs every shard's blocks sequentially
+against the shard's local plane cache at the pass-entry (stale) ``phi``,
+accumulating a local dual-delta ``sum_i (phi_i' - phi_i)`` and a local
+averaging track.  **Exactly one ``lax.psum`` per pass** recombines them
+(the delta and the pmean'd averaging track ride in the same reduction);
+one more psum before the first pass totals the cached-plane count for the
+slope rule's cost estimate.  Recombination is *damped* on S > 1 shards:
+every block step is scaled by 1/S, so the combined state is the convex
+mean of the S per-shard iterates — each shard-sequential walk is monotone
+from the shared stale phi and F is concave, hence the sharded pass never
+decreases the dual either (an undamped sum of stale deltas can).  The
+paper's slope stopping rule runs on device on the psum-reduced (hence
+bitwise replicated) scalars, so the ``lax.while_loop`` trip count can
+never diverge across devices.  On a 1-shard mesh the recombination is
+exactly the sequential update, so the engine reproduces the single-device
+:func:`repro.core.mpbcfw.multi_approx_pass` bit for bit.
+
+A *tau-nice* pass (``sharded_tau_nice_pass``) is one fused device program
+for the whole epoch: for each chunk of ``tau`` sampled blocks it gathers
+the examples, runs the max-oracles **in parallel at the shared stale
+``w``** under ``shard_map`` (``tau/S`` oracles per shard, zero
+communication), scores every sampled block's cached fallback in one
+batched ``workset.approx_oracle_all`` call, and folds the ``done``-masked
+planes in sequentially with exact line search.  The host dispatches the
+epoch and syncs **at most once per outer iteration** (to read telemetry);
+:class:`~repro.core.selection.SyncLedger` counts both syncs and
+collectives so tests and benchmarks can assert the contract.
+
+This layer is the prerequisite for multi-host MP-BCFW: all cross-device
+traffic is already explicit (one psum per approximate pass, oracle
+sharding with no traffic), so scaling out is a mesh-construction change,
+not an algorithm change.
+"""
+from .engine import (ShardEngine, sharded_approx_pass,  # noqa: F401
+                     sharded_multi_approx_pass, sharded_tau_nice_pass)
+from .layout import (mp_state_specs, mp_state_shardings,  # noqa: F401
+                     place_mp_state, validate_layout)
+
+__all__ = [
+    "ShardEngine", "sharded_approx_pass", "sharded_multi_approx_pass",
+    "sharded_tau_nice_pass", "mp_state_specs", "mp_state_shardings",
+    "place_mp_state", "validate_layout",
+]

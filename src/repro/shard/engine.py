@@ -1,0 +1,361 @@
+"""The shard_map MP-BCFW engine: sharded approximate and tau-nice passes.
+
+See the package docstring for the layout and communication pattern.  The
+engine owns the compiled programs and their telemetry; it never blocks on
+the device except in :meth:`ShardEngine.read` /
+:meth:`ShardEngine.read_stats`, so a caller can assert "at most one host
+sync per outer iteration" directly off the :class:`~repro.core.selection.
+SyncLedger`.
+
+Module-level ``sharded_*`` functions mirror the single-device API
+(:func:`repro.core.mpbcfw.multi_approx_pass`, the late
+``core.distributed`` host loop) for drop-in use; they cache one
+:class:`ShardEngine` per (problem, mesh, lam).  ``ShardEngine`` itself is
+the primary API.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core import distributed, mpbcfw, workset as ws_ops
+from ..core.bcfw import line_search_gamma
+from ..core.mpbcfw import MPState
+from ..core.selection import SyncLedger
+from ..core.ssvm import dual_value, weights_of
+from ..core.types import (ApproxBatchStats, SlopeClock, SSVMProblem,
+                          WorkSet)
+from . import layout
+from .telemetry import CollectiveTrace
+
+
+def _local_schedule(perm: jnp.ndarray, lo, n_local: int) -> jnp.ndarray:
+    """This shard's subsequence of a global visit order, as local ids.
+
+    ``perm`` is a permutation of all ``n`` blocks; exactly ``n_local`` of
+    its entries fall into this shard's contiguous id range
+    ``[lo, lo + n_local)``.  They are extracted *in visit order* (stable:
+    sort the masked positions), so a 1-shard mesh walks exactly ``perm``.
+    """
+    n = perm.shape[0]
+    mask = (perm >= lo) & (perm < lo + n_local)
+    pos = jnp.where(mask, jnp.arange(n), n)
+    order = jnp.sort(pos)[:n_local]
+    return perm[order] - lo
+
+
+class ShardEngine:
+    """Compiled multi-device MP-BCFW passes over one (problem, mesh, lam).
+
+    All state tensors follow :mod:`repro.shard.layout`; use
+    :meth:`init_state` (or :meth:`place` on an existing state) before the
+    first pass.  Programs are built lazily and cached; telemetry lives in
+    ``self.ledger`` (host syncs / dispatches / runtime collectives) and
+    ``self.collectives`` (trace-time psum sites per program).
+    """
+
+    def __init__(self, problem: SSVMProblem, mesh: Mesh, *, lam: float,
+                 axis: str = "data"):
+        self.problem = problem
+        self.mesh = mesh
+        self.lam = float(lam)
+        self.axis = axis
+        self.n_shards = layout.validate_layout(problem.n, mesh, axis)
+        self.n_local = problem.n // self.n_shards
+        self.ledger = SyncLedger()
+        self.collectives = CollectiveTrace()
+        self._multi: Dict[bool, callable] = {}
+        self._tau_prog = None
+        self._begin = jax.jit(mpbcfw.begin_iteration, static_argnums=(1,))
+
+    # -- state management ---------------------------------------------------
+
+    def init_state(self, cap: int) -> MPState:
+        return self.place(mpbcfw.init_mp_state(self.problem, cap))
+
+    def place(self, mp: MPState) -> MPState:
+        return layout.place_mp_state(mp, self.mesh, self.axis)
+
+    def begin_iteration(self, mp: MPState, ttl: int) -> MPState:
+        self.ledger.dispatched()
+        return self._begin(mp, ttl)
+
+    # -- sync points (the only blocking calls) ------------------------------
+
+    def read(self, tree):
+        """Fetch any device value(s) to host — one counted sync."""
+        return self.ledger.sync(tree)
+
+    def read_stats(self, stats: ApproxBatchStats) -> ApproxBatchStats:
+        """Fetch multi-pass telemetry (the iteration's single sync) and
+        charge the program's runtime collectives to the ledger."""
+        st = self.ledger.sync(stats)
+        self.ledger.collected(
+            self.collectives.count("multi_approx", "setup")
+            + int(st.passes_run)
+            * self.collectives.count("multi_approx", "pass"))
+        return st
+
+    @property
+    def psums_per_approx_pass(self) -> int:
+        """Per-pass collective count of the compiled multi-pass program."""
+        return self.collectives.count("multi_approx", "pass")
+
+    @property
+    def setup_psums(self) -> int:
+        return self.collectives.count("multi_approx", "setup")
+
+    # -- approximate passes -------------------------------------------------
+
+    def _build_multi(self, run_all: bool):
+        mesh, axis, lam = self.mesh, self.axis, self.lam
+        S, n_local = self.n_shards, self.n_local
+        n = self.problem.n
+        trace = self.collectives
+
+        def local_prog(mp: MPState, perms, clock: SlopeClock):
+            # Runs per shard: mp leaves are the LOCAL slices of the layout
+            # (phi_i (n_local, d+1), cache (n_local, cap, .)), O(d) state
+            # is replicated.  Exactly one psum per pass, one for setup.
+            trace.begin("multi_approx")
+            lo = jax.lax.axis_index(axis) * n_local
+            f_entry = dual_value(mp.inner.phi, lam)
+            local_planes = jnp.sum(mp.ws.valid).astype(jnp.int32)
+            total_planes = trace.psum(local_planes, axis, tag="setup")
+            cost = (clock.plane_cost
+                    * jnp.maximum(total_planes, 1).astype(jnp.float32))
+            # Approximate passes never insert/evict planes: the cache
+            # tensors are loop constants, only last_active is carried.
+            planes_c, valid_c = mp.ws.planes, mp.ws.valid
+
+            def step(carry, perm):
+                phi, phi_i, last_active, bar, k = carry
+                phi_i0 = phi_i  # pass-entry blocks, for damped recombine
+                sched = _local_schedule(perm, lo, n_local)
+
+                def body(c, i):
+                    phi_run, phi_i, last_active, bar, k = c
+                    w = weights_of(phi_run, lam)
+                    view = WorkSet(planes=planes_c, valid=valid_c,
+                                   last_active=last_active)
+                    plane, slot, _ = ws_ops.approx_oracle(view, i, w)
+                    phi_i_old = phi_i[i]
+                    gamma = line_search_gamma(phi_run, phi_i_old, plane, lam)
+                    phi_i_new = (1.0 - gamma) * phi_i_old + gamma * plane
+                    phi_run = phi_run + (phi_i_new - phi_i_old)
+                    phi_i = phi_i.at[i].set(phi_i_new)
+                    last_active = last_active.at[i, slot].set(mp.outer_it)
+                    kf = k.astype(jnp.float32)
+                    bar = (kf / (kf + 2.0)) * bar + (2.0 / (kf + 2.0)) * phi_run
+                    # k counts *global* approximate steps: each local step
+                    # runs concurrently with S-1 peers, so advance by S —
+                    # after a pass k has moved by n, matching the stored
+                    # k_approx += n below (and the sequential schedule on
+                    # one shard).
+                    return (phi_run, phi_i, last_active, bar, k + S), None
+
+                (phi_run, phi_i, last_active, bar, k), _ = jax.lax.scan(
+                    body, (phi, phi_i, last_active, bar, k), sched)
+                delta = phi_run - phi
+                # THE per-pass collective: dual delta + pmean'd averaging
+                # track ride one reduction.
+                red = trace.psum(jnp.stack([delta, bar / S]), axis,
+                                 tag="pass")
+                if S == 1:
+                    # psum is exact identity on one shard (red[0] == delta,
+                    # so red[0] - delta == 0 elementwise): keep the
+                    # collective live but return the bitwise sequential
+                    # running phi.
+                    phi_new = phi_run + (red[0] - delta)
+                else:
+                    # Damped (1/S convex-average) recombination.  Each
+                    # shard's sequential walk is monotone in F from the
+                    # shared stale phi; scaling every block step by 1/S
+                    # makes the recombined state the *mean* of the S
+                    # per-shard iterates (phi stays == sum_i phi_i, each
+                    # phi_i a convex combination), and F is concave, so
+                    # F(mean) >= mean F >= F(entry): the sharded pass
+                    # never decreases the dual either.  Every shard adds
+                    # the same reduced total to the same stale phi, so the
+                    # slope-rule scalars below are bitwise equal across
+                    # devices and the while_loop trip count cannot
+                    # diverge (collective deadlock safety).
+                    phi_new = phi + red[0] / S
+                    phi_i = phi_i0 + (phi_i - phi_i0) / S
+                bar_new = red[1]
+                return ((phi_new, phi_i, last_active, bar_new, k),
+                        dual_value(phi_new, lam))
+
+            carry0 = (mp.inner.phi, mp.inner.phi_i, mp.ws.last_active,
+                      mp.avg.bar_approx, mp.avg.k_approx)
+            carry, t_end, stats = mpbcfw.slope_batched_loop(
+                carry0, perms, clock, step=step, f_entry=f_entry,
+                cost=cost, planes_per_pass=total_planes, run_all=run_all)
+            trace.commit()
+            phi, phi_i, last_active, bar_a, _ = carry
+            done_steps = stats.passes_run * n
+            inner = mp.inner._replace(
+                phi=phi, phi_i=phi_i,
+                n_approx=mp.inner.n_approx + done_steps)
+            avg = mp.avg._replace(bar_approx=bar_a,
+                                  k_approx=mp.avg.k_approx + done_steps)
+            ws = mp.ws._replace(last_active=last_active)
+            return (mp._replace(inner=inner, ws=ws, avg=avg),
+                    clock._replace(t=t_end), stats)
+
+        mp_specs = layout.mp_state_specs(self.axis)
+        clock_specs = SlopeClock(t0=P(), f0=P(), t=P(), plane_cost=P())
+        stats_specs = ApproxBatchStats(
+            duals=P(None), times=P(None), planes=P(None), ran=P(None),
+            passes_run=P(), f_entry=P(), more=P())
+        return jax.jit(shard_map(
+            local_prog, mesh=mesh,
+            in_specs=(mp_specs, P(None, None), clock_specs),
+            out_specs=(mp_specs, clock_specs, stats_specs),
+            check_rep=False))
+
+    def multi_approx_pass(self, mp: MPState, perms: jnp.ndarray,
+                          clock: SlopeClock, *, run_all: bool = False
+                          ) -> Tuple[MPState, SlopeClock, ApproxBatchStats]:
+        """shard_map twin of :func:`repro.core.mpbcfw.multi_approx_pass`.
+
+        Dispatches without blocking; pair with :meth:`read_stats` for the
+        iteration's single host sync.
+        """
+        if run_all not in self._multi:
+            self._multi[run_all] = self._build_multi(run_all)
+        self.ledger.dispatched()
+        return self._multi[run_all](mp, perms, clock)
+
+    def approx_pass(self, mp: MPState, perm: jnp.ndarray) -> MPState:
+        """One sharded approximate pass (fixed budget, no stopping rule)."""
+        clock = mpbcfw.make_slope_clock(0.0, 0.0, 0.0, 0.0)
+        mp, _, _ = self.multi_approx_pass(mp, perm[None], clock,
+                                          run_all=True)
+        return mp
+
+    # -- tau-nice (exact) pass ----------------------------------------------
+
+    def _build_tau(self):
+        mesh, axis, lam = self.mesh, self.axis, self.lam
+        oracle = self.problem.oracle
+        data_specs = jax.tree_util.tree_map(lambda _: P(),
+                                            self.problem.data)
+
+        def local_oracles(data, w, ids_loc):
+            # Per shard: tau/S max-oracles at the shared stale w, examples
+            # gathered from the replicated data copy — zero communication.
+            batch = jax.tree_util.tree_map(lambda a: a[ids_loc], data)
+            return jax.vmap(lambda ex: oracle(w, ex))(batch)
+
+        oracle_stage = shard_map(
+            local_oracles, mesh=mesh,
+            in_specs=(data_specs, P(None), P(axis)),
+            out_specs=P(axis, None), check_rep=False)
+
+        def epoch(data, mp: MPState, chunk_ids, done):
+            def chunk(mp_c, inp):
+                ids, ok = inp
+                return distributed.tau_chunk(
+                    oracle, data, mp_c, ids, ok, lam,
+                    oracle_stage=oracle_stage), None
+
+            mp, _ = jax.lax.scan(chunk, mp, (chunk_ids, done))
+            return mp
+
+        return jax.jit(epoch)
+
+    def tau_nice_pass(self, mp: MPState, perm: jnp.ndarray, tau: int,
+                      done: Optional[jnp.ndarray] = None) -> MPState:
+        """One epoch of tau-nice MP-BCFW as a single fused device program.
+
+        ``perm`` is split into ``n // tau`` chunks; per chunk the tau
+        max-oracles run in parallel at the chunk's stale ``w`` (sharded
+        over the mesh), stragglers (``done`` False) fall back to their
+        cached plane from the batched scoring, and the planes fold in
+        sequentially with exact line search — monotone in F per fold.
+        Dispatch only; no host sync.
+        """
+        n = self.problem.n
+        if n % tau:
+            raise ValueError(f"n={n} not divisible by tau={tau}")
+        if tau % self.n_shards:
+            raise ValueError(
+                f"tau={tau} not divisible by {self.n_shards} shards")
+        chunk_ids = perm.reshape(-1, tau)
+        if done is None:
+            done = jnp.ones(chunk_ids.shape, bool)
+        else:
+            done = done.reshape(chunk_ids.shape)
+        if self._tau_prog is None:
+            self._tau_prog = self._build_tau()
+        self.ledger.dispatched()
+        return self._tau_prog(self.problem.data, mp, chunk_ids, done)
+
+    # -- one outer iteration, zero intermediate syncs -----------------------
+
+    def outer_iteration(self, mp: MPState, perm: jnp.ndarray,
+                        approx_perms: jnp.ndarray, clock: SlopeClock, *,
+                        tau: int, ttl: int,
+                        done: Optional[jnp.ndarray] = None,
+                        run_all: bool = False):
+        """TTL eviction + tau-nice exact epoch + slope-ruled approximate
+        batch, dispatched back to back.  The caller reads the returned
+        stats with :meth:`read_stats` — that is the iteration's one and
+        only host sync."""
+        mp = self.begin_iteration(mp, ttl)
+        mp = self.tau_nice_pass(mp, perm, tau, done)
+        return self.multi_approx_pass(mp, approx_perms, clock,
+                                      run_all=run_all)
+
+
+# -- module-level API (engine cache) ----------------------------------------
+
+# Identity-keyed LRU of recently used engines.  Bounded: each entry pins a
+# problem (data included), a mesh, and compiled programs, so an unbounded
+# cache would leak across hyper-parameter sweeps.  Long-lived callers
+# should hold a ShardEngine themselves.
+_ENGINE_CACHE_SIZE = 8
+_ENGINES: "OrderedDict[tuple, ShardEngine]" = OrderedDict()
+
+
+def _engine(problem: SSVMProblem, mesh: Mesh, lam: float,
+            axis: str) -> ShardEngine:
+    key = (id(problem.oracle), id(problem.data), id(mesh), float(lam), axis)
+    eng = _ENGINES.get(key)
+    if eng is None:
+        eng = _ENGINES[key] = ShardEngine(problem, mesh, lam=lam, axis=axis)
+    _ENGINES.move_to_end(key)
+    while len(_ENGINES) > _ENGINE_CACHE_SIZE:
+        _ENGINES.popitem(last=False)
+    return eng
+
+
+def sharded_approx_pass(problem: SSVMProblem, mp: MPState,
+                        perm: jnp.ndarray, *, lam: float, mesh: Mesh,
+                        axis: str = "data") -> MPState:
+    """One approximate pass over all blocks, sharded over ``mesh``."""
+    return _engine(problem, mesh, lam, axis).approx_pass(mp, perm)
+
+
+def sharded_multi_approx_pass(problem: SSVMProblem, mp: MPState,
+                              perms: jnp.ndarray, clock: SlopeClock, *,
+                              lam: float, mesh: Mesh,
+                              run_all: bool = False, axis: str = "data"):
+    """Slope-ruled batch of approximate passes, sharded over ``mesh``."""
+    return _engine(problem, mesh, lam, axis).multi_approx_pass(
+        mp, perms, clock, run_all=run_all)
+
+
+def sharded_tau_nice_pass(problem: SSVMProblem, mp: MPState,
+                          perm: jnp.ndarray, *, lam: float, tau: int,
+                          mesh: Mesh, done: Optional[jnp.ndarray] = None,
+                          axis: str = "data") -> MPState:
+    """One fused tau-nice epoch, oracles sharded over ``mesh``."""
+    return _engine(problem, mesh, lam, axis).tau_nice_pass(mp, perm, tau,
+                                                           done)

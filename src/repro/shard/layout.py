@@ -1,0 +1,60 @@
+"""Mesh-sharded placement of the MP-BCFW state (see package docstring).
+
+Blocks — and with them the per-block dual planes ``phi_i`` and the whole
+``(n, cap, d+1)`` plane cache — are partitioned over one named mesh axis;
+the O(d) summaries (``phi``, averaging tracks, counters) are replicated.
+``mp_state_specs`` is the single source of truth: the ``shard_map``
+in/out specs of the engine and the ``NamedSharding`` placement of
+:func:`place_mp_state` are the same tree.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.mpbcfw import MPState
+from ..core.types import AveragingState, BCFWState, WorkSet
+
+
+def validate_layout(n: int, mesh: Mesh, axis: str = "data") -> int:
+    """Check the mesh carries ``axis`` and that it divides ``n`` blocks.
+
+    Returns the shard count.  An indivisible block count would force
+    ragged shards (or padding with phantom blocks whose updates must be
+    masked everywhere); the data generators all use power-of-two ``n``, so
+    we keep the engine honest and simple by requiring divisibility.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh axes {mesh.axis_names} do not include {axis!r}; build "
+            "one with repro.launch.mesh.make_data_mesh")
+    n_shards = mesh.shape[axis]
+    if n % n_shards != 0:
+        raise ValueError(
+            f"n={n} blocks not divisible by {n_shards} shards on "
+            f"axis {axis!r}")
+    return n_shards
+
+
+def mp_state_specs(axis: str = "data") -> MPState:
+    """PartitionSpec pytree for an :class:`~repro.core.mpbcfw.MPState`."""
+    return MPState(
+        inner=BCFWState(phi_i=P(axis, None), phi=P(None),
+                        n_exact=P(), n_approx=P()),
+        ws=WorkSet(planes=P(axis, None, None), valid=P(axis, None),
+                   last_active=P(axis, None)),
+        avg=AveragingState(bar_exact=P(None), bar_approx=P(None),
+                           k_exact=P(), k_approx=P()),
+        outer_it=P(),
+    )
+
+
+def mp_state_shardings(mesh: Mesh, axis: str = "data") -> MPState:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  mp_state_specs(axis))
+
+
+def place_mp_state(mp: MPState, mesh: Mesh, axis: str = "data") -> MPState:
+    """Commit an MPState to the mesh layout (blocks sharded, rest repl.)."""
+    validate_layout(mp.inner.phi_i.shape[0], mesh, axis)
+    return jax.device_put(mp, mp_state_shardings(mesh, axis))

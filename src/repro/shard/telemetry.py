@@ -1,0 +1,46 @@
+"""Trace-time collective accounting for the shard engine.
+
+The acceptance contract of :mod:`repro.shard` is stated in collective
+counts — *one* ``psum`` per approximate pass, *one* setup reduction per
+multi-pass program, *zero* collectives issued from the host per tau-nice
+epoch beyond the program itself.  Rather than trusting a docstring, the
+engine routes every collective through :class:`CollectiveTrace`, which
+counts call sites per program **as the program is traced** (tracing runs
+the Python body exactly once per compilation, so each recorded count is
+the per-execution site count of the compiled program — a site inside the
+pass loop executes once per pass).  Runtime totals are then
+``setup + passes_run * per_pass`` and are pushed into the host-side
+:class:`repro.core.selection.SyncLedger` together with the host-sync
+count.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+
+class CollectiveTrace:
+    """Counts the engine's psum call sites, grouped by (program, tag)."""
+
+    def __init__(self) -> None:
+        self.sites: Dict[str, Dict[str, int]] = {}
+        self._active: Dict[str, int] = {}
+
+    def begin(self, program: str) -> None:
+        """Start recording a fresh trace of ``program`` (called first in
+        the traced body, so retraces overwrite instead of accumulate)."""
+        self._active = {}
+        self._program = program
+
+    def psum(self, x, axis: str, *, tag: str):
+        """``lax.psum`` with a trace-time site count."""
+        self._active[tag] = self._active.get(tag, 0) + 1
+        return jax.lax.psum(x, axis)
+
+    def commit(self) -> None:
+        """Finish the trace started by :meth:`begin`."""
+        self.sites[self._program] = dict(self._active)
+
+    def count(self, program: str, tag: str) -> int:
+        return self.sites.get(program, {}).get(tag, 0)

@@ -30,6 +30,16 @@ def rng():
 
 
 @pytest.fixture(scope="session")
+def data_mesh():
+    """Session-wide 1-D 'data' mesh over whatever devices this process has
+    (1 on CPU-only CI) — the mesh the shard-engine tests run on.  The
+    multi-device behaviour is covered by the ``mesh``-marked subprocess
+    test, which forces 8 host devices before jax initializes."""
+    from repro.launch.mesh import make_data_mesh
+    return make_data_mesh()
+
+
+@pytest.fixture(scope="session")
 def multiclass_problem():
     from repro.core.oracles import multiclass
     from repro.data import synthetic

@@ -19,7 +19,7 @@ def test_tau_nice_monotone_and_converges(multiclass_problem):
     for _ in range(4):
         mp = mpbcfw.begin_iteration(mp, ttl=10)
         perm = jnp.asarray(r.permutation(prob.n))
-        mp = distributed.tau_nice_pass(prob, mp, perm, lam, tau=8)
+        mp = distributed.host_tau_nice_pass(prob, mp, perm, lam, tau=8)
         f = float(dual_value(mp.inner.phi, lam))
         assert f >= f_prev - 1e-7
         f_prev = f
@@ -37,7 +37,7 @@ def test_tau_nice_matches_sequential_quality(multiclass_problem):
     for _ in range(4):
         perm = jnp.asarray(r.permutation(prob.n))
         mp_seq = mpbcfw.jit_exact_pass(prob, mp_seq, perm, lam=lam)
-        mp_par = distributed.tau_nice_pass(prob, mp_par, perm, lam, tau=8)
+        mp_par = distributed.host_tau_nice_pass(prob, mp_par, perm, lam, tau=8)
     f_seq = float(dual_value(mp_seq.inner.phi, lam))
     f_par = float(dual_value(mp_par.inner.phi, lam))
     assert f_par > 0.6 * f_seq
@@ -51,12 +51,12 @@ def test_straggler_fallback_monotone(multiclass_problem):
     r = np.random.RandomState(0)
     # warm the caches first
     mp = mpbcfw.begin_iteration(mp, ttl=10)
-    mp = distributed.tau_nice_pass(prob, mp,
+    mp = distributed.host_tau_nice_pass(prob, mp,
                                    jnp.asarray(r.permutation(prob.n)),
                                    lam, tau=8)
     f0 = float(dual_value(mp.inner.phi, lam))
     done = jnp.asarray(r.rand(prob.n // 8, 8) > 0.5)
-    mp = distributed.tau_nice_pass(prob, mp,
+    mp = distributed.host_tau_nice_pass(prob, mp,
                                    jnp.asarray(r.permutation(prob.n)),
                                    lam, tau=8, done=done)
     f1 = float(dual_value(mp.inner.phi, lam))

@@ -1,0 +1,328 @@
+"""repro.shard: mesh factory, sharded-pass equivalence, telemetry
+contracts (one psum per approximate pass, at most one host sync per outer
+iteration), straggler fallback batching, and the multi-device subprocess
+case."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed, mpbcfw, workset
+from repro.core.ssvm import dual_value, weights_of
+from repro.ft import fallback_planes
+from repro.launch import mesh as mesh_mod
+from repro.shard import ShardEngine, sharded_approx_pass
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _warm_mp(prob, lam, cap=8, seed=0):
+    rng = np.random.RandomState(seed)
+    mp = mpbcfw.init_mp_state(prob, cap=cap)
+    mp = mpbcfw.begin_iteration(mp, ttl=10)
+    mp = mpbcfw.jit_exact_pass(prob, mp,
+                               jnp.asarray(rng.permutation(prob.n)), lam=lam)
+    return mp, rng
+
+
+# ---------------------------------------------------------------------------
+# Mesh factory
+
+
+def test_data_mesh_axes_and_order():
+    mesh = mesh_mod.make_data_mesh()
+    assert mesh.axis_names == ("data",)
+    assert mesh.shape["data"] == jax.local_device_count()
+    mesh_mod.validate_mesh(mesh, ("data",), id_ordered=True)
+
+
+def test_data_mesh_rejects_overask():
+    with pytest.raises(ValueError, match="force_host_platform_device_count"):
+        mesh_mod.make_data_mesh(jax.local_device_count() + 1)
+
+
+def test_validate_mesh_missing_axis():
+    mesh = mesh_mod.make_data_mesh()
+    with pytest.raises(ValueError, match="missing required"):
+        mesh_mod.validate_mesh(mesh, ("data", "model"))
+
+
+def test_force_host_device_count_after_init():
+    """Once jax initialized, the helper is a no-op for the current count
+    and refuses (loudly) to lie about any other count."""
+    have = jax.local_device_count()
+    assert mesh_mod.force_host_platform_device_count(have) is False
+    with pytest.raises(RuntimeError, match="already initialized"):
+        mesh_mod.force_host_platform_device_count(have + 7)
+
+
+# ---------------------------------------------------------------------------
+# 1-device-mesh equivalence: sharded passes == single-device programs
+
+
+def test_sharded_multi_approx_bitwise_matches_single_device(
+        multiclass_problem, data_mesh):
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    eng = ShardEngine(prob, data_mesh, lam=lam)
+    mp, rng = _warm_mp(prob, lam)
+    perms = jnp.asarray(np.stack([rng.permutation(prob.n)
+                                  for _ in range(4)]))
+    clock = mpbcfw.make_slope_clock(
+        0.0, float(dual_value(mp.inner.phi, lam)), float(prob.n), 1e-3)
+    mp_seq, clock_seq, st_seq = mpbcfw.jit_multi_approx_pass(
+        prob, mp, perms, clock, lam=lam, run_all=True)
+    mp_shd, clock_shd, st_shd = eng.multi_approx_pass(
+        eng.place(mp), perms, clock, run_all=True)
+    for a, b in zip(jax.tree_util.tree_leaves(mp_seq),
+                    jax.tree_util.tree_leaves(mp_shd)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(st_seq.duals),
+                                  np.asarray(st_shd.duals))
+    np.testing.assert_array_equal(np.asarray(st_seq.planes),
+                                  np.asarray(st_shd.planes))
+    assert float(clock_seq.t) == float(clock_shd.t)
+
+
+def test_sharded_slope_decisions_match_single_device(multiclass_problem,
+                                                     data_mesh):
+    """Same stopping rule, same telemetry: the sharded engine must run
+    exactly the passes the single-device program runs, then stop."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    eng = ShardEngine(prob, data_mesh, lam=lam)
+    mp, rng = _warm_mp(prob, lam)
+    perms = jnp.asarray(np.stack([rng.permutation(prob.n)
+                                  for _ in range(32)]))
+    f0 = float(dual_value(mp.inner.phi, lam))
+    clock = mpbcfw.make_slope_clock(0.0, f0, float(prob.n), 1e-3)
+    _, _, st_seq = mpbcfw.jit_multi_approx_pass(prob, mp, perms, clock,
+                                                lam=lam)
+    _, _, st_shd = eng.multi_approx_pass(eng.place(mp), perms, clock)
+    assert int(st_seq.passes_run) == int(st_shd.passes_run)
+    assert 1 <= int(st_shd.passes_run) < 32
+    assert bool(st_seq.more) == bool(st_shd.more)
+    np.testing.assert_array_equal(np.asarray(st_seq.ran),
+                                  np.asarray(st_shd.ran))
+    np.testing.assert_array_equal(np.asarray(st_seq.duals),
+                                  np.asarray(st_shd.duals))
+
+
+def test_sharded_tau_nice_bitwise_matches_host_reference(multiclass_problem,
+                                                         data_mesh):
+    """Fused epoch program == host chunk loop, including straggler
+    epochs: dual trajectory, plane caches, counters — bit for bit."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    eng = ShardEngine(prob, data_mesh, lam=lam)
+    rng = np.random.RandomState(0)
+    mp_h = mpbcfw.init_mp_state(prob, cap=8)
+    mp_s = eng.place(mpbcfw.init_mp_state(prob, cap=8))
+    for ep in range(3):
+        mp_h = mpbcfw.begin_iteration(mp_h, ttl=10)
+        mp_s = eng.begin_iteration(mp_s, ttl=10)
+        perm = jnp.asarray(rng.permutation(prob.n))
+        done = (jnp.asarray(rng.rand(prob.n // 8, 8) > 0.3)
+                if ep == 2 else None)
+        mp_h = distributed.host_tau_nice_pass(prob, mp_h, perm, lam, tau=8,
+                                              done=done)
+        mp_s = eng.tau_nice_pass(mp_s, perm, tau=8, done=done)
+        assert float(dual_value(mp_h.inner.phi, lam)) == \
+            float(dual_value(mp_s.inner.phi, lam))
+    for a, b in zip(jax.tree_util.tree_leaves(mp_h),
+                    jax.tree_util.tree_leaves(mp_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_driver_trajectory_matches_single_device(multiclass_problem,
+                                                         data_mesh):
+    """Full outer-iteration loop (tau-nice exact pass + slope-ruled
+    approximate batch): the engine reproduces the single-device driver's
+    dual trajectory exactly on a 1-device mesh, with one host sync per
+    outer iteration."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    eng = ShardEngine(prob, data_mesh, lam=lam)
+    rng = np.random.RandomState(1)
+    mp_h = mpbcfw.init_mp_state(prob, cap=8)
+    mp_s = eng.place(mpbcfw.init_mp_state(prob, cap=8))
+    syncs0 = eng.ledger.host_syncs
+    f_h = f_s = 0.0
+    for it in range(3):
+        perm = jnp.asarray(rng.permutation(prob.n))
+        perms = jnp.asarray(np.stack([rng.permutation(prob.n)
+                                      for _ in range(8)]))
+        clock = mpbcfw.make_slope_clock(0.0, f_h, float(prob.n), 1e-3)
+        # host / single-device path
+        mp_h = mpbcfw.begin_iteration(mp_h, ttl=10)
+        mp_h = distributed.host_tau_nice_pass(prob, mp_h, perm, lam, tau=8)
+        mp_h, _, st_h = mpbcfw.jit_multi_approx_pass(prob, mp_h, perms,
+                                                     clock, lam=lam)
+        # sharded engine, one dispatch chain + one sync
+        mp_s, _, st_s = eng.outer_iteration(mp_s, perm, perms, clock,
+                                            tau=8, ttl=10)
+        st_s = eng.read_stats(st_s)
+        assert eng.ledger.host_syncs - syncs0 == it + 1
+        f_h = float(dual_value(mp_h.inner.phi, lam))
+        f_s = float(dual_value(mp_s.inner.phi, lam))
+        assert f_h == f_s
+        assert int(st_h.passes_run) == int(st_s.passes_run)
+
+
+# ---------------------------------------------------------------------------
+# tau-staleness monotonicity & batched straggler fallback
+
+
+def test_stale_fold_ins_never_decrease_dual(multiclass_problem):
+    """Planes computed at a stale w, folded one at a time much later:
+    every fold-in is an exact line search at the *current* phi, so the
+    dual never decreases regardless of staleness."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    mp, rng = _warm_mp(prob, lam)
+    w_stale = weights_of(mp.inner.phi, lam)
+    ids = jnp.asarray(rng.permutation(prob.n)[:16])
+    planes = distributed.parallel_oracles(prob, w_stale, ids)
+    fbp, fbs, _ = fallback_planes(mp.ws, ids, w_stale)
+    f = float(dual_value(mp.inner.phi, lam))
+    for j in range(16):
+        ok = jnp.asarray([j % 3 != 0])  # mix oracle folds and fallbacks
+        mp = distributed.jit_fold_planes(
+            mp, ids[j:j + 1], planes[j:j + 1], fbp[j:j + 1], fbs[j:j + 1],
+            ok, lam=lam)
+        f_new = float(dual_value(mp.inner.phi, lam))
+        assert f_new >= f - 1e-7
+        f = f_new
+    assert f > 0.0
+
+
+def test_fallback_planes_matches_per_block_scoring(multiclass_problem):
+    """The batched fallback (one approx_oracle_all over the gathered
+    sub-workset) == scoring each missed block one at a time at the same
+    shared stale w."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    mp, rng = _warm_mp(prob, lam)
+    w = weights_of(mp.inner.phi, lam)
+    ids = jnp.asarray(rng.permutation(prob.n)[:8])
+    planes_b, slots_b, scores_b = fallback_planes(mp.ws, ids, w)
+    for j, i in enumerate(np.asarray(ids)):
+        plane, slot, score = workset.approx_oracle(mp.ws, jnp.asarray(i), w)
+        np.testing.assert_array_equal(np.asarray(planes_b[j]),
+                                      np.asarray(plane))
+        assert int(slots_b[j]) == int(slot)
+        assert float(scores_b[j]) == float(score)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry contracts
+
+
+def test_one_psum_per_approx_pass(multiclass_problem, data_mesh):
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    eng = ShardEngine(prob, data_mesh, lam=lam)
+    mp, rng = _warm_mp(prob, lam)
+    perms = jnp.asarray(np.stack([rng.permutation(prob.n)
+                                  for _ in range(4)]))
+    clock = mpbcfw.make_slope_clock(
+        0.0, float(dual_value(mp.inner.phi, lam)), float(prob.n), 1e-3)
+    _, _, stats = eng.multi_approx_pass(eng.place(mp), perms, clock,
+                                        run_all=True)
+    st = eng.read_stats(stats)
+    assert eng.psums_per_approx_pass == 1
+    assert eng.setup_psums == 1
+    # runtime collective total = setup + one per executed pass
+    assert eng.ledger.collectives == 1 + int(st.passes_run)
+
+
+def test_tau_nice_pass_is_one_dispatch_no_sync(multiclass_problem,
+                                               data_mesh):
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    eng = ShardEngine(prob, data_mesh, lam=lam)
+    mp = eng.init_state(cap=8)
+    mp = eng.begin_iteration(mp, ttl=10)
+    d0, s0 = eng.ledger.dispatches, eng.ledger.host_syncs
+    mp = eng.tau_nice_pass(mp, jnp.asarray(np.random.RandomState(0)
+                                           .permutation(prob.n)), tau=8)
+    assert eng.ledger.dispatches == d0 + 1   # whole epoch, one program
+    assert eng.ledger.host_syncs == s0      # and zero host syncs
+    assert float(dual_value(mp.inner.phi, lam)) > 0.0
+
+
+def test_removed_host_loop_raises_with_directions():
+    with pytest.raises(RuntimeError, match="repro.shard"):
+        distributed.tau_nice_pass()
+
+
+# ---------------------------------------------------------------------------
+# Multi-device (8 forced host devices, fresh subprocess)
+
+_MULTIDEV_SCRIPT = textwrap.dedent("""
+    from repro.launch.mesh import force_host_platform_device_count, \\
+        make_data_mesh
+    assert force_host_platform_device_count(8)
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import mpbcfw
+    from repro.core.ssvm import dual_value
+    from repro.data import synthetic
+    from repro.core.oracles import multiclass
+    from repro.shard import ShardEngine
+
+    assert jax.local_device_count() == 8
+    x, y = synthetic.usps_like(n=48, f=12, num_classes=5, seed=0)
+    prob = multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), 5)
+    lam = 1.0 / prob.n
+    eng = ShardEngine(prob, make_data_mesh(8), lam=lam)
+    rng = np.random.RandomState(0)
+    mp = eng.init_state(cap=8)
+    f_prev = 0.0
+    for ep in range(3):
+        perm = jnp.asarray(rng.permutation(prob.n))
+        done = jnp.asarray(rng.rand(prob.n // 8, 8) > 0.2)
+        perms = jnp.asarray(np.stack([rng.permutation(prob.n)
+                                      for _ in range(6)]))
+        clock = mpbcfw.make_slope_clock(0.0, f_prev, float(prob.n), 1e-3)
+        mp, clock, stats = eng.outer_iteration(mp, perm, perms, clock,
+                                               tau=8, ttl=10, done=done,
+                                               run_all=True)
+        st = eng.read_stats(stats)
+        # sharded approximate passes stay monotone (damped recombination)
+        duals = [float(st.f_entry)] + [float(d) for d in
+                                       np.asarray(st.duals)]
+        assert all(b >= a - 1e-7 for a, b in zip(duals, duals[1:])), duals
+        f = float(dual_value(mp.inner.phi, lam))
+        assert f >= f_prev - 1e-7
+        f_prev = f
+        assert eng.ledger.host_syncs == ep + 1
+    assert f_prev > 0.0
+    assert eng.psums_per_approx_pass == 1
+    # the dual state stayed consistent under sharding: phi == sum_i phi_i
+    drift = float(jnp.abs(mp.inner.phi
+                          - jnp.sum(mp.inner.phi_i, axis=0)).max())
+    assert drift < 1e-5, drift
+    print("MULTIDEV_OK", f_prev)
+""")
+
+
+@pytest.mark.mesh
+def test_engine_on_eight_forced_devices():
+    """End-to-end on a real 8-shard mesh: monotone duals, telemetry
+    contracts, state consistency.  Fresh subprocess because the device
+    count must be forced before jax initializes."""
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MULTIDEV_OK" in out.stdout
