@@ -6,8 +6,10 @@ Prints ``name,value,derived`` CSV rows:
   * fig5_*   working-set size trajectory
   * fig6_*   approximate passes per exact pass
   * hostsync_* control-loop host syncs per outer iteration (batched vs old)
-  * shard_*  sharded-engine smoke: psums per approximate pass, collectives
-             and host syncs per outer iteration vs the host-loop equivalent
+  * shard_*  sharded-engine smoke: psums per approximate pass, collectives,
+             host syncs and program dispatches per outer iteration vs the
+             host-loop equivalent — including ``shard_driver_*`` rows for
+             the public ``driver.run(algo='mpbcfw-shard')`` path
   * kernel_* hot-path microbenchmarks (us per call)
   * dryrun_/roofline_ summary of the (arch x shape) grid
 

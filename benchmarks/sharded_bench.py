@@ -1,9 +1,9 @@
 """Sharded-engine smoke scenario: collective & host-sync accounting.
 
-Runs a few outer iterations of the :mod:`repro.shard` engine (tau-nice
-exact epoch + slope-ruled approximate batch, all device-resident) on the
-USPS-like scenario over the local data mesh and reports, per paper-style
-CSV row:
+Runs a few outer iterations of the :mod:`repro.shard` engine (one fused
+program per outer iteration: TTL eviction + tau-nice exact epoch +
+slope-ruled approximate batch) on the USPS-like scenario over the local
+data mesh and reports, per paper-style CSV row:
 
   * ``shard_psums_per_approx_pass``   trace-time collective sites in the
     compiled pass body (the engine's design contract: exactly 1),
@@ -13,7 +13,12 @@ CSV row:
     (1), with the host-chunk-loop equivalent — ``n/tau`` oracle/fold
     dispatcher syncs plus one per approximate pass — as the derived
     column,
-  * ``shard_dual_final``              end dual, sanity that it trains.
+  * ``shard_dispatches_per_iter``     program dispatches per outer
+    iteration (1: the whole iteration is one fused program),
+  * ``shard_dual_final``              end dual, sanity that it trains,
+  * ``shard_driver_*``                the same contract through the public
+    entry point — ``driver.run(algo='mpbcfw-shard')`` — host syncs and
+    dispatches per outer iteration straight off the TraceRows.
 
 Mesh size is whatever the process has (1 device under plain CI; run with
 ``--xla_force_host_platform_device_count=8`` to smoke the 8-shard path).
@@ -57,20 +62,39 @@ def main(smoke: bool = True):
 
     syncs_per_iter = eng.ledger.host_syncs / ITERS
     coll_per_iter = eng.ledger.collectives / ITERS
+    disp_per_iter = eng.ledger.dispatches / ITERS
     # what the removed host chunk loop would have paid per iteration:
     # one dispatch+sync per tau-chunk, plus one sync per approximate pass
     host_loop_equiv = N // TAU + passes_total / ITERS
     f_final = float(dual_value(mp.inner.phi, lam))
+
+    # -- the same contract through the public entry point ------------------
+    from repro.core import driver
+    from repro.core.selection import CostModel
+
+    res = driver.run(prob, driver.RunConfig(
+        lam=lam, algo="mpbcfw-shard", mesh=make_data_mesh(),
+        max_iters=ITERS, cap=CAP, max_approx_passes=BATCH,
+        cost_model=CostModel(plane_cost=1e-3)))
+    drv_syncs = sum(r.host_syncs for r in res.trace) / ITERS
+    drv_disp = sum(r.dispatches for r in res.trace) / ITERS
+
     return [
         ("shard_psums_per_approx_pass", eng.psums_per_approx_pass,
          eng.setup_psums),
         ("shard_collectives_per_iter", coll_per_iter,
          passes_total / ITERS),
         ("shard_host_syncs_per_iter", syncs_per_iter, host_loop_equiv),
+        ("shard_dispatches_per_iter", disp_per_iter, ITERS),
         ("shard_hostsync_reduction_x",
          round(host_loop_equiv / max(syncs_per_iter, 1e-9), 2),
          eng.n_shards),
         ("shard_dual_final", f_final, ITERS),
+        ("shard_driver_host_syncs_per_iter", drv_syncs, drv_disp),
+        ("shard_driver_dispatches_per_iter", drv_disp,
+         res.trace[-1].approx_passes),
+        ("shard_driver_dual_final", res.trace[-1].dual,
+         res.trace[-1].gap),
     ]
 
 

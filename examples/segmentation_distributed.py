@@ -4,12 +4,16 @@ simulated stragglers whose oracle results are replaced by their cached
 planes from one *batched* scoring call (the paper's approximate oracle
 doubling as the fault-tolerance path).
 
-Each epoch is one fused device program (parallel oracles at the chunk's
-stale w under shard_map, sequential monotone fold-in) followed by a
-slope-ruled batch of sharded approximate passes (one psum per pass); the
-host syncs exactly once per epoch to read telemetry.  The old host chunk
-loop (`repro.core.distributed.tau_nice_pass`) is gone and fails with
-directions here.
+Each outer iteration is ONE fused device program — TTL eviction, the
+tau-nice exact epoch (parallel oracles at the chunk's stale w under
+shard_map, sequential monotone fold-in), and the slope-ruled batch of
+sharded approximate passes (one psum per pass), with the slope clock
+seeded from the on-device dual; the host dispatches once and syncs once
+per iteration to read telemetry.  The old host chunk loop
+(`repro.core.distributed.tau_nice_pass`) is gone and fails with
+directions here.  (The same loop is reachable from the public entry
+point as `driver.run(algo="mpbcfw-shard")`; this example drives the
+engine directly to show the straggler `done` mask.)
 
 On a multi-device host (or with ``--xla_force_host_platform_device_count=N``
 set before jax initializes; see ``repro.launch.mesh``) the same script

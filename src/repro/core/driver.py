@@ -5,12 +5,25 @@ slope rule, TTL eviction, and telemetry.  This is the piece of the paper
 that is inherently an *online control loop* — everything it schedules is a
 compiled JAX program.
 
-The MP-BCFW control loop is *batched*: all approximate passes of an outer
-iteration run inside one device-resident :func:`repro.core.mpbcfw.
-multi_approx_pass` program whose stopping rule (the paper's slope
-criterion) is evaluated on device, so the driver performs exactly **one**
-host sync per outer iteration (previously ``n_approx_passes + 1``).  The
-returned per-pass telemetry is replayed into the host-side
+The MP-BCFW control loop is *engine-generic*: :func:`run` drives an engine
+object that owns the compiled programs, and the loop itself only draws
+permutations, reads telemetry, and keeps the books.  Two engines exist:
+
+  * :class:`_FusedEngine` — single device.  The whole outer iteration
+    (TTL eviction, exact pass — plain or Sec-3.5 Gram —, on-device
+    slope-clock seeding, and the slope-ruled batch of approximate passes)
+    is **one** program: :func:`repro.core.mpbcfw.outer_iteration`.
+  * :class:`_ShardDriverEngine` — a :class:`repro.shard.ShardEngine`
+    over a 1-D data mesh (``RunConfig.mesh``, defaulting to all local
+    devices via :func:`repro.launch.mesh.ensure_data_mesh`); the exact
+    pass is the tau-nice epoch (``RunConfig.tau``, default = #shards).
+
+Sync accounting: the driver performs exactly **one program dispatch and
+one host sync per outer iteration** (more only if an iteration's
+approximate passes overflow ``approx_batch``), counted honestly through
+:class:`repro.core.selection.SyncLedger` and reported per iteration in
+``TraceRow.host_syncs`` / ``TraceRow.dispatches``.  The returned per-pass
+telemetry is replayed into the host-side
 :class:`~repro.core.selection.IterationTracker`:
 
   * wall clock (production): the measured iteration time is attributed
@@ -20,26 +33,37 @@ returned per-pass telemetry is replayed into the host-side
     clock driven by #oracle-calls and #cached-planes replays the per-pass
     plane counts exactly, reproducing the paper's USPS/OCR/HorseSeg
     regimes deterministically on any host.
+
+Evaluation (:func:`_evaluate`: primal/dual/gap, n — 2n with averaging —
+extra oracle calls per iteration) is telemetry, **not** part of the
+control loop: its wall time is measured and subtracted from every clock
+reading (``_Clock.exclude``), and its device fetches are not charged to
+the ledger.
 """
 from __future__ import annotations
 
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from . import bcfw, gram, mpbcfw, subgradient
 from .averaging import extract, init_averaging
-from .selection import CostModel, IterationTracker, attribute_wall_time
+from .selection import (CostModel, IterationTracker, SyncLedger,
+                        attribute_wall_time)
 from .ssvm import batched_oracle, dual_value, init_state, weights_of
 from .types import SSVMProblem
-from .workset import sizes
 
 ALGORITHMS = ("fw", "ssg", "bcfw", "bcfw-avg",
-              "mpbcfw", "mpbcfw-avg", "mpbcfw-gram")
+              "mpbcfw", "mpbcfw-avg", "mpbcfw-gram",
+              "mpbcfw-shard", "mpbcfw-shard-avg", "mpbcfw-shard-tau")
+
+_SHARD_ALGOS = ("mpbcfw-shard", "mpbcfw-shard-avg", "mpbcfw-shard-tau")
 
 
 @dataclass
@@ -54,6 +78,10 @@ class RunConfig:
     gram_steps: int = 10    # repeats per block for the Sec-3.5 scheme
     seed: int = 0
     cost_model: Optional[CostModel] = None  # None => wall clock
+    mesh: Optional[Mesh] = None  # mpbcfw-shard*: 1-D data mesh (None =>
+    #                              launch.mesh.ensure_data_mesh default)
+    tau: Optional[int] = None    # mpbcfw-shard*: tau-nice chunk size
+    #                              (None => #shards; must divide n)
 
 
 @dataclass
@@ -66,9 +94,11 @@ class TraceRow:
     dual: float
     gap: float
     primal_avg: float       # primal at the averaged iterate (Sec. 3.6)
-    ws_mean: float          # mean working-set size (Fig. 5)
+    ws_mean: float          # mean working-set size over the iteration's
+    #                         passes (Fig. 5) — one statistic in all paths
     approx_passes: int      # approximate passes this iteration (Fig. 6)
     host_syncs: int = 1     # device->host syncs in the control loop
+    dispatches: int = 1     # program dispatches in the control loop
 
 
 @dataclass
@@ -79,28 +109,48 @@ class RunResult:
 
 
 class _Clock:
+    """Wall/virtual time source honoring the "evaluation is not timed"
+    contract: durations measured inside :meth:`exclude` are subtracted
+    from every reading, so ``TraceRow.time`` never includes the
+    n-oracle-call evaluation sweeps.  A :class:`CostModel` clock is
+    immune by construction (it only advances through explicit charges)."""
+
     def __init__(self, cost_model: Optional[CostModel]):
         self.cm = cost_model
         self._wall0 = time.perf_counter()
+        self._excluded = 0.0
+
+    def _wall(self) -> float:
+        return time.perf_counter() - self._wall0 - self._excluded
+
+    @contextmanager
+    def exclude(self):
+        """Context whose wall time never reaches trace rows."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._excluded += time.perf_counter() - t0
 
     def exact(self, n_calls: int) -> float:
         if self.cm is not None:
             return self.cm.exact_pass(n_calls)
-        return time.perf_counter() - self._wall0
+        return self._wall()
 
     def approx(self, total_planes: int) -> float:
         if self.cm is not None:
             return self.cm.approx_pass(total_planes)
-        return time.perf_counter() - self._wall0
+        return self._wall()
 
     def now(self) -> float:
         if self.cm is not None:
             return self.cm.now
-        return time.perf_counter() - self._wall0
+        return self._wall()
 
 
 def _evaluate(problem: SSVMProblem, phi, avg, lam: float):
-    """Primal/dual/gap (+ primal at the averaged iterate).  Not timed."""
+    """Primal/dual/gap (+ primal at the averaged iterate).  Not timed:
+    callers wrap this in ``clock.exclude()``."""
     w = weights_of(phi, lam)
     planes = batched_oracle(problem, w)
     hinge = jnp.sum(planes[:, :-1] @ w + planes[:, -1])
@@ -138,73 +188,105 @@ def _fit_pass_costs(xs: List[float], ys: List[float]):
     return a, b
 
 
-def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
-    if cfg.algo not in ALGORITHMS:
-        raise ValueError(f"unknown algorithm {cfg.algo!r}")
-    rng = np.random.RandomState(cfg.seed)
-    clock = _Clock(cfg.cost_model)
-    res = RunResult()
+# ---------------------------------------------------------------------------
+# MP-BCFW execution engines (the strategy the control loop drives)
+
+
+class _FusedEngine:
+    """Single-device engine: each outer iteration is one fused program
+    (:func:`repro.core.mpbcfw.outer_iteration`), with the Sec-3.5 Gram
+    cache threaded through the program when configured."""
+
+    def __init__(self, problem: SSVMProblem, lam: float, *,
+                 use_gram: bool = False, gram_steps: int = 10):
+        self.problem, self.lam = problem, lam
+        self.use_gram, self.gram_steps = use_gram, gram_steps
+        self.gc = None
+        self.ledger = SyncLedger()
+
+    def init_state(self, cap: int):
+        if self.use_gram:
+            self.gc = gram.init_gram(self.problem.n, cap)
+        return mpbcfw.init_mp_state(self.problem, cap)
+
+    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
+        """Dispatch one fused outer iteration (no blocking)."""
+        self.ledger.dispatched()
+        mp, self.gc, clock, stats = mpbcfw.jit_outer_iteration(
+            self.problem, mp, self.gc, perm, perms, clock,
+            lam=self.lam, ttl=ttl, steps=self.gram_steps)
+        return mp, clock, stats
+
+    def continue_passes(self, mp, perms, clock):
+        """Overflow batch of approximate passes (rare: only when an
+        iteration runs more than ``approx_batch`` passes)."""
+        self.ledger.dispatched()
+        return mpbcfw.jit_multi_approx_pass(
+            self.problem, mp, perms, clock, lam=self.lam, gc=self.gc,
+            steps=self.gram_steps)
+
+    def read_stats(self, stats):
+        return self.ledger.sync(stats)
+
+
+class _ShardDriverEngine:
+    """Adapter driving :class:`repro.shard.ShardEngine` through the same
+    strategy interface: the exact pass is the tau-nice epoch, fused with
+    the approximate batch into one program on the mesh."""
+
+    def __init__(self, problem: SSVMProblem, lam: float, mesh: Mesh,
+                 tau: Optional[int]):
+        from ..shard import ShardEngine  # lazy: keep core importable alone
+        self.eng = ShardEngine(problem, mesh, lam=lam)
+        self.tau = int(tau) if tau is not None else self.eng.n_shards
+        self.ledger = self.eng.ledger
+
+    def init_state(self, cap: int):
+        return self.eng.init_state(cap)
+
+    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
+        return self.eng.outer_iteration(mp, perm, perms, clock,
+                                        tau=self.tau, ttl=ttl)
+
+    def continue_passes(self, mp, perms, clock):
+        return self.eng.multi_approx_pass(mp, perms, clock)
+
+    def read_stats(self, stats):
+        return self.eng.read_stats(stats)
+
+
+def _make_engine(problem: SSVMProblem, cfg: RunConfig):
+    if cfg.algo in _SHARD_ALGOS:
+        from ..launch.mesh import ensure_data_mesh
+        if cfg.algo == "mpbcfw-shard-tau" and cfg.tau is None:
+            raise ValueError(
+                "mpbcfw-shard-tau requires RunConfig.tau (the tau-nice "
+                "chunk size); use mpbcfw-shard for the default tau=#shards")
+        return _ShardDriverEngine(problem, cfg.lam,
+                                  ensure_data_mesh(cfg.mesh), cfg.tau)
+    return _FusedEngine(problem, cfg.lam,
+                        use_gram=(cfg.algo == "mpbcfw-gram"),
+                        gram_steps=cfg.gram_steps)
+
+
+def _draw_perms(rng, n: int, k: int) -> jnp.ndarray:
+    if k == 0:
+        return jnp.zeros((0, n), jnp.int32)
+    return jnp.asarray(np.stack([rng.permutation(n) for _ in range(k)]))
+
+
+def _run_mp(problem: SSVMProblem, cfg: RunConfig, rng, clock: _Clock,
+            res: RunResult, engine) -> RunResult:
+    """The MP-BCFW control loop, generic over the execution engine.
+
+    Per outer iteration the loop dispatches one fused program and blocks
+    exactly once on its telemetry; extra (dispatch, sync) pairs occur only
+    when the slope rule wants more than ``approx_batch`` passes.
+    """
     n, lam = problem.n, cfg.lam
-
-    if cfg.algo == "fw":
-        phi = jnp.zeros((problem.d + 1,), jnp.float32)
-        step = jax.jit(lambda p: bcfw.fw_pass(problem, p, lam))
-        for it in range(cfg.max_iters):
-            phi = step(phi)
-            phi.block_until_ready()
-            t = clock.exact(n)
-            primal, dual, _ = _evaluate(problem, phi, None, lam)
-            res.trace.append(TraceRow(it, (it + 1) * n, 0, t, primal, dual,
-                                      primal - dual, primal, 0.0, 0))
-        res.w = np.asarray(weights_of(phi, lam))
-        return res
-
-    if cfg.algo == "ssg":
-        w = jnp.zeros((problem.d,), jnp.float32)
-        t_ctr = jnp.ones((), jnp.int32)
-        for it in range(cfg.max_iters):
-            perm = jnp.asarray(rng.permutation(n))
-            w, t_ctr = subgradient.jit_ssg_pass(problem, w, t_ctr, perm,
-                                                lam=lam)
-            w.block_until_ready()
-            t = clock.exact(n)
-            planes = batched_oracle(problem, w)
-            primal = float(0.5 * lam * jnp.dot(w, w)
-                           + jnp.sum(planes[:, :-1] @ w + planes[:, -1]))
-            res.trace.append(TraceRow(it, (it + 1) * n, 0, t, primal,
-                                      float("nan"), float("nan"), primal,
-                                      0.0, 0))
-        res.w = np.asarray(w)
-        return res
-
-    if cfg.algo in ("bcfw", "bcfw-avg"):
-        state = init_state(problem)
-        avg = init_averaging(problem.d)
-        for it in range(cfg.max_iters):
-            perm = jnp.asarray(rng.permutation(n))
-            state, avg = bcfw.jit_exact_pass(problem, state, avg, perm,
-                                             lam=lam)
-            state.phi.block_until_ready()
-            t = clock.exact(n)
-            use_avg = avg if cfg.algo.endswith("avg") else None
-            primal, dual, primal_avg = _evaluate(problem, state.phi,
-                                                 use_avg, lam)
-            res.trace.append(TraceRow(it, int(state.n_exact), 0, t, primal,
-                                      dual, primal - dual, primal_avg,
-                                      0.0, 0))
-        res.w = np.asarray(weights_of(state.phi, lam))
-        res.w_avg = np.asarray(weights_of(extract(avg, lam), lam))
-        return res
-
-    # --- MP-BCFW family -------------------------------------------------
-    # The control loop syncs with the device exactly once per outer
-    # iteration: the exact pass and the whole batch of approximate passes
-    # are dispatched without blocking, and a single device_get of the
-    # batched telemetry drives all host-side bookkeeping.
-    mp = mpbcfw.init_mp_state(problem, cfg.cap)
-    gc = gram.init_gram(n, cfg.cap) if cfg.algo == "mpbcfw-gram" else None
-    tracker = IterationTracker()
     cm = cfg.cost_model
+    mp = engine.init_state(cfg.cap)
+    tracker = IterationTracker()
     # Per-pass cost constants for the on-device slope rule.  CostModel mode
     # uses the model's exact constants (so the device decisions match a
     # host replay verbatim); wall-clock mode starts from defaults and
@@ -215,51 +297,46 @@ def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
     wall_y: List[float] = []   # measured iteration seconds
     f_end = float(dual_value(mp.inner.phi, lam))
     for it in range(cfg.max_iters):
-        mp = mpbcfw.begin_iteration(mp, cfg.ttl)
+        led0 = engine.ledger.counts()
         f_start = f_end     # TTL eviction does not change phi, hence F
         t0 = clock.now()
         tracker.start(t0, f_start)
-
-        perm = jnp.asarray(rng.permutation(n))
-        if gc is not None:
-            mp, gc = _exact_pass_gram(problem, mp, gc, perm, lam)
-        else:
-            mp = mpbcfw.jit_exact_pass(problem, mp, perm, lam=lam)
 
         plane_cost = cm.plane_cost if cm is not None else est_plane
         # Device times are relative to the iteration start (t0 = 0): the
         # slope rule is shift-invariant, and absolute virtual times would
         # outgrow float32 resolution on long runs (t + plane_cost == t).
+        # f0 here is a host-side seed only — the fused program re-seeds it
+        # from the on-device dual at iteration entry (bitwise the same
+        # value, with no host sync needed to obtain it).
         clock_dev = mpbcfw.make_slope_clock(0.0, f_start, est_exact,
                                             plane_cost)
-        duals_all: List[float] = []
-        planes_all: List[int] = []
-        syncs = 0
-        f_exact = None
-        while len(duals_all) < cfg.max_approx_passes:
+        perm = jnp.asarray(rng.permutation(n))
+        # Permutations for passes the device rule skips are drawn but
+        # unused, so the schedule is deterministic per (seed,
+        # approx_batch); approx_batch=1 reproduces the unbatched
+        # loop's RNG stream exactly.
+        perms = _draw_perms(rng, n, min(cfg.approx_batch,
+                                        cfg.max_approx_passes))
+        mp, clock_dev, stats = engine.outer_iteration(mp, perm, perms,
+                                                      clock_dev, ttl=cfg.ttl)
+        st = engine.read_stats(stats)  # the iteration's single host sync
+        f_exact = float(st.f_entry)
+        ws_total = int(st.ws_total)
+        k = int(st.passes_run)
+        duals_all = [float(x) for x in st.duals[:k]]
+        planes_all = [int(x) for x in st.planes[:k]]
+        while bool(st.more) and len(duals_all) < cfg.max_approx_passes:
             batch = min(cfg.approx_batch,
                         cfg.max_approx_passes - len(duals_all))
-            # Permutations for passes the device rule skips are drawn but
-            # unused, so the schedule is deterministic per (seed,
-            # approx_batch); approx_batch=1 reproduces the unbatched
-            # loop's RNG stream exactly.
-            perms = jnp.asarray(
-                np.stack([rng.permutation(n) for _ in range(batch)]))
-            mp, clock_dev, stats = mpbcfw.jit_multi_approx_pass(
-                problem, mp, perms, clock_dev, lam=lam, gc=gc,
-                steps=cfg.gram_steps)
-            st = jax.device_get(stats)  # the iteration's single host sync
-            syncs += 1
-            if f_exact is None:
-                f_exact = float(st.f_entry)
+            perms = _draw_perms(rng, n, batch)
+            mp, clock_dev, stats = engine.continue_passes(mp, perms,
+                                                          clock_dev)
+            st = engine.read_stats(stats)
             k = int(st.passes_run)
             duals_all += [float(x) for x in st.duals[:k]]
             planes_all += [int(x) for x in st.planes[:k]]
-            if not bool(st.more):
-                break
-        if f_exact is None:  # cfg.max_approx_passes == 0
-            f_exact = float(dual_value(mp.inner.phi, lam))
-            syncs += 1
+        led1 = engine.ledger.counts()
 
         # Replay the device-chosen pass schedule through the host clock
         # (the tracker mirrors what the device rule saw — telemetry and
@@ -295,44 +372,104 @@ def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
                     est_plane = max(sum(durs[1:]) / tot, 1e-12)
 
         n_approx_passes = len(duals_all)
-        ws_mean = (planes_all[-1] / n if planes_all
-                   else float(jnp.mean(sizes(mp.ws))))
+        # One statistic in both branches (Fig. 5): the mean working-set
+        # size over the iteration's passes, straight from the synced
+        # telemetry — no extra device fetch.  Approximate passes never
+        # insert or evict planes, so every pass of the iteration sees the
+        # post-exact-pass sets and the per-pass mean is exactly ws_total/n.
+        ws_mean = ws_total / n
         use_avg = mp.avg if cfg.algo.endswith("avg") else None
-        primal, dual, primal_avg = _evaluate(problem, mp.inner.phi,
-                                             use_avg, lam)
+        with clock.exclude():
+            primal, dual, primal_avg = _evaluate(problem, mp.inner.phi,
+                                                 use_avg, lam)
         f_end = dual
         res.trace.append(TraceRow(
             it, int(mp.inner.n_exact), int(mp.inner.n_approx), clock.now(),
             primal, dual, primal - dual, primal_avg,
-            ws_mean, n_approx_passes, syncs))
+            ws_mean, n_approx_passes,
+            led1[0] - led0[0], led1[2] - led0[2]))
     res.w = np.asarray(weights_of(mp.inner.phi, lam))
     res.w_avg = np.asarray(weights_of(extract(mp.avg, lam), lam))
     return res
 
 
-import functools
+def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
+    if cfg.algo not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {cfg.algo!r}")
+    if cfg.approx_batch < 1:
+        # A zero-pass program reports more=True forever (the rule never
+        # ran), which would spin the overflow loop without terminating.
+        raise ValueError("approx_batch must be >= 1 (use "
+                         "max_approx_passes=0 to disable approximate "
+                         "passes)")
+    if cfg.mesh is not None and cfg.algo not in _SHARD_ALGOS:
+        if cfg.algo == "mpbcfw-gram":
+            raise ValueError(
+                "mpbcfw-gram cannot run on a mesh: the Sec-3.5 Gram cache "
+                "has no sharded twin yet (ROADMAP gap).  Drop "
+                "RunConfig.mesh, or pick one of "
+                f"{_SHARD_ALGOS} without the Gram scheme.")
+        raise ValueError(
+            f"RunConfig.mesh is only consumed by {_SHARD_ALGOS}; "
+            f"{cfg.algo!r} runs single-device")
+    rng = np.random.RandomState(cfg.seed)
+    clock = _Clock(cfg.cost_model)
+    res = RunResult()
+    n, lam = problem.n, cfg.lam
 
+    if cfg.algo == "fw":
+        phi = jnp.zeros((problem.d + 1,), jnp.float32)
+        step = jax.jit(lambda p: bcfw.fw_pass(problem, p, lam))
+        for it in range(cfg.max_iters):
+            phi = step(phi)
+            phi.block_until_ready()
+            t = clock.exact(n)
+            with clock.exclude():
+                primal, dual, _ = _evaluate(problem, phi, None, lam)
+            res.trace.append(TraceRow(it, (it + 1) * n, 0, t, primal, dual,
+                                      primal - dual, primal, 0.0, 0))
+        res.w = np.asarray(weights_of(phi, lam))
+        return res
 
-@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
-def _jit_exact_pass_gram(oracle, n, data, mp, gc, perm, *, lam):
-    """Exact pass variant that also maintains the Gram cache."""
-    from .averaging import update_average
+    if cfg.algo == "ssg":
+        w = jnp.zeros((problem.d,), jnp.float32)
+        t_ctr = jnp.ones((), jnp.int32)
+        for it in range(cfg.max_iters):
+            perm = jnp.asarray(rng.permutation(n))
+            w, t_ctr = subgradient.jit_ssg_pass(problem, w, t_ctr, perm,
+                                                lam=lam)
+            w.block_until_ready()
+            t = clock.exact(n)
+            with clock.exclude():
+                planes = batched_oracle(problem, w)
+                primal = float(0.5 * lam * jnp.dot(w, w)
+                               + jnp.sum(planes[:, :-1] @ w
+                                         + planes[:, -1]))
+            res.trace.append(TraceRow(it, (it + 1) * n, 0, t, primal,
+                                      float("nan"), float("nan"), primal,
+                                      0.0, 0))
+        res.w = np.asarray(w)
+        return res
 
-    def body(carry, i):
-        mp, gc = carry
-        w = weights_of(mp.inner.phi, lam)
-        ex = jax.tree_util.tree_map(lambda a: a[i], data)
-        phi_hat = oracle(w, ex)
-        inner, _ = bcfw.block_update(mp.inner, i, phi_hat, lam)
-        inner = inner._replace(n_exact=inner.n_exact + 1)
-        ws, gc = gram.add_plane_with_gram(mp.ws, gc, i, phi_hat, mp.outer_it)
-        avg = update_average(mp.avg, inner.phi, exact=True)
-        return (mp._replace(inner=inner, ws=ws, avg=avg), gc), None
+    if cfg.algo in ("bcfw", "bcfw-avg"):
+        state = init_state(problem)
+        avg = init_averaging(problem.d)
+        for it in range(cfg.max_iters):
+            perm = jnp.asarray(rng.permutation(n))
+            state, avg = bcfw.jit_exact_pass(problem, state, avg, perm,
+                                             lam=lam)
+            state.phi.block_until_ready()
+            t = clock.exact(n)
+            use_avg = avg if cfg.algo.endswith("avg") else None
+            with clock.exclude():
+                primal, dual, primal_avg = _evaluate(problem, state.phi,
+                                                     use_avg, lam)
+            res.trace.append(TraceRow(it, int(state.n_exact), 0, t, primal,
+                                      dual, primal - dual, primal_avg,
+                                      0.0, 0))
+        res.w = np.asarray(weights_of(state.phi, lam))
+        res.w_avg = np.asarray(weights_of(extract(avg, lam), lam))
+        return res
 
-    (mp, gc), _ = jax.lax.scan(body, (mp, gc), perm)
-    return mp, gc
-
-
-def _exact_pass_gram(problem, mp, gc, perm, lam):
-    return _jit_exact_pass_gram(problem.oracle, problem.n, problem.data,
-                                mp, gc, perm, lam=lam)
+    return _run_mp(problem, cfg, rng, clock, res,
+                   _make_engine(problem, cfg))

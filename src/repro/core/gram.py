@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from .averaging import update_average
+from .bcfw import block_update
+from .ssvm import weights_of
 from .types import AveragingState, BCFWState, SSVMProblem, WorkSet
 from .workset import NEG_INF
 from . import workset as ws_ops
@@ -54,6 +56,44 @@ def add_plane_with_gram(ws: WorkSet, gc: GramCache, i: jnp.ndarray,
     row = ws.planes[i, :, :-1] @ plane[:-1]          # (cap,)
     gram = gc.gram.at[i, slot, :].set(row).at[i, :, slot].set(row)
     return ws, GramCache(gram=gram)
+
+
+def exact_pass_gram(problem: SSVMProblem, mp, gc: GramCache,
+                    perm: jnp.ndarray, lam: float):
+    """Exact pass (Alg. 3 step 3) that also maintains the Gram cache.
+
+    Identical to :func:`repro.core.mpbcfw.exact_pass` except that each
+    plane insertion refreshes its Gram row/column.  Traced (no jit) so it
+    can be fused into :func:`repro.core.mpbcfw.outer_iteration`; the
+    standalone :func:`jit_exact_pass_gram` wraps it for direct use.
+    """
+
+    def body(carry, i):
+        mp, gc = carry
+        w = weights_of(mp.inner.phi, lam)
+        ex = jax.tree_util.tree_map(lambda a: a[i], problem.data)
+        phi_hat = problem.oracle(w, ex)
+        inner, _ = block_update(mp.inner, i, phi_hat, lam)
+        inner = inner._replace(n_exact=inner.n_exact + 1)
+        ws, gc = add_plane_with_gram(mp.ws, gc, i, phi_hat, mp.outer_it)
+        avg = update_average(mp.avg, inner.phi, exact=True)
+        return (mp._replace(inner=inner, ws=ws, avg=avg), gc), None
+
+    (mp, gc), _ = jax.lax.scan(body, (mp, gc), perm)
+    return mp, gc
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
+def _jit_exact_pass_gram(oracle, n, data, mp, gc, perm, *, lam):
+    prob = SSVMProblem(n=n, d=mp.inner.phi.shape[0] - 1, data=data,
+                       oracle=oracle)
+    return exact_pass_gram(prob, mp, gc, perm, lam)
+
+
+def jit_exact_pass_gram(problem: SSVMProblem, mp, gc: GramCache,
+                        perm: jnp.ndarray, *, lam: float):
+    return _jit_exact_pass_gram(problem.oracle, problem.n, problem.data,
+                                mp, gc, perm, lam=lam)
 
 
 def multi_step_block_update(planes_i: jnp.ndarray, valid_i: jnp.ndarray,

@@ -15,6 +15,12 @@ parameter ``M``) evaluated **on device** from ``dual_value`` deltas — so
 the host never round-trips between approximate passes.  The host-side
 :mod:`repro.core.selection` tracker replays the returned per-pass telemetry
 through its own clock; the TTL rule resolves ``N``.
+
+:func:`outer_iteration` fuses the whole outer iteration — TTL eviction,
+the exact pass (plain or Sec-3.5 Gram variant), on-device slope-clock
+seeding, and the batched approximate phase — into **one** program, which
+is what lets :func:`repro.core.driver.run` dispatch once and sync once
+per outer iteration for the entire MP-BCFW family.
 """
 from __future__ import annotations
 
@@ -146,6 +152,19 @@ def slope_batched_loop(carry, perms: jnp.ndarray, clock: SlopeClock, *,
     :class:`~repro.core.types.ApproxBatchStats`.
     """
     n_batch = perms.shape[0]
+    if n_batch == 0:
+        # Zero-pass budget (the driver's max_approx_passes=0 path): no
+        # loop to run, but the telemetry — f_entry, ws_total, and the
+        # "batch cap reached" more flag — is still produced on device.
+        stats = ApproxBatchStats(
+            duals=jnp.zeros((0,), jnp.float32),
+            times=jnp.zeros((0,), jnp.float32),
+            planes=jnp.zeros((0,), jnp.int32),
+            ran=jnp.zeros((0,), bool),
+            passes_run=jnp.zeros((), jnp.int32), f_entry=f_entry,
+            more=jnp.asarray(True),
+            ws_total=jnp.asarray(planes_per_pass, jnp.int32))
+        return carry, clock.t, stats
 
     def cond(state):
         _, k, _, _, cont, *_ = state
@@ -173,7 +192,7 @@ def slope_batched_loop(carry, perms: jnp.ndarray, clock: SlopeClock, *,
     stats = ApproxBatchStats(
         duals=duals, times=times, planes=planes,
         ran=jnp.arange(n_batch) < k, passes_run=k, f_entry=f_entry,
-        more=cont)
+        more=cont, ws_total=jnp.asarray(planes_per_pass, jnp.int32))
     return carry, t, stats
 
 
@@ -235,6 +254,58 @@ def jit_multi_approx_pass(problem: Optional[SSVMProblem], mp: MPState,
     del problem  # approximate passes never touch the data
     return _jit_multi_approx_pass(mp, perms, clock, gc, lam=lam, steps=steps,
                                   run_all=run_all)
+
+
+def outer_iteration(problem: SSVMProblem, mp: MPState, gc, perm: jnp.ndarray,
+                    perms: jnp.ndarray, clock: SlopeClock, *, lam: float,
+                    ttl: int, steps: int = 10, run_all: bool = False):
+    """One *fused* MP-BCFW outer iteration (paper Alg. 3, one device program).
+
+    TTL eviction, the exact pass (oracle scan + plane insertion +
+    averaging; the Sec-3.5 Gram variant when ``gc`` is given), and the
+    slope-ruled batch of approximate passes run back to back inside a
+    single program — the driver dispatches once and syncs once per outer
+    iteration, with no dispatch boundary left between the exact and
+    approximate phases.
+
+    The slope clock is seeded **on device**: ``clock.f0`` is replaced by
+    the dual at iteration entry (TTL eviction never changes ``phi``, so
+    this is the paper's F at the start of the iteration) — the host only
+    supplies the cost constants ``clock.t`` (modeled exact-pass cost) and
+    ``clock.plane_cost``.  Returns ``(mp, gc, clock, stats)``; ``gc`` is
+    ``None`` when no Gram cache is threaded.
+    """
+    from . import gram as gram_ops
+
+    mp = begin_iteration(mp, ttl)
+    clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
+    if gc is not None:
+        mp, gc = gram_ops.exact_pass_gram(problem, mp, gc, perm, lam)
+    else:
+        mp = exact_pass(problem, mp, perm, lam)
+    mp, clock, stats = multi_approx_pass(mp, perms, clock, lam=lam, gc=gc,
+                                         steps=steps, run_all=run_all)
+    return mp, gc, clock, stats
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("lam", "ttl", "steps", "run_all"))
+def _jit_outer_iteration(oracle, n, data, mp, gc, perm, perms, clock,
+                         *, lam, ttl, steps, run_all):
+    prob = SSVMProblem(n=n, d=mp.inner.phi.shape[0] - 1, data=data,
+                       oracle=oracle)
+    return outer_iteration(prob, mp, gc, perm, perms, clock, lam=lam,
+                           ttl=ttl, steps=steps, run_all=run_all)
+
+
+def jit_outer_iteration(problem: SSVMProblem, mp: MPState, gc,
+                        perm: jnp.ndarray, perms: jnp.ndarray,
+                        clock: SlopeClock, *, lam: float, ttl: int,
+                        steps: int = 10, run_all: bool = False):
+    """Jitted :func:`outer_iteration` (cached per oracle/shape/flags)."""
+    return _jit_outer_iteration(problem.oracle, problem.n, problem.data,
+                                mp, gc, perm, perms, clock, lam=lam,
+                                ttl=ttl, steps=steps, run_all=run_all)
 
 
 def init_mp_state(problem: SSVMProblem, cap: int) -> MPState:

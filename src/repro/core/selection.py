@@ -116,6 +116,15 @@ class SyncLedger:
     collectives: int = 0
     dispatches: int = 0
 
+    def counts(self) -> tuple:
+        """Snapshot ``(host_syncs, collectives, dispatches)``.
+
+        Callers that assert per-interval contracts (e.g. the driver's
+        "one dispatch, one sync per outer iteration") take a snapshot at
+        the interval boundary and difference against the next one.
+        """
+        return (self.host_syncs, self.collectives, self.dispatches)
+
     def sync(self, tree):
         """Fetch ``tree`` to host (one blocking round-trip), counted."""
         import jax

@@ -119,3 +119,8 @@ class ApproxBatchStats(NamedTuple):
     passes_run: jnp.ndarray  # ()   i32  number of executed passes
     f_entry: jnp.ndarray     # ()   f32  dual on entry (after the exact pass)
     more: jnp.ndarray        # ()   bool rule still wanted another pass
+    ws_total: jnp.ndarray    # ()   i32  total cached planes on entry (sum of
+    #                          working-set sizes after the exact pass) — the
+    #                          Fig.-5 statistic, present even when zero
+    #                          approximate passes run, so the driver never
+    #                          needs a second sync to report it

@@ -118,6 +118,21 @@ def make_data_mesh(n_devices: Optional[int] = None, *,
     return mesh
 
 
+def ensure_data_mesh(mesh: Optional[Mesh] = None, *,
+                     axis: str = "data") -> Mesh:
+    """Resolve an optional mesh knob to a validated 1-D data mesh.
+
+    ``None`` builds the default :func:`make_data_mesh` over all local
+    devices; a provided mesh is validated to carry ``axis`` and returned
+    as-is.  This is the ``RunConfig.mesh`` resolution path of the
+    ``mpbcfw-shard*`` algorithms in :func:`repro.core.driver.run`.
+    """
+    if mesh is None:
+        return make_data_mesh(axis=axis)
+    validate_mesh(mesh, (axis,))
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -53,6 +53,14 @@ epoch and syncs **at most once per outer iteration** (to read telemetry);
 :class:`~repro.core.selection.SyncLedger` counts both syncs and
 collectives so tests and benchmarks can assert the contract.
 
+``ShardEngine.outer_iteration`` fuses a whole outer iteration — TTL
+eviction, on-device slope-clock seeding, the tau-nice epoch, and the
+approximate batch — into **one** program (a single dispatch).  It is the
+engine behind the ``mpbcfw-shard`` / ``mpbcfw-shard-avg`` /
+``mpbcfw-shard-tau`` algorithms of :func:`repro.core.driver.run`
+(``RunConfig.mesh`` / ``RunConfig.tau``); on a 1-device mesh the driver
+trace is bit-for-bit equal to single-device ``mpbcfw``.
+
 This layer is the prerequisite for multi-host MP-BCFW: all cross-device
 traffic is already explicit (one psum per approximate pass, oracle
 sharding with no traffic), so scaling out is a mesh-construction change,

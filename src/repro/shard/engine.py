@@ -69,8 +69,11 @@ class ShardEngine:
         self.n_local = problem.n // self.n_shards
         self.ledger = SyncLedger()
         self.collectives = CollectiveTrace()
-        self._multi: Dict[bool, callable] = {}
-        self._tau_prog = None
+        self._multi_sm: Dict[bool, callable] = {}   # shard_map'd (unjitted)
+        self._multi: Dict[bool, callable] = {}      # standalone jits
+        self._epoch_fn = None                       # tau epoch (unjitted)
+        self._tau_prog = None                       # standalone jit
+        self._outer: Dict[tuple, callable] = {}     # fused outer programs
         self._begin = jax.jit(mpbcfw.begin_iteration, static_argnums=(1,))
 
     # -- state management ---------------------------------------------------
@@ -212,12 +215,19 @@ class ShardEngine:
         clock_specs = SlopeClock(t0=P(), f0=P(), t=P(), plane_cost=P())
         stats_specs = ApproxBatchStats(
             duals=P(None), times=P(None), planes=P(None), ran=P(None),
-            passes_run=P(), f_entry=P(), more=P())
-        return jax.jit(shard_map(
+            passes_run=P(), f_entry=P(), more=P(), ws_total=P())
+        return shard_map(
             local_prog, mesh=mesh,
             in_specs=(mp_specs, P(None, None), clock_specs),
             out_specs=(mp_specs, clock_specs, stats_specs),
-            check_rep=False))
+            check_rep=False)
+
+    def _multi_stage(self, run_all: bool):
+        """The shard_map'd multi-pass callable (traceable, unjitted) —
+        shared by the standalone program and the fused outer program."""
+        if run_all not in self._multi_sm:
+            self._multi_sm[run_all] = self._build_multi(run_all)
+        return self._multi_sm[run_all]
 
     def multi_approx_pass(self, mp: MPState, perms: jnp.ndarray,
                           clock: SlopeClock, *, run_all: bool = False
@@ -228,7 +238,7 @@ class ShardEngine:
         iteration's single host sync.
         """
         if run_all not in self._multi:
-            self._multi[run_all] = self._build_multi(run_all)
+            self._multi[run_all] = jax.jit(self._multi_stage(run_all))
         self.ledger.dispatched()
         return self._multi[run_all](mp, perms, clock)
 
@@ -268,7 +278,29 @@ class ShardEngine:
             mp, _ = jax.lax.scan(chunk, mp, (chunk_ids, done))
             return mp
 
-        return jax.jit(epoch)
+        return epoch
+
+    def _epoch(self):
+        """The tau-nice epoch callable (traceable, unjitted) — shared by
+        the standalone program and the fused outer program."""
+        if self._epoch_fn is None:
+            self._epoch_fn = self._build_tau()
+        return self._epoch_fn
+
+    def _chunk_args(self, perm: jnp.ndarray, tau: int,
+                    done: Optional[jnp.ndarray]):
+        n = self.problem.n
+        if n % tau:
+            raise ValueError(f"n={n} not divisible by tau={tau}")
+        if tau % self.n_shards:
+            raise ValueError(
+                f"tau={tau} not divisible by {self.n_shards} shards")
+        chunk_ids = perm.reshape(-1, tau)
+        if done is None:
+            done = jnp.ones(chunk_ids.shape, bool)
+        else:
+            done = done.reshape(chunk_ids.shape)
+        return chunk_ids, done
 
     def tau_nice_pass(self, mp: MPState, perm: jnp.ndarray, tau: int,
                       done: Optional[jnp.ndarray] = None) -> MPState:
@@ -281,23 +313,46 @@ class ShardEngine:
         sequentially with exact line search — monotone in F per fold.
         Dispatch only; no host sync.
         """
-        n = self.problem.n
-        if n % tau:
-            raise ValueError(f"n={n} not divisible by tau={tau}")
-        if tau % self.n_shards:
-            raise ValueError(
-                f"tau={tau} not divisible by {self.n_shards} shards")
-        chunk_ids = perm.reshape(-1, tau)
-        if done is None:
-            done = jnp.ones(chunk_ids.shape, bool)
-        else:
-            done = done.reshape(chunk_ids.shape)
+        chunk_ids, done = self._chunk_args(perm, tau, done)
         if self._tau_prog is None:
-            self._tau_prog = self._build_tau()
+            self._tau_prog = jax.jit(self._epoch())
         self.ledger.dispatched()
         return self._tau_prog(self.problem.data, mp, chunk_ids, done)
 
-    # -- one outer iteration, zero intermediate syncs -----------------------
+    # -- one outer iteration: one program, one dispatch ---------------------
+
+    def _build_outer(self, run_all: bool, ttl: int, sequential: bool):
+        """One fused program for a whole outer iteration: TTL eviction,
+        on-device slope-clock seeding, the exact epoch, and the
+        shard_map'd approximate batch — a single dispatch boundary.
+
+        ``sequential`` lowers the tau=1, no-straggler epoch to the plain
+        sequential exact pass (:func:`repro.core.mpbcfw.exact_pass`):
+        semantically identical (a 1-block chunk *is* a sequential BCFW
+        step at the current ``w``), it skips the per-chunk fallback
+        scoring that tau=1 would never consume, and it traces the same
+        scan body as the single-device fused program — which is what
+        makes a 1-device-mesh driver run bit-for-bit equal to ``mpbcfw``.
+        """
+        multi = self._multi_stage(run_all)
+        epoch = self._epoch()
+        problem, lam = self.problem, self.lam
+
+        def prog(data, mp: MPState, chunk_ids, done, perms,
+                 clock: SlopeClock):
+            mp = mpbcfw.begin_iteration(mp, ttl)
+            # Seed the slope rule from the on-device dual at iteration
+            # entry (TTL eviction never changes phi, hence F).
+            clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
+            if sequential:
+                prob = SSVMProblem(n=problem.n, d=problem.d, data=data,
+                                   oracle=problem.oracle)
+                mp = mpbcfw.exact_pass(prob, mp, chunk_ids.reshape(-1), lam)
+            else:
+                mp = epoch(data, mp, chunk_ids, done)
+            return multi(mp, perms, clock)
+
+        return jax.jit(prog)
 
     def outer_iteration(self, mp: MPState, perm: jnp.ndarray,
                         approx_perms: jnp.ndarray, clock: SlopeClock, *,
@@ -305,13 +360,19 @@ class ShardEngine:
                         done: Optional[jnp.ndarray] = None,
                         run_all: bool = False):
         """TTL eviction + tau-nice exact epoch + slope-ruled approximate
-        batch, dispatched back to back.  The caller reads the returned
-        stats with :meth:`read_stats` — that is the iteration's one and
-        only host sync."""
-        mp = self.begin_iteration(mp, ttl)
-        mp = self.tau_nice_pass(mp, perm, tau, done)
-        return self.multi_approx_pass(mp, approx_perms, clock,
-                                      run_all=run_all)
+        batch as **one** fused device program (a single dispatch).
+        ``clock.f0`` is re-seeded on device from the dual at iteration
+        entry; the caller reads the returned stats with
+        :meth:`read_stats` — that is the iteration's one and only host
+        sync."""
+        chunk_ids, done_arr = self._chunk_args(perm, tau, done)
+        sequential = (tau == 1 and done is None)
+        key = (bool(run_all), int(ttl), sequential)
+        if key not in self._outer:
+            self._outer[key] = self._build_outer(run_all, ttl, sequential)
+        self.ledger.dispatched()
+        return self._outer[key](self.problem.data, mp, chunk_ids, done_arr,
+                                approx_perms, clock)
 
 
 # -- module-level API (engine cache) ----------------------------------------

@@ -4,6 +4,8 @@ Property tests use deterministic seeded parametrization (this container has
 no ``hypothesis``): seeds are drawn once from a fixed RandomState, so every
 run exercises the same randomized cases.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -195,8 +197,7 @@ def test_gram_pass_equivalent_to_plain_updates(multiclass_problem):
     gc = gram.init_gram(prob.n, 8)
     r = np.random.RandomState(1)
     perm = jnp.asarray(r.permutation(prob.n))
-    mp, gc = driver._jit_exact_pass_gram(prob.oracle, prob.n, prob.data,
-                                         mp, gc, perm, lam=lam)
+    mp, gc = gram.jit_exact_pass_gram(prob, mp, gc, perm, lam=lam)
     i = jnp.asarray(3)
     # naive: repeated approximate updates with materialized planes
     inner_naive = mp.inner
@@ -318,9 +319,8 @@ def test_multi_approx_pass_gram_variant(multiclass_problem):
     mp = mpbcfw.init_mp_state(prob, cap=8)
     gc = gram.init_gram(prob.n, 8)
     mp = mpbcfw.begin_iteration(mp, ttl=10)
-    mp, gc = driver._jit_exact_pass_gram(
-        prob.oracle, prob.n, prob.data, mp, gc,
-        jnp.asarray(rng.permutation(prob.n)), lam=lam)
+    mp, gc = gram.jit_exact_pass_gram(
+        prob, mp, gc, jnp.asarray(rng.permutation(prob.n)), lam=lam)
     perm = jnp.asarray(rng.permutation(prob.n))
     clock = mpbcfw.make_slope_clock(
         0.0, float(dual_value(mp.inner.phi, lam)), float(prob.n), 1e-3)
@@ -334,17 +334,160 @@ def test_multi_approx_pass_gram_variant(multiclass_problem):
     assert int(mp_b.inner.n_approx) == int(inner.n_approx)
 
 
-def test_driver_single_host_sync_per_iteration(multiclass_problem):
-    """The control loop syncs once per outer iteration (vs passes+1)."""
+@pytest.mark.parametrize("algo", ["mpbcfw", "mpbcfw-avg", "mpbcfw-gram"])
+def test_driver_one_dispatch_one_sync_per_iteration(multiclass_problem,
+                                                    algo):
+    """SyncLedger contract: the fused control loop performs exactly one
+    program dispatch and one host sync per outer iteration (previously
+    two dispatches: exact pass, then multi_approx_pass)."""
     prob = multiclass_problem
     lam = 1.0 / prob.n
     res = driver.run(prob, driver.RunConfig(
-        lam=lam, algo="mpbcfw", max_iters=5, cap=16,
+        lam=lam, algo=algo, max_iters=5, cap=16,
         cost_model=CostModel()))
     for row in res.trace:
         assert row.host_syncs == 1
+        assert row.dispatches == 1
         # old loop: one sync per approximate pass + one for the exact pass
         assert row.approx_passes + 1 >= 5 * row.host_syncs
+
+
+# ---------------------------------------------------------------------------
+# Fused outer iteration (one program per outer iteration)
+
+
+def test_outer_iteration_matches_two_program_sequence(multiclass_problem):
+    """Fused program == begin_iteration + jit_exact_pass +
+    jit_multi_approx_pass, bitwise — state, telemetry, clock, and the
+    on-device f0 seed (vs the host-seeded legacy clock)."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    rng = np.random.RandomState(7)
+    mp_l = mpbcfw.init_mp_state(prob, cap=8)
+    mp_f = mpbcfw.init_mp_state(prob, cap=8)
+    for _ in range(3):   # iterate to populate worksets / nonzero phi_i
+        perm = jnp.asarray(rng.permutation(prob.n))
+        perms = jnp.asarray(
+            np.stack([rng.permutation(prob.n) for _ in range(8)]))
+        # legacy: two programs, host-seeded f0
+        f0 = float(dual_value(mp_l.inner.phi, lam))
+        clock_l = mpbcfw.make_slope_clock(0.0, f0, float(prob.n), 1e-3)
+        mp_l = mpbcfw.begin_iteration(mp_l, 10)
+        mp_l = mpbcfw.jit_exact_pass(prob, mp_l, perm, lam=lam)
+        mp_l, clock_l, st_l = mpbcfw.jit_multi_approx_pass(
+            prob, mp_l, perms, clock_l, lam=lam)
+        # fused: one program, f0 seeded from the on-device dual
+        clock_f = mpbcfw.make_slope_clock(0.0, 0.0, float(prob.n), 1e-3)
+        mp_f, _, clock_f, st_f = mpbcfw.jit_outer_iteration(
+            prob, mp_f, None, perm, perms, clock_f, lam=lam, ttl=10)
+        for a, b in zip(jax.tree_util.tree_leaves(mp_l),
+                        jax.tree_util.tree_leaves(mp_f)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(st_l.passes_run) == int(st_f.passes_run)
+        np.testing.assert_array_equal(np.asarray(st_l.duals),
+                                      np.asarray(st_f.duals))
+        np.testing.assert_array_equal(np.asarray(st_l.planes),
+                                      np.asarray(st_f.planes))
+        assert float(clock_l.t) == float(clock_f.t)
+        assert int(st_f.ws_total) == int(jnp.sum(workset.sizes(mp_f.ws)))
+
+
+def test_outer_iteration_gram_matches_two_program_sequence(
+        multiclass_problem):
+    """The Sec-3.5 Gram variant is folded into the same fused program:
+    == jit_exact_pass_gram + jit_multi_approx_pass(gc=...), bitwise."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    rng = np.random.RandomState(11)
+    mp_l = mpbcfw.init_mp_state(prob, cap=8)
+    gc_l = gram.init_gram(prob.n, 8)
+    mp_f = mpbcfw.init_mp_state(prob, cap=8)
+    gc_f = gram.init_gram(prob.n, 8)
+    for _ in range(2):
+        perm = jnp.asarray(rng.permutation(prob.n))
+        perms = jnp.asarray(
+            np.stack([rng.permutation(prob.n) for _ in range(4)]))
+        f0 = float(dual_value(mp_l.inner.phi, lam))
+        clock_l = mpbcfw.make_slope_clock(0.0, f0, float(prob.n), 1e-3)
+        mp_l = mpbcfw.begin_iteration(mp_l, 10)
+        mp_l, gc_l = gram.jit_exact_pass_gram(prob, mp_l, gc_l, perm,
+                                              lam=lam)
+        mp_l, clock_l, st_l = mpbcfw.jit_multi_approx_pass(
+            prob, mp_l, perms, clock_l, lam=lam, gc=gc_l, steps=5)
+        clock_f = mpbcfw.make_slope_clock(0.0, 0.0, float(prob.n), 1e-3)
+        mp_f, gc_f, clock_f, st_f = mpbcfw.jit_outer_iteration(
+            prob, mp_f, gc_f, perm, perms, clock_f, lam=lam, ttl=10,
+            steps=5)
+        for a, b in zip(jax.tree_util.tree_leaves((mp_l, gc_l)),
+                        jax.tree_util.tree_leaves((mp_f, gc_f))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(st_l.passes_run) == int(st_f.passes_run)
+        np.testing.assert_array_equal(np.asarray(st_l.duals),
+                                      np.asarray(st_f.duals))
+
+
+def test_outer_iteration_zero_approx_budget(multiclass_problem):
+    """max_approx_passes=0: the fused program still runs the exact pass
+    and reports f_entry/ws_total in one sync (no fallback dual fetch)."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    res = driver.run(prob, driver.RunConfig(
+        lam=lam, algo="mpbcfw", max_iters=3, cap=16, max_approx_passes=0,
+        cost_model=CostModel()))
+    for row in res.trace:
+        assert row.approx_passes == 0
+        assert row.host_syncs == 1
+        assert row.dispatches == 1
+        assert row.ws_mean > 0.0
+    duals = [t.dual for t in res.trace]
+    assert all(b >= a - 1e-6 for a, b in zip(duals, duals[1:]))
+
+
+def test_ws_mean_one_statistic_in_both_branches(multiclass_problem):
+    """Fig. 5: ws_mean is the same statistic whether or not approximate
+    passes ran.  Iteration 0's exact pass is identical across the two
+    runs (the exact perm is drawn before the approx perms), so the
+    reported ws_mean must agree exactly."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    kw = dict(lam=lam, algo="mpbcfw", max_iters=1, cap=16, seed=5)
+    res_no = driver.run(prob, driver.RunConfig(
+        max_approx_passes=0, cost_model=CostModel(), **kw))
+    res_yes = driver.run(prob, driver.RunConfig(
+        cost_model=CostModel(), **kw))
+    assert res_yes.trace[0].approx_passes > 0
+    assert res_no.trace[0].ws_mean == res_yes.trace[0].ws_mean
+
+
+def test_wall_clock_excludes_evaluation_time(multiclass_problem,
+                                             monkeypatch):
+    """Regression: `_evaluate`'s batched_oracle sweeps (n exact oracle
+    calls per iteration) are "Not timed" — a deliberately slow oracle in
+    the evaluation path must not inflate TraceRow.time."""
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    real = driver.batched_oracle
+    sleep_s = 0.15
+
+    def slow_eval_oracle(problem, w):
+        time.sleep(sleep_s)
+        return real(problem, w)
+
+    monkeypatch.setattr(driver, "batched_oracle", slow_eval_oracle)
+    iters = 3
+    wall0 = time.perf_counter()
+    res = driver.run(prob, driver.RunConfig(
+        lam=lam, algo="mpbcfw", max_iters=iters, cap=16,
+        max_approx_passes=4, cost_model=None))   # wall-clock mode
+    wall = time.perf_counter() - wall0
+    slept = iters * sleep_s                      # one _evaluate per iter
+    assert wall >= slept                         # the sleeps did happen
+    # ... but none of the slept time reached the trace:
+    assert res.trace[-1].time <= wall - 0.9 * slept
+    # times are still monotone and positive
+    ts = [r.time for r in res.trace]
+    assert all(t >= 0.0 for t in ts)
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
 
 
 def test_workset_batched_scoring_matches_per_block(multiclass_problem):
@@ -418,7 +561,8 @@ def test_cost_model_clock():
 
 
 @pytest.mark.parametrize("algo", ["bcfw", "bcfw-avg", "mpbcfw",
-                                  "mpbcfw-avg", "mpbcfw-gram"])
+                                  "mpbcfw-avg", "mpbcfw-gram",
+                                  "mpbcfw-shard", "mpbcfw-shard-avg"])
 def test_algorithms_converge(multiclass_problem, algo):
     prob = multiclass_problem
     lam = 1.0 / prob.n

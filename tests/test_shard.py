@@ -144,8 +144,8 @@ def test_sharded_driver_trajectory_matches_single_device(multiclass_problem,
                                                          data_mesh):
     """Full outer-iteration loop (tau-nice exact pass + slope-ruled
     approximate batch): the engine reproduces the single-device driver's
-    dual trajectory exactly on a 1-device mesh, with one host sync per
-    outer iteration."""
+    dual trajectory exactly on a 1-device mesh, with one fused program
+    dispatch and one host sync per outer iteration."""
     prob = multiclass_problem
     lam = 1.0 / prob.n
     eng = ShardEngine(prob, data_mesh, lam=lam)
@@ -164,15 +164,87 @@ def test_sharded_driver_trajectory_matches_single_device(multiclass_problem,
         mp_h = distributed.host_tau_nice_pass(prob, mp_h, perm, lam, tau=8)
         mp_h, _, st_h = mpbcfw.jit_multi_approx_pass(prob, mp_h, perms,
                                                      clock, lam=lam)
-        # sharded engine, one dispatch chain + one sync
+        # sharded engine: ONE fused program, then one sync
+        d0 = eng.ledger.dispatches
         mp_s, _, st_s = eng.outer_iteration(mp_s, perm, perms, clock,
                                             tau=8, ttl=10)
+        assert eng.ledger.dispatches == d0 + 1
         st_s = eng.read_stats(st_s)
         assert eng.ledger.host_syncs - syncs0 == it + 1
         f_h = float(dual_value(mp_h.inner.phi, lam))
         f_s = float(dual_value(mp_s.inner.phi, lam))
         assert f_h == f_s
         assert int(st_h.passes_run) == int(st_s.passes_run)
+
+
+# ---------------------------------------------------------------------------
+# driver.run on the shard engine (the mpbcfw-shard* algorithms)
+
+
+def test_shard_driver_trace_bitwise_matches_mpbcfw(multiclass_problem,
+                                                   data_mesh):
+    """`mpbcfw-shard` on a 1-device mesh == `mpbcfw` under CostModel,
+    bit for bit: every TraceRow field (duals, plane counts, times, sync
+    counts — same RNG stream) and the final weights."""
+    import dataclasses
+
+    from repro.core import driver
+    from repro.core.selection import CostModel
+
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    kw = dict(lam=lam, max_iters=4, cap=8, seed=3)
+    res_a = driver.run(prob, driver.RunConfig(
+        algo="mpbcfw", cost_model=CostModel(plane_cost=1e-3), **kw))
+    res_b = driver.run(prob, driver.RunConfig(
+        algo="mpbcfw-shard", mesh=data_mesh,
+        cost_model=CostModel(plane_cost=1e-3), **kw))
+    assert len(res_a.trace) == len(res_b.trace)
+    for ra, rb in zip(res_a.trace, res_b.trace):
+        assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+        assert rb.host_syncs == 1 and rb.dispatches == 1
+    np.testing.assert_array_equal(res_a.w, res_b.w)
+    np.testing.assert_array_equal(res_a.w_avg, res_b.w_avg)
+
+
+def test_shard_driver_tau_variant(multiclass_problem, data_mesh):
+    """`mpbcfw-shard-tau` (explicit tau-nice chunking through the
+    driver) trains monotonically at one dispatch/sync per iteration."""
+    from repro.core import driver
+    from repro.core.selection import CostModel
+
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    res = driver.run(prob, driver.RunConfig(
+        lam=lam, algo="mpbcfw-shard-tau", tau=8, mesh=data_mesh,
+        max_iters=3, cap=8, cost_model=CostModel()))
+    duals = [t.dual for t in res.trace]
+    assert all(b >= a - 1e-7 for a, b in zip(duals, duals[1:]))
+    assert res.trace[-1].gap < res.trace[0].gap
+    for row in res.trace:
+        assert row.host_syncs == 1 and row.dispatches == 1
+    with pytest.raises(ValueError, match="requires RunConfig.tau"):
+        driver.run(prob, driver.RunConfig(
+            lam=lam, algo="mpbcfw-shard-tau", mesh=data_mesh,
+            max_iters=1, cost_model=CostModel()))
+
+
+def test_gram_refuses_sharded_engine(multiclass_problem, data_mesh):
+    """The Sec-3.5 Gram cache has no sharded twin (ROADMAP gap): asking
+    for it on a mesh must fail loudly instead of silently diverging."""
+    from repro.core import driver
+    from repro.core.selection import CostModel
+
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    with pytest.raises(ValueError, match="no sharded twin"):
+        driver.run(prob, driver.RunConfig(
+            lam=lam, algo="mpbcfw-gram", mesh=data_mesh, max_iters=1,
+            cost_model=CostModel()))
+    with pytest.raises(ValueError, match="only consumed by"):
+        driver.run(prob, driver.RunConfig(
+            lam=lam, algo="bcfw", mesh=data_mesh, max_iters=1,
+            cost_model=CostModel()))
 
 
 # ---------------------------------------------------------------------------
@@ -326,3 +398,47 @@ def test_engine_on_eight_forced_devices():
                          env=env)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "MULTIDEV_OK" in out.stdout
+
+
+_MULTIDEV_DRIVER_SCRIPT = textwrap.dedent("""
+    from repro.launch.mesh import force_host_platform_device_count, \\
+        make_data_mesh
+    assert force_host_platform_device_count(8)
+    import jax
+    import jax.numpy as jnp
+    from repro.core import driver
+    from repro.core.selection import CostModel
+    from repro.data import synthetic
+    from repro.core.oracles import multiclass
+
+    assert jax.local_device_count() == 8
+    x, y = synthetic.usps_like(n=48, f=12, num_classes=5, seed=0)
+    prob = multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), 5)
+    lam = 1.0 / prob.n
+    # max_approx_passes <= approx_batch so every iteration fits one fused
+    # program (otherwise overflow batches legitimately add syncs).
+    res = driver.run(prob, driver.RunConfig(
+        lam=lam, algo="mpbcfw-shard", mesh=make_data_mesh(8),
+        max_iters=3, cap=8, max_approx_passes=32, cost_model=CostModel()))
+    for row in res.trace:
+        assert row.host_syncs == 1, row
+        assert row.dispatches == 1, row
+    duals = [t.dual for t in res.trace]
+    assert all(b >= a - 1e-7 for a, b in zip(duals, duals[1:])), duals
+    assert res.trace[-1].gap < res.trace[0].gap
+    print("MULTIDEV_DRIVER_OK", duals[-1])
+""")
+
+
+@pytest.mark.mesh
+def test_driver_shard_algo_on_eight_forced_devices():
+    """`driver.run(algo='mpbcfw-shard')` end-to-end on a real 8-shard
+    mesh: monotone duals, one dispatch and one host sync per outer
+    iteration.  Fresh subprocess (device count forced before jax init)."""
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", _MULTIDEV_DRIVER_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MULTIDEV_DRIVER_OK" in out.stdout
