@@ -12,8 +12,8 @@ import dataclasses
 import json
 import pathlib
 
+from repro.api import RunConfig, Solver
 from repro.configs.paper import SMALL
-from repro.core import driver
 from repro.core.selection import CostModel
 from repro.trainer.ssvm_head import build_problem
 
@@ -29,11 +29,11 @@ def run_scenario(name: str, iters: int = 12, seed: int = 0) -> dict:
     out = {"scenario": name, "n": prob.n, "d": prob.d,
            "oracle_cost": sc.oracle_cost, "algos": {}}
     for algo in ALGOS:
-        cfg = driver.RunConfig(
+        cfg = RunConfig(
             lam=lam, algo=algo, max_iters=iters, cap=32, ttl=10, seed=seed,
             cost_model=CostModel(oracle_cost=sc.oracle_cost,
                                  plane_cost=sc.plane_cost))
-        res = driver.run(prob, cfg)
+        res = Solver(prob, cfg).run()
         out["algos"][algo] = [dataclasses.asdict(r) for r in res.trace]
     return out
 

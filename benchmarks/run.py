@@ -9,7 +9,7 @@ Prints ``name,value,derived`` CSV rows:
   * shard_*  sharded-engine smoke: psums per approximate pass, collectives,
              host syncs and program dispatches per outer iteration vs the
              host-loop equivalent — including ``shard_driver_*`` rows for
-             the public ``driver.run(algo='mpbcfw-shard')`` path
+             the public ``repro.api.Solver`` path (``algo='mpbcfw-shard'``)
   * kernel_* hot-path microbenchmarks (us per call)
   * dryrun_/roofline_ summary of the (arch x shape) grid
 

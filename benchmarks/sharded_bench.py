@@ -17,8 +17,9 @@ data mesh and reports, per paper-style CSV row:
     iteration (1: the whole iteration is one fused program),
   * ``shard_dual_final``              end dual, sanity that it trains,
   * ``shard_driver_*``                the same contract through the public
-    entry point — ``driver.run(algo='mpbcfw-shard')`` — host syncs and
-    dispatches per outer iteration straight off the TraceRows.
+    entry point — ``repro.api.Solver`` with ``algo='mpbcfw-shard'`` (what
+    the deprecated ``driver.run`` shims to) — host syncs and dispatches
+    per outer iteration straight off the TraceRows.
 
 Mesh size is whatever the process has (1 device under plain CI; run with
 ``--xla_force_host_platform_device_count=8`` to smoke the 8-shard path).
@@ -69,13 +70,13 @@ def main(smoke: bool = True):
     f_final = float(dual_value(mp.inner.phi, lam))
 
     # -- the same contract through the public entry point ------------------
-    from repro.core import driver
+    from repro.api import RunConfig, Solver
     from repro.core.selection import CostModel
 
-    res = driver.run(prob, driver.RunConfig(
+    res = Solver(prob, RunConfig(
         lam=lam, algo="mpbcfw-shard", mesh=make_data_mesh(),
         max_iters=ITERS, cap=CAP, max_approx_passes=BATCH,
-        cost_model=CostModel(plane_cost=1e-3)))
+        cost_model=CostModel(plane_cost=1e-3))).run()
     drv_syncs = sum(r.host_syncs for r in res.trace) / ITERS
     drv_disp = sum(r.dispatches for r in res.trace) / ITERS
 

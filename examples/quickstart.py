@@ -1,28 +1,40 @@
-"""Quickstart: train a multiclass SSVM with MP-BCFW and compare to BCFW.
+"""Quickstart: train structural SVMs through the public ``repro.api``.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Algorithms (``repro.core.driver.ALGORITHMS``):
+Three layers, one seam each:
 
-  ================== ======================================================
-  name               what it runs
-  ================== ======================================================
-  fw                 batch Frank-Wolfe (paper Alg. 1)
-  ssg                stochastic subgradient baseline
-  bcfw / bcfw-avg    block-coordinate FW (Alg. 2), optionally averaged
-  mpbcfw             multi-plane BCFW (Alg. 3) — one fused program per
-                     outer iteration (exact pass + slope-ruled approximate
-                     batch), one host sync per iteration
-  mpbcfw-avg         + two-track weighted averaging (Sec. 3.6)
-  mpbcfw-gram        + the Sec-3.5 Gram-cache inner loop (same fused
-                     program, Gram cache threaded through)
-  mpbcfw-shard       mpbcfw on a 1-D data mesh (``RunConfig.mesh``, default
-                     all local devices): tau-nice exact epoch + sharded
-                     approximate batch, still one program / one sync per
-                     iteration; bit-for-bit ``mpbcfw`` on a 1-device mesh
-  mpbcfw-shard-avg   + averaging
-  mpbcfw-shard-tau   explicit tau-nice chunk size via ``RunConfig.tau``
-  ================== ======================================================
+  * **Tasks** are :class:`repro.api.OracleSpec` subclasses (joint feature
+    map + loss + loss-augmented decode); ``repro.api.build_problem``
+    assembles the max-oracle.  The bundled specs cover the paper's three
+    scenarios (multiclass / chain / graph); a custom task is a ~20-line
+    spec — demoed below.
+  * **Algorithms** are engines in the ``repro.api`` registry
+    (``repro.api.algorithms()`` lists them; third parties add their own
+    with ``register_engine`` — no core edits):
+
+    ================== ======================================================
+    name               what it runs
+    ================== ======================================================
+    fw                 batch Frank-Wolfe (paper Alg. 1)
+    ssg                stochastic subgradient baseline
+    bcfw / bcfw-avg    block-coordinate FW (Alg. 2), optionally averaged
+    mpbcfw             multi-plane BCFW (Alg. 3) — one fused program per
+                       outer iteration (exact pass + slope-ruled
+                       approximate batch), one host sync per iteration
+    mpbcfw-avg         + two-track weighted averaging (Sec. 3.6)
+    mpbcfw-gram        + the Sec-3.5 Gram-cache inner loop
+    mpbcfw-shard       mpbcfw on a 1-D data mesh (``RunConfig.mesh``):
+                       tau-nice exact epoch + sharded approximate batch;
+                       bit-for-bit ``mpbcfw`` on a 1-device mesh
+    mpbcfw-shard-avg   + averaging
+    mpbcfw-shard-tau   explicit tau-nice chunk size via ``RunConfig.tau``
+    ================== ======================================================
+
+  * **The control loop** is :class:`repro.api.Solver`: streaming
+    ``iterate()``, gap-tolerance / time-budget stopping, callbacks,
+    checkpoint/resume.  (``repro.core.driver.run`` remains as a
+    deprecated one-call shim over it.)
 """
 import sys
 
@@ -31,11 +43,16 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp  # noqa: E402
 import numpy as np       # noqa: E402
 
-from repro.core import driver                     # noqa: E402
+from repro.api import (OracleSpec, RunConfig, Solver,  # noqa: E402
+                       build_problem)
 from repro.core.oracles import multiclass         # noqa: E402
 from repro.core.selection import CostModel        # noqa: E402
 from repro.data import synthetic                  # noqa: E402
 from repro.launch.mesh import make_data_mesh      # noqa: E402
+
+
+def cm():
+    return CostModel(oracle_cost=0.02, plane_cost=1e-4)
 
 
 def main():
@@ -45,23 +62,29 @@ def main():
 
     print("== BCFW (baseline) vs MP-BCFW (paper) — same oracle budget ==")
     for algo in ("bcfw", "mpbcfw"):
-        cfg = driver.RunConfig(lam=lam, algo=algo, max_iters=10, cap=32,
-                               cost_model=CostModel(oracle_cost=0.02,
-                                                    plane_cost=1e-4))
-        res = driver.run(problem, cfg)
+        res = Solver(problem, RunConfig(lam=lam, algo=algo, max_iters=10,
+                                        cap=32, cost_model=cm())).run()
         last = res.trace[-1]
         print(f"{algo:8s}: exact oracle calls {last.n_exact:5d}  "
               f"approx steps {last.n_approx:6d}  "
               f"duality gap {last.gap:.5f}  dual {last.dual:.5f}")
 
-    # the same run on the mesh-sharded engine (all local devices; on a
-    # 1-device host this is bit-for-bit the mpbcfw run above)
+    # -- streaming iteration + gap-tolerance stopping ----------------------
+    solver = Solver(problem, RunConfig(lam=lam, algo="mpbcfw", max_iters=50,
+                                       cap=32, gap_tol=1e-3,
+                                       cost_model=cm()))
+    for row in solver.iterate():            # rows stream as iterations run
+        print(f"  iter {row.iteration:2d}  gap {row.gap:.6f}  "
+              f"[{row.dispatches} dispatch / {row.host_syncs} sync]")
+    print(f"stopped after {solver.iteration} of 50 iterations "
+          f"(gap_tol=1e-3, final gap {solver.trace[-1].gap:.2e})")
+
+    # -- the same run on the mesh-sharded engine ---------------------------
+    # (all local devices; on a 1-device host this is bit-for-bit mpbcfw)
     mesh = make_data_mesh()
-    cfg = driver.RunConfig(lam=lam, algo="mpbcfw-shard", mesh=mesh,
-                           max_iters=10, cap=32,
-                           cost_model=CostModel(oracle_cost=0.02,
-                                                plane_cost=1e-4))
-    res = driver.run(problem, cfg)
+    res = Solver(problem, RunConfig(lam=lam, algo="mpbcfw-shard", mesh=mesh,
+                                    max_iters=10, cap=32,
+                                    cost_model=cm())).run()
     last = res.trace[-1]
     syncs = sum(r.host_syncs for r in res.trace)
     disp = sum(r.dispatches for r in res.trace)
@@ -70,13 +93,54 @@ def main():
           f"[{disp} dispatches / {syncs} host syncs over "
           f"{len(res.trace)} iterations]")
 
-    # accuracy of the learned predictor
-    cfg = driver.RunConfig(lam=lam, algo="mpbcfw-avg", max_iters=10, cap=32,
-                           cost_model=CostModel())
-    res = driver.run(problem, cfg)
+    # -- accuracy of the learned (averaged) predictor ----------------------
+    res = Solver(problem, RunConfig(lam=lam, algo="mpbcfw-avg",
+                                    max_iters=10, cap=32,
+                                    cost_model=CostModel())).run()
     w = res.w_avg.reshape(10, -1)
     pred = np.argmax(x @ w.T, axis=1)
     print(f"train accuracy (mpbcfw-avg): {np.mean(pred == y):.3f}")
+
+    # -- a custom task: define an OracleSpec, get every engine for free ----
+    class OrdinalSpec(OracleSpec):
+        """Ordinal regression, absolute-error loss: labels 0..C-1,
+        Delta(y, y') = |y - y'| / (C-1).  Everything the optimizer needs
+        is these five methods; build_problem assembles the max-oracle."""
+
+        C = 5
+
+        def dim(self, data):
+            return self.C * int(data["x"].shape[-1])
+
+        def truth(self, ex):
+            return ex["y"]
+
+        def decode(self, w, ex):
+            x, y = ex["x"], ex["y"]
+            wc = w.reshape(self.C, x.shape[0])
+            delta = jnp.abs(jnp.arange(self.C) - y) / (self.C - 1.0)
+            return jnp.argmax(wc @ x + delta)   # loss-augmented argmax
+
+        def features(self, ex, y):
+            x = ex["x"]
+            return (jnp.zeros((self.C, x.shape[0]), x.dtype)
+                    .at[y].add(x)).reshape(-1)
+
+        def loss(self, ex, y):
+            return jnp.abs(y - ex["y"]).astype(jnp.float32) / (self.C - 1.0)
+
+    r = np.random.RandomState(1)
+    xo = r.randn(200, 16).astype(np.float32)
+    yo = np.clip((xo @ r.randn(16) * 0.7 + 2.5), 0, 4.99).astype(np.int32)
+    ordinal = build_problem(OrdinalSpec(), {"x": jnp.asarray(xo),
+                                            "y": jnp.asarray(yo)})
+    res = Solver(ordinal, RunConfig(lam=1.0 / ordinal.n, algo="mpbcfw",
+                                    max_iters=10, cap=16,
+                                    cost_model=cm())).run()
+    wo = res.w.reshape(5, -1)
+    mae = np.mean(np.abs(np.argmax(xo @ wo.T, axis=1) - yo))
+    print(f"custom OrdinalSpec via mpbcfw: gap {res.trace[-1].gap:.5f}  "
+          f"train MAE {mae:.3f}")
 
 
 if __name__ == "__main__":

@@ -12,8 +12,8 @@ seeded from the on-device dual; the host dispatches once and syncs once
 per iteration to read telemetry.  The old host chunk loop
 (`repro.core.distributed.tau_nice_pass`) is gone and fails with
 directions here.  (The same loop is reachable from the public entry
-point as `driver.run(algo="mpbcfw-shard")`; this example drives the
-engine directly to show the straggler `done` mask.)
+point as `repro.api.Solver` with `algo="mpbcfw-shard"`; this example
+drives the engine directly to show the straggler `done` mask.)
 
 On a multi-device host (or with ``--xla_force_host_platform_device_count=N``
 set before jax initializes; see ``repro.launch.mesh``) the same script

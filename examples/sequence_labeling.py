@@ -14,7 +14,7 @@ import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np       # noqa: E402
 
-from repro.core import driver                     # noqa: E402
+from repro.api import RunConfig, Solver           # noqa: E402
 from repro.core.oracles import chain              # noqa: E402
 from repro.core.oracles.chain import viterbi_decode  # noqa: E402
 from repro.core.selection import CostModel        # noqa: E402
@@ -27,10 +27,10 @@ def main():
     problem = chain.make_problem(jnp.asarray(X), jnp.asarray(Y),
                                  jnp.asarray(M), 12)
     lam = 1.0 / problem.n
-    cfg = driver.RunConfig(
+    cfg = RunConfig(
         lam=lam, algo="mpbcfw", max_iters=10, cap=32,
         cost_model=CostModel(oracle_cost=0.3, plane_cost=1e-4))
-    res = driver.run(problem, cfg)
+    res = Solver(problem, cfg).run()
     for r in res.trace[::3] + [res.trace[-1]]:
         print(f"iter {r.iteration:2d}  approx-passes {r.approx_passes:3d}  "
               f"ws {r.ws_mean:5.1f}  gap {r.gap:.5f}")

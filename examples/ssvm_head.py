@@ -13,7 +13,7 @@ import jax.numpy as jnp   # noqa: E402
 import numpy as np        # noqa: E402
 
 from repro import configs                          # noqa: E402
-from repro.core import driver                      # noqa: E402
+from repro.api import RunConfig, Solver            # noqa: E402
 from repro.core.selection import CostModel         # noqa: E402
 from repro.models import common, registry          # noqa: E402
 from repro.trainer.ssvm_head import backbone_chain_problem  # noqa: E402
@@ -34,9 +34,9 @@ def main():
         cfg, params, jnp.asarray(tokens), jnp.asarray(gold),
         jnp.asarray(mask), tags)
     lam = 1.0 / problem.n
-    cfg_run = driver.RunConfig(lam=lam, algo="mpbcfw", max_iters=8, cap=16,
-                               cost_model=CostModel(oracle_cost=0.5))
-    res = driver.run(problem, cfg_run)
+    cfg_run = RunConfig(lam=lam, algo="mpbcfw", max_iters=8, cap=16,
+                        cost_model=CostModel(oracle_cost=0.5))
+    res = Solver(problem, cfg_run).run()
     for r in res.trace[::2] + [res.trace[-1]]:
         print(f"iter {r.iteration:2d}  gap {r.gap:.5f}  "
               f"approx-passes {r.approx_passes}")

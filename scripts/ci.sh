@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: the fast offline test suite + the benchmark smoke run.
+#
+#   scripts/ci.sh            # what CI runs
+#   scripts/ci.sh --runslow  # + the multi-minute XLA compile cells
+#
+# pytest.ini keeps the deprecated driver.run shim's DeprecationWarning
+# filtered (its firing is itself asserted by tests/test_api.py); the
+# smoke benchmarks exercise the public Solver path end to end.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python -m benchmarks.run --smoke

@@ -1,0 +1,43 @@
+"""repro.api — the public Solver / Engine / Oracle protocol layer.
+
+The stable seam between *tasks* (an :class:`OracleSpec` +
+:func:`build_problem`), *optimizers* (an :class:`Engine` registered
+under an algorithm name), and the *control loop* (:class:`Solver`, with
+streaming :meth:`Solver.iterate`, pluggable stopping criteria, callbacks
+and checkpoint/resume).  ``repro.core.driver.run`` is a thin deprecated
+shim over :class:`Solver`.
+
+Typical use::
+
+    from repro.api import Solver, RunConfig
+    solver = Solver(problem, RunConfig(lam=1.0 / problem.n, algo="mpbcfw"))
+    for row in solver.iterate():      # streaming TraceRows
+        print(row.iteration, row.gap)
+    result = solver.result()
+
+Extension points::
+
+    from repro.api import OracleSpec, build_problem      # new tasks
+    from repro.api import register_engine, EngineCapabilities  # new engines
+"""
+from .config import RunConfig, RunResult, TraceRow
+from .engine import (Engine, EngineCapabilities, EngineEntry, algorithms,
+                     capabilities_of, engine_entry, register_engine,
+                     unregister_engine, validate_config)
+from .errors import UnsupportedConfigError
+from .oracle import Oracle, OracleSpec, build_problem
+from .solver import Solver, evaluate_objectives
+from .stopping import (MaxIters, StopContext, StopOnGap, StoppingCriterion,
+                       WallTimeBudget)
+
+__all__ = [
+    "RunConfig", "RunResult", "TraceRow",
+    "Engine", "EngineCapabilities", "EngineEntry", "algorithms",
+    "capabilities_of", "engine_entry", "register_engine",
+    "unregister_engine", "validate_config",
+    "UnsupportedConfigError",
+    "Oracle", "OracleSpec", "build_problem",
+    "Solver", "evaluate_objectives",
+    "MaxIters", "StopContext", "StopOnGap", "StoppingCriterion",
+    "WallTimeBudget",
+]

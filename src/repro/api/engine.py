@@ -1,0 +1,210 @@
+"""The public ``Engine`` protocol and the algorithm registry.
+
+An *engine* owns the compiled programs of one optimizer family and is
+driven by :class:`repro.api.Solver` through a fixed seam:
+
+  * ``init_state(cap)`` builds the (device) optimizer state;
+  * ``outer_iteration(state, perm, perms, clock, ttl=...)`` dispatches one
+    outer iteration without blocking and returns
+    ``(state, clock, stats)``;
+  * ``continue_passes(state, perms, clock)`` dispatches an overflow batch
+    of approximate passes (multipass engines only);
+  * ``read_stats(stats)`` blocks once and returns host telemetry;
+  * ``evaluate(state)`` returns ``(primal, dual, primal_avg)`` — called by
+    the solver inside its not-timed evaluation window;
+  * ``extract(state)`` returns the final ``(w, w_avg)``;
+  * ``capabilities`` is an :class:`EngineCapabilities` declaring what the
+    engine supports, and ``ledger`` a
+    :class:`repro.core.selection.SyncLedger` the solver reads sync /
+    dispatch counts from.
+
+Engines are looked up by name through a registry:
+:func:`register_engine` binds ``name -> (factory, capabilities)``, and
+every config validation error — mesh on a single-device engine, tau
+without a mesh, unknown name — is raised uniformly from
+:func:`validate_config` as a typed
+:class:`~repro.api.errors.UnsupportedConfigError`, derived from the
+declared capabilities instead of an if/elif ladder over strings.  The
+built-in engines (fw / ssg / bcfw / mpbcfw families, the shard_map
+engine) self-register on first registry access; third-party engines call
+:func:`register_engine` from their own module and are immediately
+drivable via ``RunConfig(algo=<their name>)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, \
+    runtime_checkable
+
+from .config import RunConfig
+from .errors import UnsupportedConfigError
+
+
+@dataclass(frozen=True)
+class EngineCapabilities:
+    """What an engine supports — the contract :func:`validate_config`
+    checks a :class:`~repro.api.config.RunConfig` against.
+
+    Attributes:
+      multipass:  the engine runs slope-ruled batches of approximate
+                  passes (MP-BCFW family); the solver drives it through
+                  the full multi-pass control loop with overflow
+                  continuation.  Non-multipass engines get the simple
+                  one-program-per-iteration loop.
+      needs_perm: the engine consumes one block permutation per outer
+                  iteration (drawn from the solver's seeded RNG stream).
+      supports_gram: the engine threads the Sec-3.5 Gram cache.
+      supports_mesh: the engine runs on a ``RunConfig.mesh``.
+      supports_averaging: the engine maintains the Sec-3.6 averaging
+                  tracks (and can report ``primal_avg`` at the averaged
+                  iterate).
+      uses_tau:   the engine consumes ``RunConfig.tau`` (tau-nice chunk
+                  size); ``requires_tau`` additionally makes it
+                  mandatory.
+      note:       extra context appended to capability-mismatch errors
+                  (e.g. *why* this engine cannot run on a mesh).
+    """
+
+    multipass: bool = False
+    needs_perm: bool = True
+    supports_gram: bool = False
+    supports_mesh: bool = False
+    supports_averaging: bool = False
+    uses_tau: bool = False
+    requires_tau: bool = False
+    note: str = ""
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Structural protocol every registered engine implements."""
+
+    capabilities: EngineCapabilities
+    # A repro.core.selection.SyncLedger: the solver reads sync/dispatch
+    # counts off it every iteration (typed Any to keep this module free
+    # of repro.core imports).
+    ledger: Any
+
+    def init_state(self, cap: int) -> Any: ...
+
+    def outer_iteration(self, state: Any, perm, perms, clock, *,
+                        ttl: int) -> Tuple[Any, Any, Any]: ...
+
+    def continue_passes(self, state: Any, perms,
+                        clock) -> Tuple[Any, Any, Any]: ...
+
+    def read_stats(self, stats: Any) -> Any: ...
+
+    def evaluate(self, state: Any) -> Tuple[float, float, float]: ...
+
+    def extract(self, state: Any) -> Tuple[Any, Any]: ...
+
+
+EngineFactory = Callable[[Any, RunConfig], Engine]
+
+
+@dataclass(frozen=True)
+class EngineEntry:
+    name: str
+    factory: EngineFactory
+    capabilities: EngineCapabilities
+
+
+_REGISTRY: "Dict[str, EngineEntry]" = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    """Import the built-in engine module once (it self-registers)."""
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        from . import engines  # noqa: F401  (registration side effect)
+        _BUILTINS_LOADED = True  # only after success, so a failed import
+        #                          surfaces again instead of an empty registry
+
+
+def register_engine(name: str, factory: EngineFactory,
+                    capabilities: Optional[EngineCapabilities] = None,
+                    *, overwrite: bool = False) -> None:
+    """Bind ``name`` to an engine factory ``(problem, cfg) -> Engine``.
+
+    This is the extension point: a registered name is immediately
+    accepted as ``RunConfig.algo`` by :class:`repro.api.Solver` (and the
+    ``driver.run`` shim), with capability validation and trace reporting
+    identical to the built-ins.
+    """
+    if not name or not isinstance(name, str):
+        raise ValueError(f"engine name must be a non-empty str, got {name!r}")
+    # Load the builtins first so registering over a builtin name trips
+    # the duplicate guard *here* (at the user's registration site) rather
+    # than being silently clobbered by the lazy builtin load later.
+    # Re-entrant during that load itself: sys.modules short-circuits the
+    # inner import, so the builtins' own registrations pass straight
+    # through.
+    _ensure_builtins()
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"engine {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[name] = EngineEntry(
+        name=name, factory=factory,
+        capabilities=capabilities or EngineCapabilities())
+
+
+def unregister_engine(name: str) -> None:
+    """Remove a registered engine (primarily for tests)."""
+    _REGISTRY.pop(name, None)
+
+
+def engine_entry(name: str) -> EngineEntry:
+    _ensure_builtins()
+    entry = _REGISTRY.get(name)
+    if entry is None:
+        raise UnsupportedConfigError(
+            f"unknown algorithm {name!r}; registered: {algorithms()}")
+    return entry
+
+
+def algorithms() -> Tuple[str, ...]:
+    """All registered algorithm names, in registration order."""
+    _ensure_builtins()
+    return tuple(_REGISTRY)
+
+
+def capabilities_of(name: str) -> EngineCapabilities:
+    return engine_entry(name).capabilities
+
+
+def _names_with(pred) -> Tuple[str, ...]:
+    return tuple(n for n, e in _REGISTRY.items() if pred(e.capabilities))
+
+
+def validate_config(entry: EngineEntry, cfg: RunConfig) -> None:
+    """Uniform capability check: every invalid (engine, config) combo —
+    including future ones — raises the same typed error from here."""
+    caps = entry.capabilities
+    if cfg.approx_batch < 1:
+        # A zero-pass program reports more=True forever (the rule never
+        # ran), which would spin the overflow loop without terminating.
+        raise UnsupportedConfigError(
+            "approx_batch must be >= 1 (use max_approx_passes=0 to "
+            "disable approximate passes)")
+    if cfg.mesh is not None and not caps.supports_mesh:
+        mesh_algos = _names_with(lambda c: c.supports_mesh)
+        detail = f"  {caps.note}" if caps.note else ""
+        raise UnsupportedConfigError(
+            f"RunConfig.mesh is only consumed by {mesh_algos}; "
+            f"{entry.name!r} runs single-device.{detail}")
+    if cfg.tau is not None and not caps.uses_tau:
+        tau_algos = _names_with(lambda c: c.uses_tau)
+        raise UnsupportedConfigError(
+            f"RunConfig.tau (tau-nice chunk size) is only consumed by "
+            f"{tau_algos}, which run on a mesh; {entry.name!r} does not "
+            "take tau.  Set RunConfig.mesh and pick a mesh engine, or "
+            "drop tau.")
+    if caps.requires_tau and cfg.tau is None:
+        raise UnsupportedConfigError(
+            f"{entry.name!r} requires RunConfig.tau (the tau-nice chunk "
+            "size); use mpbcfw-shard for the default tau=#shards")
+    if cfg.gap_tol is not None and cfg.gap_tol < 0.0:
+        raise UnsupportedConfigError(
+            f"gap_tol must be >= 0, got {cfg.gap_tol}")

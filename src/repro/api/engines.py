@@ -1,0 +1,340 @@
+"""Built-in engines and their registry entries.
+
+Importing this module registers the whole algorithm family —
+``fw`` / ``ssg`` / ``bcfw`` / ``bcfw-avg`` (single-program engines),
+``mpbcfw`` / ``mpbcfw-avg`` / ``mpbcfw-gram`` (:class:`FusedEngine`:
+each outer iteration is one fused device program), and
+``mpbcfw-shard`` / ``mpbcfw-shard-avg`` / ``mpbcfw-shard-tau``
+(:class:`ShardDriverEngine` over :class:`repro.shard.ShardEngine` on a
+1-D data mesh) — into the :mod:`repro.api.engine` registry.  The
+registry loads this module lazily on first lookup, so ``import
+repro.core`` stays light.
+
+Each engine implements the :class:`~repro.api.engine.Engine` protocol;
+capability differences (mesh, gram, tau, averaging) live in the
+registered :class:`~repro.api.engine.EngineCapabilities`, not in string
+checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bcfw, gram, mpbcfw, subgradient
+from ..core.averaging import extract as extract_average, init_averaging
+from ..core.selection import SyncLedger
+from ..core.ssvm import init_state as init_bcfw_state, weights_of
+from ..core.types import SSVMProblem
+from . import solver as solver_mod
+from .config import RunConfig
+from .engine import EngineCapabilities, register_engine
+
+
+class IterStats(NamedTuple):
+    """Host telemetry returned by a non-multipass engine's read_stats."""
+
+    n_exact: int
+    n_approx: int
+
+
+class _EngineBase:
+    """Shared plumbing: ledger + default checkpoint pack/unpack hooks."""
+
+    def __init__(self, problem: SSVMProblem, lam: float):
+        self.problem = problem
+        self.lam = float(lam)
+        self.ledger = SyncLedger()
+
+    def pack_state(self, state):
+        """Checkpointable pytree for ``state`` (identity by default)."""
+        return state
+
+    def unpack_state(self, tree):
+        """Inverse of :meth:`pack_state` (restores engine-held caches)."""
+        return tree
+
+    def continue_passes(self, state, perms, clock):
+        raise NotImplementedError(
+            f"{type(self).__name__} is not a multipass engine")
+
+
+# ---------------------------------------------------------------------------
+# MP-BCFW execution engines (multipass: the full slope-ruled control loop)
+
+
+class FusedEngine(_EngineBase):
+    """Single-device engine: each outer iteration is one fused program
+    (:func:`repro.core.mpbcfw.outer_iteration`), with the Sec-3.5 Gram
+    cache threaded through the program when configured."""
+
+    capabilities = EngineCapabilities(multipass=True,
+                                      supports_averaging=True)
+
+    def __init__(self, problem: SSVMProblem, lam: float, *,
+                 use_gram: bool = False, gram_steps: int = 10,
+                 averaged: bool = False):
+        super().__init__(problem, lam)
+        self.use_gram, self.gram_steps = use_gram, gram_steps
+        self.averaged = averaged
+        self.gc = None
+
+    def init_state(self, cap: int):
+        if self.use_gram:
+            self.gc = gram.init_gram(self.problem.n, cap)
+        return mpbcfw.init_mp_state(self.problem, cap)
+
+    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
+        """Dispatch one fused outer iteration (no blocking)."""
+        self.ledger.dispatched()
+        mp, self.gc, clock, stats = mpbcfw.jit_outer_iteration(
+            self.problem, mp, self.gc, perm, perms, clock,
+            lam=self.lam, ttl=ttl, steps=self.gram_steps)
+        return mp, clock, stats
+
+    def continue_passes(self, mp, perms, clock):
+        """Overflow batch of approximate passes (rare: only when an
+        iteration runs more than ``approx_batch`` passes)."""
+        self.ledger.dispatched()
+        return mpbcfw.jit_multi_approx_pass(
+            self.problem, mp, perms, clock, lam=self.lam, gc=self.gc,
+            steps=self.gram_steps)
+
+    def read_stats(self, stats):
+        return self.ledger.sync(stats)
+
+    def evaluate(self, mp):
+        return solver_mod.evaluate_objectives(
+            self.problem, mp.inner.phi, mp.avg if self.averaged else None,
+            self.lam)
+
+    def extract(self, mp):
+        w = np.asarray(weights_of(mp.inner.phi, self.lam))
+        w_avg = np.asarray(weights_of(extract_average(mp.avg, self.lam),
+                                      self.lam))
+        return w, w_avg
+
+    def pack_state(self, mp):
+        return (mp, self.gc)
+
+    def unpack_state(self, tree):
+        mp, self.gc = tree
+        return mp
+
+
+class ShardDriverEngine(FusedEngine):
+    """Adapter driving :class:`repro.shard.ShardEngine` through the same
+    protocol: the exact pass is the tau-nice epoch, fused with the
+    approximate batch into one program on the mesh."""
+
+    capabilities = EngineCapabilities(multipass=True, supports_mesh=True,
+                                      supports_averaging=True,
+                                      uses_tau=True)
+
+    def __init__(self, problem: SSVMProblem, lam: float, mesh,
+                 tau: Optional[int], *, averaged: bool = False):
+        from ..shard import ShardEngine  # lazy: keep core importable alone
+        super().__init__(problem, lam, averaged=averaged)
+        self.eng = ShardEngine(problem, mesh, lam=lam)
+        self.tau = int(tau) if tau is not None else self.eng.n_shards
+        self.ledger = self.eng.ledger
+
+    def init_state(self, cap: int):
+        return self.eng.init_state(cap)
+
+    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
+        return self.eng.outer_iteration(mp, perm, perms, clock,
+                                        tau=self.tau, ttl=ttl)
+
+    def continue_passes(self, mp, perms, clock):
+        return self.eng.multi_approx_pass(mp, perms, clock)
+
+    def read_stats(self, stats):
+        return self.eng.read_stats(stats)
+
+    def pack_state(self, mp):
+        return mp
+
+    def unpack_state(self, tree):
+        return self.eng.place(tree)
+
+
+# ---------------------------------------------------------------------------
+# Single-program engines (one exact pass per outer iteration)
+
+
+class FWEngine(_EngineBase):
+    """Batch Frank-Wolfe (paper Alg. 1): n oracle calls per iteration,
+    no per-block state, no permutation.  The oracle-call counter rides
+    in the state tuple so checkpoints resume it exactly."""
+
+    capabilities = EngineCapabilities(needs_perm=False)
+
+    def __init__(self, problem: SSVMProblem, lam: float):
+        super().__init__(problem, lam)
+        # The counter rides through the jitted pass so syncing it blocks
+        # on the pass itself (wall-clock mode times the real compute).
+        self._step = jax.jit(
+            lambda p, c: (bcfw.fw_pass(problem, p, lam), c + problem.n))
+
+    def init_state(self, cap: int):
+        del cap
+        return (jnp.zeros((self.problem.d + 1,), jnp.float32),
+                jnp.zeros((), jnp.int32))
+
+    def outer_iteration(self, state, perm, perms, clock, *, ttl: int):
+        del perm, perms, clock, ttl
+        phi, calls = state
+        self.ledger.dispatched()
+        phi, calls = self._step(phi, calls)
+        return (phi, calls), None, calls
+
+    def read_stats(self, stats):
+        return IterStats(n_exact=int(self.ledger.sync(stats)), n_approx=0)
+
+    def evaluate(self, state):
+        return solver_mod.evaluate_objectives(self.problem, state[0], None,
+                                              self.lam)
+
+    def extract(self, state):
+        return np.asarray(weights_of(state[0], self.lam)), None
+
+
+class SSGEngine(_EngineBase):
+    """Stochastic subgradient baseline: no dual certificate (dual/gap
+    are reported as NaN).  ``t_ctr`` (the 1/(lam t) schedule counter,
+    starting at 1) doubles as the oracle-call counter."""
+
+    capabilities = EngineCapabilities(needs_perm=True)
+
+    def init_state(self, cap: int):
+        del cap
+        return (jnp.zeros((self.problem.d,), jnp.float32),
+                jnp.ones((), jnp.int32))
+
+    def outer_iteration(self, state, perm, perms, clock, *, ttl: int):
+        del perms, clock, ttl
+        w, t_ctr = state
+        self.ledger.dispatched()
+        w, t_ctr = subgradient.jit_ssg_pass(self.problem, w, t_ctr, perm,
+                                            lam=self.lam)
+        return (w, t_ctr), None, t_ctr
+
+    def read_stats(self, stats):
+        return IterStats(n_exact=int(self.ledger.sync(stats)) - 1,
+                         n_approx=0)
+
+    def evaluate(self, state):
+        primal = solver_mod.ssg_primal(self.problem, state[0], self.lam)
+        return primal, float("nan"), primal
+
+    def extract(self, state):
+        return np.asarray(state[0]), None
+
+
+class BCFWEngine(_EngineBase):
+    """Block-coordinate Frank-Wolfe (paper Alg. 2), with the Sec-3.6
+    averaging tracks maintained (reported when ``averaged=True``)."""
+
+    capabilities = EngineCapabilities(needs_perm=True,
+                                      supports_averaging=True)
+
+    def __init__(self, problem: SSVMProblem, lam: float, *,
+                 averaged: bool = False):
+        super().__init__(problem, lam)
+        self.averaged = averaged
+
+    def init_state(self, cap: int):
+        del cap
+        return (init_bcfw_state(self.problem),
+                init_averaging(self.problem.d))
+
+    def outer_iteration(self, state, perm, perms, clock, *, ttl: int):
+        del perms, clock, ttl
+        st, avg = state
+        self.ledger.dispatched()
+        st, avg = bcfw.jit_exact_pass(self.problem, st, avg, perm,
+                                      lam=self.lam)
+        return (st, avg), None, st.n_exact
+
+    def read_stats(self, stats):
+        return IterStats(n_exact=int(self.ledger.sync(stats)), n_approx=0)
+
+    def evaluate(self, state):
+        st, avg = state
+        return solver_mod.evaluate_objectives(
+            self.problem, st.phi, avg if self.averaged else None, self.lam)
+
+    def extract(self, state):
+        st, avg = state
+        w = np.asarray(weights_of(st.phi, self.lam))
+        w_avg = np.asarray(weights_of(extract_average(avg, self.lam),
+                                      self.lam))
+        return w, w_avg
+
+
+# ---------------------------------------------------------------------------
+# Registration (order defines driver.ALGORITHMS for backward compat).
+# overwrite=True keeps registration idempotent: if this module's first
+# import fails partway (registry half-populated), the retry re-executes
+# it from scratch and must not trip the duplicate guard.
+
+
+def _register(name, factory, capabilities):
+    def make(problem, cfg, _factory=factory, _caps=capabilities):
+        engine = _factory(problem, cfg)
+        # One source of truth: the instance's `capabilities` always
+        # equals its registry entry's, even where the entry refines the
+        # class default (mpbcfw-gram, mpbcfw-shard-tau).
+        engine.capabilities = _caps
+        return engine
+
+    register_engine(name, make, capabilities, overwrite=True)
+
+
+def _shard_factory(problem: SSVMProblem, cfg: RunConfig,
+                   averaged: bool = False) -> ShardDriverEngine:
+    from ..launch.mesh import ensure_data_mesh
+    return ShardDriverEngine(problem, cfg.lam, ensure_data_mesh(cfg.mesh),
+                             cfg.tau, averaged=averaged)
+
+
+_register(
+    "fw", lambda p, cfg: FWEngine(p, cfg.lam), FWEngine.capabilities)
+_register(
+    "ssg", lambda p, cfg: SSGEngine(p, cfg.lam), SSGEngine.capabilities)
+_register(
+    "bcfw", lambda p, cfg: BCFWEngine(p, cfg.lam),
+    BCFWEngine.capabilities)
+_register(
+    "bcfw-avg", lambda p, cfg: BCFWEngine(p, cfg.lam, averaged=True),
+    BCFWEngine.capabilities)
+_register(
+    "mpbcfw", lambda p, cfg: FusedEngine(p, cfg.lam),
+    FusedEngine.capabilities)
+_register(
+    "mpbcfw-avg", lambda p, cfg: FusedEngine(p, cfg.lam, averaged=True),
+    FusedEngine.capabilities)
+_register(
+    "mpbcfw-gram",
+    lambda p, cfg: FusedEngine(p, cfg.lam, use_gram=True,
+                               gram_steps=cfg.gram_steps),
+    EngineCapabilities(
+        multipass=True, supports_gram=True, supports_averaging=True,
+        note="mpbcfw-gram cannot run on a mesh: the Sec-3.5 Gram cache "
+             "has no sharded twin yet (ROADMAP gap).  Drop "
+             "RunConfig.mesh, or pick a mpbcfw-shard* engine without "
+             "the Gram scheme."))
+_register(
+    "mpbcfw-shard", _shard_factory, ShardDriverEngine.capabilities)
+_register(
+    "mpbcfw-shard-avg",
+    lambda p, cfg: _shard_factory(p, cfg, averaged=True),
+    ShardDriverEngine.capabilities)
+_register(
+    "mpbcfw-shard-tau", _shard_factory,
+    dataclasses.replace(ShardDriverEngine.capabilities,
+                        requires_tau=True))

@@ -1,0 +1,16 @@
+"""Typed errors for the public API layer.
+
+Every invalid (algorithm, config) combination — a mesh handed to a
+single-device engine, tau-nice chunking without a mesh, an unknown
+algorithm name — is rejected with the same exception type,
+:class:`UnsupportedConfigError`, raised from one place
+(:func:`repro.api.engine.validate_config`) off the engine's declared
+:class:`~repro.api.engine.EngineCapabilities`.  It subclasses
+``ValueError`` so pre-registry callers that caught ``ValueError`` keep
+working.
+"""
+from __future__ import annotations
+
+
+class UnsupportedConfigError(ValueError):
+    """A RunConfig asks an engine for a capability it does not declare."""

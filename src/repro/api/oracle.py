@@ -1,0 +1,148 @@
+"""The public ``Oracle`` protocol and the declarative ``OracleSpec``.
+
+A structural-SVM task plugs into the optimizer through a single
+callable: the per-example loss-augmented max-oracle
+``oracle(w, example) -> plane`` (:class:`Oracle`).  Writing that
+callable by hand means re-deriving the plane algebra of the paper
+(eq. 5: ``phi^{iy} = [(psi(x,y') - psi(x,y)) / n, Delta(y,y') / n]``)
+for every task — which is exactly what the three per-task
+``make_problem`` factories used to copy-paste.
+
+:class:`OracleSpec` replaces that with the declarative decomposition the
+paper actually works in:
+
+  * ``decode(w, example)`` — loss-augmented argmax over the label space
+    (the costly part: Viterbi, ICM, explicit argmax, ...);
+  * ``features(example, y)`` — the joint feature map ``psi(x, y)`` for
+    the *learned* weights;
+  * ``loss(example, y)`` — the task loss ``Delta(y_true, y)``;
+  * ``offset(example, y)`` — optional fixed (weight-free) score terms,
+    e.g. the graph task's attractive pairwise energy;
+  * ``dim(data)`` — the feature dimension ``d``.
+
+One shared :func:`build_problem` assembles the
+:class:`~repro.core.types.SSVMProblem` from any spec; the bundled tasks
+(:mod:`repro.core.oracles.multiclass` / ``chain`` / ``graph``) are
+specs, and a user-defined task is a ~20-line subclass (see
+``examples/quickstart.py``) — no edits to ``repro.core``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Protocol, TYPE_CHECKING, \
+    runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # the oracle modules import us: stay cycle-free
+    from ..core.types import SSVMProblem
+
+
+@runtime_checkable
+class Oracle(Protocol):
+    """The runtime max-oracle contract consumed by the optimizer.
+
+    ``example`` is ``tree_map(lambda a: a[i], problem.data)``; the return
+    value is the example's plane ``phi^{iy} in R^{d+1}`` (linear part
+    ``phi_star = (psi(x,y') - psi(x,y)) / n`` and offset
+    ``phi_circ = Delta / n``).
+    """
+
+    def __call__(self, w: jnp.ndarray, example: Any) -> jnp.ndarray: ...
+
+
+class OracleSpec:
+    """Declarative description of a structural-SVM task.
+
+    Subclass and implement :meth:`dim`, :meth:`truth`, :meth:`decode`,
+    :meth:`features`, and :meth:`loss`; override :meth:`offset` when the
+    score has fixed (weight-free) terms and set ``clamp = True`` when the
+    decoder is approximate (the assembled oracle then clamps
+    negative-score planes to the zero plane so ``H~_i >= 0`` stays a
+    valid lower-bound direction — see the graph task).
+
+    All methods take ONE example (already indexed out of the data
+    pytree) and must be jit-traceable: the assembled oracle runs inside
+    the fused outer-iteration programs and is vmapped over the dataset.
+    """
+
+    clamp: bool = False
+
+    def dim(self, data: Any) -> int:
+        """Feature dimension ``d`` of the learned weight vector."""
+        raise NotImplementedError
+
+    def truth(self, example: Any) -> Any:
+        """The example's ground-truth labeling ``y_i``."""
+        raise NotImplementedError
+
+    def decode(self, w: jnp.ndarray, example: Any) -> Any:
+        """Loss-augmented argmax: ``argmax_y <w, psi(x,y)> + Delta + offset``."""
+        raise NotImplementedError
+
+    def features(self, example: Any, y: Any) -> jnp.ndarray:
+        """Joint feature map ``psi(x, y) in R^d`` (learned part only)."""
+        raise NotImplementedError
+
+    def loss(self, example: Any, y: Any) -> jnp.ndarray:
+        """Task loss ``Delta(y_true(example), y)`` as a () array."""
+        raise NotImplementedError
+
+    def offset(self, example: Any, y: Any) -> jnp.ndarray:
+        """Fixed (weight-free) score terms; default 0."""
+        del example, y
+        return jnp.zeros((), jnp.float32)
+
+    def meta(self, data: Any) -> Any:
+        """Optional problem metadata (opaque to the optimizer)."""
+        del data
+        return None
+
+
+def _leading_dim(data: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(data)
+    if not leaves:
+        raise ValueError("data pytree has no array leaves")
+    n = int(leaves[0].shape[0])
+    for leaf in leaves:
+        if int(leaf.shape[0]) != n:
+            raise ValueError("all data leaves must share the leading "
+                             f"dimension n; got {leaf.shape[0]} != {n}")
+    return n
+
+
+def build_problem(spec: OracleSpec, data: Any,
+                  meta: Optional[Any] = None) -> "SSVMProblem":
+    """Assemble an :class:`~repro.core.types.SSVMProblem` from a spec.
+
+    The one shared implementation of the paper's plane algebra: the
+    oracle closure decodes, then builds
+    ``star = (psi(y') - psi(y_i)) / n`` and
+    ``circ = (Delta + offset(y') - offset(y_i)) / n``, clamping to the
+    zero plane for approximate decoders (``spec.clamp``).  ``n`` is the
+    shared leading dimension of the data leaves.
+    """
+    from ..core.types import SSVMProblem
+
+    n = _leading_dim(data)
+    d = int(spec.dim(data))
+
+    def oracle(w: jnp.ndarray, example: Any) -> jnp.ndarray:
+        y_hat = spec.decode(w, example)
+        y_true = spec.truth(example)
+        star = (spec.features(example, y_hat)
+                - spec.features(example, y_true)) / n
+        circ = (spec.loss(example, y_hat)
+                + spec.offset(example, y_hat)
+                - spec.offset(example, y_true)) / n
+        plane = jnp.concatenate([star, circ[None].astype(star.dtype)])
+        if spec.clamp:
+            # Approximate decoders can return a plane *worse* than the
+            # incumbent ground-truth plane (score < 0); clamp to the zero
+            # plane so H~_i >= 0 stays a valid lower-bound direction.
+            score = jnp.dot(plane[:-1], w) + plane[-1]
+            plane = jnp.where(score > 0.0, plane, jnp.zeros_like(plane))
+        return plane
+
+    return SSVMProblem(n=n, d=d, data=data, oracle=oracle,
+                       meta=meta if meta is not None else spec.meta(data))

@@ -1,0 +1,511 @@
+"""The :class:`Solver` facade — the engine-generic SSVM control loop.
+
+This is the piece of the paper that is inherently an *online control
+loop*: everything it schedules is a compiled JAX program owned by an
+:class:`~repro.api.engine.Engine` resolved from the registry by
+``RunConfig.algo``.  The loop itself only draws permutations, reads
+telemetry, keeps the books, and yields one
+:class:`~repro.api.config.TraceRow` per outer iteration through the
+streaming :meth:`Solver.iterate` generator.
+
+Sync accounting (multipass engines): exactly **one program dispatch and
+one host sync per outer iteration** (more only if an iteration's
+approximate passes overflow ``approx_batch``), counted honestly through
+:class:`repro.core.selection.SyncLedger` and reported per iteration in
+``TraceRow.host_syncs`` / ``TraceRow.dispatches``.  The returned
+per-pass telemetry is replayed into the host-side
+:class:`~repro.core.selection.IterationTracker`:
+
+  * wall clock (production): the measured iteration time is attributed
+    across the batch pro-rata by modeled pass cost, which also
+    calibrates the per-plane cost estimate the device rule uses next
+    iteration;
+  * :class:`repro.core.selection.CostModel` (simulation/CI): a virtual
+    clock driven by #oracle-calls and #cached-planes replays the
+    per-pass plane counts exactly, reproducing the paper's
+    USPS/OCR/HorseSeg regimes deterministically on any host.
+
+Evaluation (:func:`evaluate_objectives`: primal/dual/gap, n — 2n with
+averaging — extra oracle calls per iteration) is telemetry, **not** part
+of the control loop: its wall time is measured and subtracted from every
+clock reading (``_Clock.exclude``), and its device fetches are not
+charged to the ledger.
+
+Stopping is pluggable (:mod:`repro.api.stopping`): ``max_iters``, an
+optional wall/virtual-time budget, and an optional duality-gap tolerance
+come from the config; extra criteria and per-iteration callbacks are
+constructor arguments.  Warm start / resume goes through
+:class:`repro.checkpoint.manager.CheckpointManager` (:meth:`Solver.save`
+/ :meth:`Solver.restore`): under a CostModel a resumed run is bit-for-bit
+the uninterrupted one.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Callable, Iterable, Iterator, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..core.selection import (CostModel, IterationTracker,
+                              attribute_wall_time)
+from ..core.ssvm import batched_oracle, dual_value, weights_of
+from ..core.averaging import extract as extract_average
+from ..core.types import SSVMProblem
+from .config import RunConfig, RunResult, TraceRow
+from .engine import Engine, engine_entry, validate_config
+from .stopping import (MaxIters, StopContext, StopOnGap, StoppingCriterion,
+                       WallTimeBudget)
+
+Callback = Callable[["Solver", TraceRow], None]
+
+
+class _Clock:
+    """Wall/virtual time source honoring the "evaluation is not timed"
+    contract: durations measured inside :meth:`exclude` are subtracted
+    from every reading, so ``TraceRow.time`` never includes the
+    n-oracle-call evaluation sweeps.  A :class:`CostModel` clock is
+    immune by construction (it only advances through explicit charges)."""
+
+    def __init__(self, cost_model: Optional[CostModel]):
+        self.cm = cost_model
+        self._wall0 = time.perf_counter()
+        self._excluded = 0.0
+        self._started = False
+
+    def start(self) -> None:
+        """Anchor the wall clock at the first call (no-op afterwards, and
+        for CostModel clocks).  The solver calls this when iteration
+        begins, so setup time between constructing a Solver and running
+        it is never charged to trace rows or the time budget."""
+        if not self._started:
+            self._started = True
+            self._wall0 = time.perf_counter()
+            self._excluded = 0.0
+
+    def _wall(self) -> float:
+        return time.perf_counter() - self._wall0 - self._excluded
+
+    @contextmanager
+    def exclude(self):
+        """Context whose wall time never reaches trace rows."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._excluded += time.perf_counter() - t0
+
+    def exact(self, n_calls: int) -> float:
+        if self.cm is not None:
+            return self.cm.exact_pass(n_calls)
+        return self._wall()
+
+    def approx(self, total_planes: int) -> float:
+        if self.cm is not None:
+            return self.cm.approx_pass(total_planes)
+        return self._wall()
+
+    def now(self) -> float:
+        if self.cm is not None:
+            return self.cm.now
+        return self._wall()
+
+
+def evaluate_objectives(problem: SSVMProblem, phi, avg, lam: float):
+    """Primal/dual/gap (+ primal at the averaged iterate).  Not timed:
+    callers wrap this in ``clock.exclude()``."""
+    w = weights_of(phi, lam)
+    planes = batched_oracle(problem, w)
+    hinge = jnp.sum(planes[:, :-1] @ w + planes[:, -1])
+    primal = 0.5 * lam * jnp.dot(w, w) + hinge
+    dual = dual_value(phi, lam)
+    if avg is not None:
+        phi_bar = extract_average(avg, lam)
+        w_bar = weights_of(phi_bar, lam)
+        planes_b = batched_oracle(problem, w_bar)
+        hinge_b = jnp.sum(planes_b[:, :-1] @ w_bar + planes_b[:, -1])
+        primal_avg = 0.5 * lam * jnp.dot(w_bar, w_bar) + hinge_b
+    else:
+        primal_avg = primal
+    return float(primal), float(dual), float(primal_avg)
+
+
+def ssg_primal(problem: SSVMProblem, w, lam: float) -> float:
+    """Primal objective at a raw weight vector (no dual certificate)."""
+    planes = batched_oracle(problem, w)
+    return float(0.5 * lam * jnp.dot(w, w)
+                 + jnp.sum(planes[:, :-1] @ w + planes[:, -1]))
+
+
+def _fit_pass_costs(xs: List[float], ys: List[float]):
+    """Least-squares fit of iteration time ~ exact_cost + plane_cost * x.
+
+    ``x`` is the iteration's total approximate plane-steps.  Returns
+    ``(exact_cost, plane_cost)`` when the recent window identifies both
+    terms (>= 2 distinct x values, positive coefficients), else ``None``.
+    """
+    if len(xs) < 2:
+        return None
+    x = np.asarray(xs[-8:], np.float64)
+    y = np.asarray(ys[-8:], np.float64)
+    var = float(np.var(x))
+    if var <= 0.0:
+        return None
+    b = float(np.mean((x - x.mean()) * (y - y.mean()))) / var
+    a = float(y.mean() - b * x.mean())
+    if a <= 0.0 or b <= 0.0:
+        return None
+    return a, b
+
+
+def _draw_perms(rng, n: int, k: int) -> jnp.ndarray:
+    if k == 0:
+        return jnp.zeros((0, n), jnp.int32)
+    return jnp.asarray(np.stack([rng.permutation(n) for _ in range(k)]))
+
+
+def _rng_state_to_json(rng: np.random.RandomState) -> list:
+    name, keys, pos, has_gauss, cached = rng.get_state()
+    return [name, [int(x) for x in keys], int(pos), int(has_gauss),
+            float(cached)]
+
+
+def _rng_state_from_json(state: list):
+    name, keys, pos, has_gauss, cached = state
+    return (name, np.asarray(keys, np.uint32), int(pos), int(has_gauss),
+            float(cached))
+
+
+class Solver:
+    """Engine-generic SSVM training facade.
+
+    ``Solver(problem, cfg)`` resolves ``cfg.algo`` through the engine
+    registry, validates the config against the engine's capabilities
+    (typed :class:`~repro.api.errors.UnsupportedConfigError` on any
+    mismatch), and exposes:
+
+      * :meth:`iterate` — a streaming generator of ``TraceRow``s (the
+        control loop; stops when a stopping criterion fires);
+      * :meth:`run` — drain :meth:`iterate` and return a
+        :class:`~repro.api.config.RunResult` (what ``driver.run`` now
+        shims to);
+      * :meth:`save` / :meth:`restore` — checkpoint & bit-for-bit resume
+        through :class:`repro.checkpoint.manager.CheckpointManager`.
+    """
+
+    def __init__(self, problem: SSVMProblem, cfg: RunConfig, *,
+                 stop: Iterable[StoppingCriterion] = (),
+                 callbacks: Iterable[Callback] = (),
+                 checkpoint: Optional[CheckpointManager] = None,
+                 checkpoint_every: int = 0):
+        entry = engine_entry(cfg.algo)
+        validate_config(entry, cfg)
+        self.problem = problem
+        self.cfg = cfg
+        self.engine: Engine = entry.factory(problem, cfg)
+        self.caps = entry.capabilities
+        self.callbacks = list(callbacks)
+        self.checkpoint = checkpoint
+        self.checkpoint_every = int(checkpoint_every)
+        self.stop_criteria: List[StoppingCriterion] = [
+            MaxIters(cfg.max_iters)]
+        if cfg.gap_tol is not None:
+            self.stop_criteria.append(StopOnGap(cfg.gap_tol))
+        if cfg.time_budget is not None:
+            self.stop_criteria.append(WallTimeBudget(cfg.time_budget))
+        self.stop_criteria.extend(stop)
+
+        self._rng = np.random.RandomState(cfg.seed)
+        self._clock = _Clock(cfg.cost_model)
+        self._state = self.engine.init_state(cfg.cap)
+        self._it = 0
+        self._last_row: Optional[TraceRow] = None
+        self.trace: List[TraceRow] = []
+        # Per-pass cost constants for the on-device slope rule.  CostModel
+        # mode uses the model's exact constants (so the device decisions
+        # match a host replay verbatim); wall-clock mode starts from
+        # defaults and recalibrates from measured iteration times.
+        cm = cfg.cost_model
+        n = problem.n
+        self._est_exact = cm.oracle_cost * n if cm is not None else 1.0
+        self._est_plane = cm.plane_cost if cm is not None else 1e-3
+        self._wall_x: List[float] = []  # plane-steps per iter (regressor)
+        self._wall_y: List[float] = []  # measured iteration seconds
+
+    # -- state / results ----------------------------------------------------
+
+    @property
+    def state(self):
+        """The engine's current optimizer state (device pytree)."""
+        return self._state
+
+    @property
+    def iteration(self) -> int:
+        """Index of the next outer iteration to run."""
+        return self._it
+
+    def result(self) -> RunResult:
+        """Trace so far + final weights extracted from the live state."""
+        w, w_avg = self.engine.extract(self._state)
+        return RunResult(trace=list(self.trace), w=w, w_avg=w_avg)
+
+    def run(self) -> RunResult:
+        """Drain :meth:`iterate` and return the full result."""
+        for _ in self.iterate():
+            pass
+        return self.result()
+
+    # -- the control loop ---------------------------------------------------
+
+    def _should_stop(self) -> bool:
+        ctx = StopContext(iteration=self._it, last_row=self._last_row,
+                          elapsed=self._clock.now())
+        return any(c.should_stop(ctx) for c in self.stop_criteria)
+
+    def iterate(self) -> Iterator[TraceRow]:
+        """Run outer iterations, yielding one ``TraceRow`` each, until a
+        stopping criterion fires.  Resumable: iterating again (or after
+        :meth:`restore`) continues from the current state."""
+        self._clock.start()
+        inner = (self._iterate_multipass() if self.caps.multipass
+                 else self._iterate_simple())
+        while not self._should_stop():
+            row = next(inner)
+            self.trace.append(row)
+            self._last_row = row
+            self._it += 1
+            for cb in self.callbacks:
+                cb(self, row)
+            if (self.checkpoint is not None and self.checkpoint_every > 0
+                    and self._it % self.checkpoint_every == 0):
+                with self._clock.exclude():
+                    self.save(self.checkpoint)
+            yield row
+
+    def _iterate_simple(self) -> Iterator[TraceRow]:
+        """One fused program per outer iteration, no approximate phase
+        (fw / ssg / bcfw and any registered non-multipass engine)."""
+        engine, cfg, clock = self.engine, self.cfg, self._clock
+        n = self.problem.n
+        while True:
+            it = self._it
+            led0 = engine.ledger.counts()
+            perm = (jnp.asarray(self._rng.permutation(n))
+                    if self.caps.needs_perm else None)
+            self._state, _, stats = engine.outer_iteration(
+                self._state, perm, None, None, ttl=cfg.ttl)
+            st = engine.read_stats(stats)  # the iteration's single sync
+            t = clock.exact(n)
+            with clock.exclude():
+                primal, dual, primal_avg = engine.evaluate(self._state)
+            led1 = engine.ledger.counts()
+            yield TraceRow(it, int(st.n_exact), int(st.n_approx), t,
+                           primal, dual, primal - dual, primal_avg,
+                           0.0, 0, led1[0] - led0[0], led1[2] - led0[2])
+
+    def _iterate_multipass(self) -> Iterator[TraceRow]:
+        """The MP-BCFW control loop, generic over the execution engine.
+
+        Per outer iteration the loop dispatches one fused program and
+        blocks exactly once on its telemetry; extra (dispatch, sync)
+        pairs occur only when the slope rule wants more than
+        ``approx_batch`` passes.
+        """
+        from ..core import mpbcfw
+
+        problem, cfg, engine, clock = (self.problem, self.cfg, self.engine,
+                                       self._clock)
+        n, lam = problem.n, cfg.lam
+        cm = cfg.cost_model
+        rng = self._rng
+        tracker = IterationTracker()
+        f_end = float(dual_value(self._state.inner.phi, lam))
+        while True:
+            it = self._it
+            mp = self._state
+            led0 = engine.ledger.counts()
+            f_start = f_end     # TTL eviction does not change phi, hence F
+            t0 = clock.now()
+            tracker.start(t0, f_start)
+
+            plane_cost = cm.plane_cost if cm is not None else self._est_plane
+            # Device times are relative to the iteration start (t0 = 0):
+            # the slope rule is shift-invariant, and absolute virtual times
+            # would outgrow float32 resolution on long runs
+            # (t + plane_cost == t).  f0 here is a host-side seed only —
+            # the fused program re-seeds it from the on-device dual at
+            # iteration entry (bitwise the same value, with no host sync
+            # needed to obtain it).
+            clock_dev = mpbcfw.make_slope_clock(0.0, f_start,
+                                                self._est_exact, plane_cost)
+            perm = jnp.asarray(rng.permutation(n))
+            # Permutations for passes the device rule skips are drawn but
+            # unused, so the schedule is deterministic per (seed,
+            # approx_batch); approx_batch=1 reproduces the unbatched
+            # loop's RNG stream exactly.
+            perms = _draw_perms(rng, n, min(cfg.approx_batch,
+                                            cfg.max_approx_passes))
+            mp, clock_dev, stats = engine.outer_iteration(
+                mp, perm, perms, clock_dev, ttl=cfg.ttl)
+            st = engine.read_stats(stats)  # the iteration's single sync
+            f_exact = float(st.f_entry)
+            ws_total = int(st.ws_total)
+            k = int(st.passes_run)
+            duals_all = [float(x) for x in st.duals[:k]]
+            planes_all = [int(x) for x in st.planes[:k]]
+            while bool(st.more) and len(duals_all) < cfg.max_approx_passes:
+                batch = min(cfg.approx_batch,
+                            cfg.max_approx_passes - len(duals_all))
+                perms = _draw_perms(rng, n, batch)
+                mp, clock_dev, stats = engine.continue_passes(mp, perms,
+                                                              clock_dev)
+                st = engine.read_stats(stats)
+                k = int(st.passes_run)
+                duals_all += [float(x) for x in st.duals[:k]]
+                planes_all += [int(x) for x in st.planes[:k]]
+            led1 = engine.ledger.counts()
+
+            # Replay the device-chosen pass schedule through the host
+            # clock (the tracker mirrors what the device rule saw —
+            # telemetry and validation; the continue decisions themselves
+            # happened on device).
+            if cm is not None:
+                tracker.record(clock.exact(n), f_exact)
+                for dv, n_planes in zip(duals_all, planes_all):
+                    tracker.record(clock.approx(n_planes), dv)
+            else:
+                elapsed = clock.now() - t0
+                weights = [self._est_exact] + [self._est_plane * max(p, 1)
+                                               for p in planes_all]
+                durs = attribute_wall_time(elapsed, weights)
+                ts, t_cursor = [], t0
+                for dur in durs:
+                    t_cursor += dur
+                    ts.append(t_cursor)
+                tracker.record(ts[0], f_exact)
+                tracker.record_batch(ts[1:], duals_all)
+                # Calibrate the device rule's cost constants.  Pro-rata
+                # attribution alone preserves the est_exact/est_plane
+                # *ratio*, so regress elapsed ~ a + b*plane_steps across
+                # iterations (pass counts vary) to learn the real
+                # exact-vs-approx split.
+                self._wall_x.append(float(sum(max(p, 1)
+                                              for p in planes_all)))
+                self._wall_y.append(float(elapsed))
+                fit = _fit_pass_costs(self._wall_x, self._wall_y)
+                if fit is not None:
+                    self._est_exact, self._est_plane = fit
+                else:
+                    self._est_exact = max(durs[0], 1e-9)
+                    if planes_all:
+                        tot = sum(max(p, 1) for p in planes_all)
+                        self._est_plane = max(sum(durs[1:]) / tot, 1e-12)
+
+            n_approx_passes = len(duals_all)
+            # One statistic in both branches (Fig. 5): the mean working-
+            # set size over the iteration's passes, straight from the
+            # synced telemetry — no extra device fetch.  Approximate
+            # passes never insert or evict planes, so every pass of the
+            # iteration sees the post-exact-pass sets and the per-pass
+            # mean is exactly ws_total/n.
+            ws_mean = ws_total / n
+            with clock.exclude():
+                primal, dual, primal_avg = engine.evaluate(mp)
+            f_end = dual
+            self._state = mp
+            yield TraceRow(
+                it, int(mp.inner.n_exact), int(mp.inner.n_approx),
+                clock.now(), primal, dual, primal - dual, primal_avg,
+                ws_mean, n_approx_passes,
+                led1[0] - led0[0], led1[2] - led0[2])
+
+    # -- checkpoint / resume ------------------------------------------------
+
+    def save(self, manager: Optional[CheckpointManager] = None,
+             step: Optional[int] = None) -> int:
+        """Checkpoint the optimizer state + host control-loop state.
+
+        Returns the step saved under (default: the current iteration).
+        Under a CostModel the checkpoint is sufficient for bit-for-bit
+        resume; in wall-clock mode the calibrated cost estimates and the
+        virtual elapsed time are restored best-effort.
+        """
+        manager = manager or self.checkpoint
+        if manager is None:
+            raise ValueError("no CheckpointManager: pass one to save() or "
+                             "to the Solver constructor")
+        step = self._it if step is None else int(step)
+        pack = getattr(self.engine, "pack_state", None)
+        tree = pack(self._state) if pack is not None else self._state
+        import dataclasses
+
+        extra = {
+            "algo": self.cfg.algo,
+            "iteration": self._it,
+            # the previous iteration's row: stopping criteria (e.g.
+            # StopOnGap) consult it before the first resumed iteration,
+            # so a resumed run stops exactly where the uninterrupted one
+            # would have
+            "last_row": (dataclasses.asdict(self._last_row)
+                         if self._last_row is not None else None),
+            "rng_state": _rng_state_to_json(self._rng),
+            "clock_now": self._clock.now(),
+            "est_exact": self._est_exact,
+            "est_plane": self._est_plane,
+            "wall_x": self._wall_x,
+            "wall_y": self._wall_y,
+        }
+        manager.save(step, tree, extra=extra)
+        return step
+
+    @classmethod
+    def restore(cls, problem: SSVMProblem, cfg: RunConfig,
+                manager: CheckpointManager, step: Optional[int] = None,
+                **solver_kwargs) -> "Solver":
+        """Rebuild a solver from a checkpoint and resume mid-run.
+
+        The restored solver continues at the saved iteration with the
+        saved RNG stream and (virtual) clock; under a CostModel the
+        remaining trace is bit-for-bit what the uninterrupted run would
+        have produced.
+        """
+        solver = cls(problem, cfg, **solver_kwargs)
+        # Pin the step once up front: manifest and arrays must come from
+        # the same checkpoint even if another process commits a newer
+        # step mid-restore.
+        if step is None:
+            step = manager.latest_step()
+        manifest = manager.load_manifest(step)
+        extra = manifest.get("extra", {})
+        if extra.get("algo") not in (None, cfg.algo):
+            raise ValueError(
+                f"checkpoint was saved by algo={extra['algo']!r}, "
+                f"cannot resume as {cfg.algo!r}")
+        pack = getattr(solver.engine, "pack_state", None)
+        unpack = getattr(solver.engine, "unpack_state", None)
+        template = pack(solver._state) if pack is not None else solver._state
+        tree, _ = manager.restore(template, step)
+        solver._state = unpack(tree) if unpack is not None else tree
+        solver._it = int(extra.get("iteration", manifest["step"]))
+        if extra.get("last_row") is not None:
+            solver._last_row = TraceRow(**extra["last_row"])
+        if "rng_state" in extra:
+            solver._rng.set_state(_rng_state_from_json(extra["rng_state"]))
+        now = float(extra.get("clock_now", 0.0))
+        if solver._clock.cm is not None:
+            solver._clock.cm.now = now
+        else:
+            # resume the elapsed wall time; mark started so the first
+            # iterate() does not re-anchor over it
+            solver._clock._wall0 = time.perf_counter() - now
+            solver._clock._excluded = 0.0
+            solver._clock._started = True
+        solver._est_exact = float(extra.get("est_exact",
+                                            solver._est_exact))
+        solver._est_plane = float(extra.get("est_plane",
+                                            solver._est_plane))
+        solver._wall_x = [float(x) for x in extra.get("wall_x", [])]
+        solver._wall_y = [float(y) for y in extra.get("wall_y", [])]
+        return solver

@@ -1,0 +1,65 @@
+"""Pluggable stopping criteria for :class:`repro.api.Solver`.
+
+A criterion is any object with ``should_stop(ctx) -> bool``; the solver
+queries its criteria *before* each outer iteration (so ``MaxIters(k)``
+admits exactly ``k`` iterations) and stops on the first True.  The
+built-ins cover the three knobs of :class:`~repro.api.config.RunConfig`:
+iteration budget, wall/virtual-time budget, and Osokin et al.-style
+duality-gap tolerance (the gap the solver's evaluation step already
+computes — gap stopping costs no extra oracle calls).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Protocol, runtime_checkable
+
+from .config import TraceRow
+
+
+@dataclass(frozen=True)
+class StopContext:
+    """What a criterion may look at before iteration ``iteration`` runs."""
+
+    iteration: int                 # index of the iteration about to run
+    last_row: Optional[TraceRow]   # telemetry of the previous iteration
+    elapsed: float                 # clock.now(): wall or CostModel seconds
+
+
+@runtime_checkable
+class StoppingCriterion(Protocol):
+    def should_stop(self, ctx: StopContext) -> bool: ...
+
+
+@dataclass(frozen=True)
+class MaxIters:
+    limit: int
+
+    def should_stop(self, ctx: StopContext) -> bool:
+        return ctx.iteration >= self.limit
+
+
+@dataclass(frozen=True)
+class StopOnGap:
+    """Stop once the duality gap certificate reaches ``tol``.
+
+    NaN gaps (engines without a dual bound, e.g. SSG) never trigger this
+    criterion — NaN comparisons are False.
+    """
+
+    tol: float
+
+    def should_stop(self, ctx: StopContext) -> bool:
+        return (ctx.last_row is not None
+                and ctx.last_row.gap <= self.tol)
+
+
+@dataclass(frozen=True)
+class WallTimeBudget:
+    """Stop once the run clock reaches ``budget`` seconds (wall seconds
+    in production, virtual seconds under a CostModel — evaluation time
+    is excluded from both, per the driver's timing contract)."""
+
+    budget: float
+
+    def should_stop(self, ctx: StopContext) -> bool:
+        return ctx.elapsed >= self.budget

@@ -92,6 +92,18 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_manifest(self, step: Optional[int] = None) -> dict:
+        """Read a checkpoint's manifest (step, time, extra, leaf specs)
+        without materializing any arrays — cheap pre-restore validation
+        (e.g. :meth:`repro.api.Solver.restore` checks the saved algo
+        against the resuming config before touching the npz)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        return json.loads((d / "manifest.json").read_text())
+
     def restore(self, template: Any, step: Optional[int] = None):
         """Restore into the structure of ``template`` (arrays or
         ShapeDtypeStructs).  Returns (tree, manifest)."""

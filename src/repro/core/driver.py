@@ -1,475 +1,73 @@
-"""Host-side training driver for the SSVM optimizers.
+"""Deprecated shim over :class:`repro.api.Solver`.
 
-Orchestrates jitted passes, wall-clock (or simulated) timing, the paper's
-slope rule, TTL eviction, and telemetry.  This is the piece of the paper
-that is inherently an *online control loop* — everything it schedules is a
-compiled JAX program.
+The control loop, the engine implementations, and the config/trace types
+all moved to the public protocol layer:
 
-The MP-BCFW control loop is *engine-generic*: :func:`run` drives an engine
-object that owns the compiled programs, and the loop itself only draws
-permutations, reads telemetry, and keeps the books.  Two engines exist:
+  * :mod:`repro.api.solver`  — the engine-generic control loop
+    (:class:`~repro.api.Solver`, streaming ``iterate()``, stopping
+    criteria, callbacks, checkpoint/resume);
+  * :mod:`repro.api.engine`  — the ``Engine`` protocol,
+    ``EngineCapabilities``, and the ``register_engine`` registry that
+    replaced the hard-coded ``ALGORITHMS`` tuple and the if/elif ladder
+    this module used to dispatch on;
+  * :mod:`repro.api.engines` — the built-in engines (fw / ssg / bcfw /
+    mpbcfw families and the shard_map engine);
+  * :mod:`repro.api.config`  — ``RunConfig`` / ``TraceRow`` /
+    ``RunResult`` (re-exported here, so existing imports keep working).
 
-  * :class:`_FusedEngine` — single device.  The whole outer iteration
-    (TTL eviction, exact pass — plain or Sec-3.5 Gram —, on-device
-    slope-clock seeding, and the slope-ruled batch of approximate passes)
-    is **one** program: :func:`repro.core.mpbcfw.outer_iteration`.
-  * :class:`_ShardDriverEngine` — a :class:`repro.shard.ShardEngine`
-    over a 1-D data mesh (``RunConfig.mesh``, defaulting to all local
-    devices via :func:`repro.launch.mesh.ensure_data_mesh`); the exact
-    pass is the tau-nice epoch (``RunConfig.tau``, default = #shards).
-
-Sync accounting: the driver performs exactly **one program dispatch and
-one host sync per outer iteration** (more only if an iteration's
-approximate passes overflow ``approx_batch``), counted honestly through
-:class:`repro.core.selection.SyncLedger` and reported per iteration in
-``TraceRow.host_syncs`` / ``TraceRow.dispatches``.  The returned per-pass
-telemetry is replayed into the host-side
-:class:`~repro.core.selection.IterationTracker`:
-
-  * wall clock (production): the measured iteration time is attributed
-    across the batch pro-rata by modeled pass cost, which also calibrates
-    the per-plane cost estimate the device rule uses next iteration;
-  * :class:`repro.core.selection.CostModel` (simulation/CI): a virtual
-    clock driven by #oracle-calls and #cached-planes replays the per-pass
-    plane counts exactly, reproducing the paper's USPS/OCR/HorseSeg
-    regimes deterministically on any host.
-
-Evaluation (:func:`_evaluate`: primal/dual/gap, n — 2n with averaging —
-extra oracle calls per iteration) is telemetry, **not** part of the
-control loop: its wall time is measured and subtracted from every clock
-reading (``_Clock.exclude``), and its device fetches are not charged to
-the ledger.
+:func:`run` is kept as a one-call convenience for existing scripts and
+produces bit-for-bit the same ``RunResult`` as
+``Solver(problem, cfg).run()`` — it *is* that call, plus a
+``DeprecationWarning``.
 """
 from __future__ import annotations
 
-import time
-from contextlib import contextmanager
-from dataclasses import dataclass, field
-from typing import List, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh
-
-from . import bcfw, gram, mpbcfw, subgradient
-from .averaging import extract, init_averaging
-from .selection import (CostModel, IterationTracker, SyncLedger,
-                        attribute_wall_time)
-from .ssvm import batched_oracle, dual_value, init_state, weights_of
+from ..api.config import RunConfig, RunResult, TraceRow  # noqa: F401
 from .types import SSVMProblem
 
-ALGORITHMS = ("fw", "ssg", "bcfw", "bcfw-avg",
-              "mpbcfw", "mpbcfw-avg", "mpbcfw-gram",
-              "mpbcfw-shard", "mpbcfw-shard-avg", "mpbcfw-shard-tau")
-
-_SHARD_ALGOS = ("mpbcfw-shard", "mpbcfw-shard-avg", "mpbcfw-shard-tau")
-
-
-@dataclass
-class RunConfig:
-    lam: float
-    algo: str = "mpbcfw"
-    cap: int = 64           # hard cap N (paper: "very large"; memory bound)
-    ttl: int = 10           # T, plane time-to-live in outer iterations
-    max_iters: int = 50
-    max_approx_passes: int = 1000   # M (paper: large; slope rule governs)
-    approx_batch: int = 64  # approximate passes fused per device program
-    gram_steps: int = 10    # repeats per block for the Sec-3.5 scheme
-    seed: int = 0
-    cost_model: Optional[CostModel] = None  # None => wall clock
-    mesh: Optional[Mesh] = None  # mpbcfw-shard*: 1-D data mesh (None =>
-    #                              launch.mesh.ensure_data_mesh default)
-    tau: Optional[int] = None    # mpbcfw-shard*: tau-nice chunk size
-    #                              (None => #shards; must divide n)
+_MOVED = {
+    # name -> (module, attribute); resolved lazily so importing
+    # repro.core stays light (the registry loads engines on first use).
+    "ALGORITHMS": ("repro.api.engine", "algorithms"),
+    "_FusedEngine": ("repro.api.engines", "FusedEngine"),
+    "_ShardDriverEngine": ("repro.api.engines", "ShardDriverEngine"),
+    "_Clock": ("repro.api.solver", "_Clock"),
+    "_evaluate": ("repro.api.solver", "evaluate_objectives"),
+    "_fit_pass_costs": ("repro.api.solver", "_fit_pass_costs"),
+    "_draw_perms": ("repro.api.solver", "_draw_perms"),
+    "batched_oracle": ("repro.api.solver", "batched_oracle"),
+}
 
 
-@dataclass
-class TraceRow:
-    iteration: int
-    n_exact: int
-    n_approx: int
-    time: float
-    primal: float
-    dual: float
-    gap: float
-    primal_avg: float       # primal at the averaged iterate (Sec. 3.6)
-    ws_mean: float          # mean working-set size over the iteration's
-    #                         passes (Fig. 5) — one statistic in all paths
-    approx_passes: int      # approximate passes this iteration (Fig. 6)
-    host_syncs: int = 1     # device->host syncs in the control loop
-    dispatches: int = 1     # program dispatches in the control loop
+def __getattr__(name: str):
+    """PEP-562 compat shims for the pre-``repro.api`` private surface."""
+    moved = _MOVED.get(name)
+    if moved is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
 
-
-@dataclass
-class RunResult:
-    trace: List[TraceRow] = field(default_factory=list)
-    w: Optional[np.ndarray] = None
-    w_avg: Optional[np.ndarray] = None
-
-
-class _Clock:
-    """Wall/virtual time source honoring the "evaluation is not timed"
-    contract: durations measured inside :meth:`exclude` are subtracted
-    from every reading, so ``TraceRow.time`` never includes the
-    n-oracle-call evaluation sweeps.  A :class:`CostModel` clock is
-    immune by construction (it only advances through explicit charges)."""
-
-    def __init__(self, cost_model: Optional[CostModel]):
-        self.cm = cost_model
-        self._wall0 = time.perf_counter()
-        self._excluded = 0.0
-
-    def _wall(self) -> float:
-        return time.perf_counter() - self._wall0 - self._excluded
-
-    @contextmanager
-    def exclude(self):
-        """Context whose wall time never reaches trace rows."""
-        t0 = time.perf_counter()
-        try:
-            yield
-        finally:
-            self._excluded += time.perf_counter() - t0
-
-    def exact(self, n_calls: int) -> float:
-        if self.cm is not None:
-            return self.cm.exact_pass(n_calls)
-        return self._wall()
-
-    def approx(self, total_planes: int) -> float:
-        if self.cm is not None:
-            return self.cm.approx_pass(total_planes)
-        return self._wall()
-
-    def now(self) -> float:
-        if self.cm is not None:
-            return self.cm.now
-        return self._wall()
-
-
-def _evaluate(problem: SSVMProblem, phi, avg, lam: float):
-    """Primal/dual/gap (+ primal at the averaged iterate).  Not timed:
-    callers wrap this in ``clock.exclude()``."""
-    w = weights_of(phi, lam)
-    planes = batched_oracle(problem, w)
-    hinge = jnp.sum(planes[:, :-1] @ w + planes[:, -1])
-    primal = 0.5 * lam * jnp.dot(w, w) + hinge
-    dual = dual_value(phi, lam)
-    if avg is not None:
-        phi_bar = extract(avg, lam)
-        w_bar = weights_of(phi_bar, lam)
-        planes_b = batched_oracle(problem, w_bar)
-        hinge_b = jnp.sum(planes_b[:, :-1] @ w_bar + planes_b[:, -1])
-        primal_avg = 0.5 * lam * jnp.dot(w_bar, w_bar) + hinge_b
-    else:
-        primal_avg = primal
-    return float(primal), float(dual), float(primal_avg)
-
-
-def _fit_pass_costs(xs: List[float], ys: List[float]):
-    """Least-squares fit of iteration time ~ exact_cost + plane_cost * x.
-
-    ``x`` is the iteration's total approximate plane-steps.  Returns
-    ``(exact_cost, plane_cost)`` when the recent window identifies both
-    terms (>= 2 distinct x values, positive coefficients), else ``None``.
-    """
-    if len(xs) < 2:
-        return None
-    x = np.asarray(xs[-8:], np.float64)
-    y = np.asarray(ys[-8:], np.float64)
-    var = float(np.var(x))
-    if var <= 0.0:
-        return None
-    b = float(np.mean((x - x.mean()) * (y - y.mean()))) / var
-    a = float(y.mean() - b * x.mean())
-    if a <= 0.0 or b <= 0.0:
-        return None
-    return a, b
-
-
-# ---------------------------------------------------------------------------
-# MP-BCFW execution engines (the strategy the control loop drives)
-
-
-class _FusedEngine:
-    """Single-device engine: each outer iteration is one fused program
-    (:func:`repro.core.mpbcfw.outer_iteration`), with the Sec-3.5 Gram
-    cache threaded through the program when configured."""
-
-    def __init__(self, problem: SSVMProblem, lam: float, *,
-                 use_gram: bool = False, gram_steps: int = 10):
-        self.problem, self.lam = problem, lam
-        self.use_gram, self.gram_steps = use_gram, gram_steps
-        self.gc = None
-        self.ledger = SyncLedger()
-
-    def init_state(self, cap: int):
-        if self.use_gram:
-            self.gc = gram.init_gram(self.problem.n, cap)
-        return mpbcfw.init_mp_state(self.problem, cap)
-
-    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
-        """Dispatch one fused outer iteration (no blocking)."""
-        self.ledger.dispatched()
-        mp, self.gc, clock, stats = mpbcfw.jit_outer_iteration(
-            self.problem, mp, self.gc, perm, perms, clock,
-            lam=self.lam, ttl=ttl, steps=self.gram_steps)
-        return mp, clock, stats
-
-    def continue_passes(self, mp, perms, clock):
-        """Overflow batch of approximate passes (rare: only when an
-        iteration runs more than ``approx_batch`` passes)."""
-        self.ledger.dispatched()
-        return mpbcfw.jit_multi_approx_pass(
-            self.problem, mp, perms, clock, lam=self.lam, gc=self.gc,
-            steps=self.gram_steps)
-
-    def read_stats(self, stats):
-        return self.ledger.sync(stats)
-
-
-class _ShardDriverEngine:
-    """Adapter driving :class:`repro.shard.ShardEngine` through the same
-    strategy interface: the exact pass is the tau-nice epoch, fused with
-    the approximate batch into one program on the mesh."""
-
-    def __init__(self, problem: SSVMProblem, lam: float, mesh: Mesh,
-                 tau: Optional[int]):
-        from ..shard import ShardEngine  # lazy: keep core importable alone
-        self.eng = ShardEngine(problem, mesh, lam=lam)
-        self.tau = int(tau) if tau is not None else self.eng.n_shards
-        self.ledger = self.eng.ledger
-
-    def init_state(self, cap: int):
-        return self.eng.init_state(cap)
-
-    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
-        return self.eng.outer_iteration(mp, perm, perms, clock,
-                                        tau=self.tau, ttl=ttl)
-
-    def continue_passes(self, mp, perms, clock):
-        return self.eng.multi_approx_pass(mp, perms, clock)
-
-    def read_stats(self, stats):
-        return self.eng.read_stats(stats)
-
-
-def _make_engine(problem: SSVMProblem, cfg: RunConfig):
-    if cfg.algo in _SHARD_ALGOS:
-        from ..launch.mesh import ensure_data_mesh
-        if cfg.algo == "mpbcfw-shard-tau" and cfg.tau is None:
-            raise ValueError(
-                "mpbcfw-shard-tau requires RunConfig.tau (the tau-nice "
-                "chunk size); use mpbcfw-shard for the default tau=#shards")
-        return _ShardDriverEngine(problem, cfg.lam,
-                                  ensure_data_mesh(cfg.mesh), cfg.tau)
-    return _FusedEngine(problem, cfg.lam,
-                        use_gram=(cfg.algo == "mpbcfw-gram"),
-                        gram_steps=cfg.gram_steps)
-
-
-def _draw_perms(rng, n: int, k: int) -> jnp.ndarray:
-    if k == 0:
-        return jnp.zeros((0, n), jnp.int32)
-    return jnp.asarray(np.stack([rng.permutation(n) for _ in range(k)]))
-
-
-def _run_mp(problem: SSVMProblem, cfg: RunConfig, rng, clock: _Clock,
-            res: RunResult, engine) -> RunResult:
-    """The MP-BCFW control loop, generic over the execution engine.
-
-    Per outer iteration the loop dispatches one fused program and blocks
-    exactly once on its telemetry; extra (dispatch, sync) pairs occur only
-    when the slope rule wants more than ``approx_batch`` passes.
-    """
-    n, lam = problem.n, cfg.lam
-    cm = cfg.cost_model
-    mp = engine.init_state(cfg.cap)
-    tracker = IterationTracker()
-    # Per-pass cost constants for the on-device slope rule.  CostModel mode
-    # uses the model's exact constants (so the device decisions match a
-    # host replay verbatim); wall-clock mode starts from defaults and
-    # recalibrates from the measured iteration time every iteration.
-    est_exact = cm.oracle_cost * n if cm is not None else 1.0
-    est_plane = cm.plane_cost if cm is not None else 1e-3
-    wall_x: List[float] = []   # plane-steps per iteration (regressor)
-    wall_y: List[float] = []   # measured iteration seconds
-    f_end = float(dual_value(mp.inner.phi, lam))
-    for it in range(cfg.max_iters):
-        led0 = engine.ledger.counts()
-        f_start = f_end     # TTL eviction does not change phi, hence F
-        t0 = clock.now()
-        tracker.start(t0, f_start)
-
-        plane_cost = cm.plane_cost if cm is not None else est_plane
-        # Device times are relative to the iteration start (t0 = 0): the
-        # slope rule is shift-invariant, and absolute virtual times would
-        # outgrow float32 resolution on long runs (t + plane_cost == t).
-        # f0 here is a host-side seed only — the fused program re-seeds it
-        # from the on-device dual at iteration entry (bitwise the same
-        # value, with no host sync needed to obtain it).
-        clock_dev = mpbcfw.make_slope_clock(0.0, f_start, est_exact,
-                                            plane_cost)
-        perm = jnp.asarray(rng.permutation(n))
-        # Permutations for passes the device rule skips are drawn but
-        # unused, so the schedule is deterministic per (seed,
-        # approx_batch); approx_batch=1 reproduces the unbatched
-        # loop's RNG stream exactly.
-        perms = _draw_perms(rng, n, min(cfg.approx_batch,
-                                        cfg.max_approx_passes))
-        mp, clock_dev, stats = engine.outer_iteration(mp, perm, perms,
-                                                      clock_dev, ttl=cfg.ttl)
-        st = engine.read_stats(stats)  # the iteration's single host sync
-        f_exact = float(st.f_entry)
-        ws_total = int(st.ws_total)
-        k = int(st.passes_run)
-        duals_all = [float(x) for x in st.duals[:k]]
-        planes_all = [int(x) for x in st.planes[:k]]
-        while bool(st.more) and len(duals_all) < cfg.max_approx_passes:
-            batch = min(cfg.approx_batch,
-                        cfg.max_approx_passes - len(duals_all))
-            perms = _draw_perms(rng, n, batch)
-            mp, clock_dev, stats = engine.continue_passes(mp, perms,
-                                                          clock_dev)
-            st = engine.read_stats(stats)
-            k = int(st.passes_run)
-            duals_all += [float(x) for x in st.duals[:k]]
-            planes_all += [int(x) for x in st.planes[:k]]
-        led1 = engine.ledger.counts()
-
-        # Replay the device-chosen pass schedule through the host clock
-        # (the tracker mirrors what the device rule saw — telemetry and
-        # validation; the continue decisions themselves happened on device).
-        if cm is not None:
-            tracker.record(clock.exact(n), f_exact)
-            for dv, n_planes in zip(duals_all, planes_all):
-                tracker.record(clock.approx(n_planes), dv)
-        else:
-            elapsed = clock.now() - t0
-            weights = [est_exact] + [est_plane * max(p, 1)
-                                     for p in planes_all]
-            durs = attribute_wall_time(elapsed, weights)
-            ts, t_cursor = [], t0
-            for dur in durs:
-                t_cursor += dur
-                ts.append(t_cursor)
-            tracker.record(ts[0], f_exact)
-            tracker.record_batch(ts[1:], duals_all)
-            # Calibrate the device rule's cost constants.  Pro-rata
-            # attribution alone preserves the est_exact/est_plane *ratio*,
-            # so regress elapsed ~ a + b*plane_steps across iterations
-            # (pass counts vary) to learn the real exact-vs-approx split.
-            wall_x.append(float(sum(max(p, 1) for p in planes_all)))
-            wall_y.append(float(elapsed))
-            fit = _fit_pass_costs(wall_x, wall_y)
-            if fit is not None:
-                est_exact, est_plane = fit
-            else:
-                est_exact = max(durs[0], 1e-9)
-                if planes_all:
-                    tot = sum(max(p, 1) for p in planes_all)
-                    est_plane = max(sum(durs[1:]) / tot, 1e-12)
-
-        n_approx_passes = len(duals_all)
-        # One statistic in both branches (Fig. 5): the mean working-set
-        # size over the iteration's passes, straight from the synced
-        # telemetry — no extra device fetch.  Approximate passes never
-        # insert or evict planes, so every pass of the iteration sees the
-        # post-exact-pass sets and the per-pass mean is exactly ws_total/n.
-        ws_mean = ws_total / n
-        use_avg = mp.avg if cfg.algo.endswith("avg") else None
-        with clock.exclude():
-            primal, dual, primal_avg = _evaluate(problem, mp.inner.phi,
-                                                 use_avg, lam)
-        f_end = dual
-        res.trace.append(TraceRow(
-            it, int(mp.inner.n_exact), int(mp.inner.n_approx), clock.now(),
-            primal, dual, primal - dual, primal_avg,
-            ws_mean, n_approx_passes,
-            led1[0] - led0[0], led1[2] - led0[2]))
-    res.w = np.asarray(weights_of(mp.inner.phi, lam))
-    res.w_avg = np.asarray(weights_of(extract(mp.avg, lam), lam))
-    return res
+    module, attr = moved
+    value = getattr(importlib.import_module(module), attr)
+    if name == "ALGORITHMS":
+        return value()  # the registry's registration-order name tuple
+    return value
 
 
 def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
-    if cfg.algo not in ALGORITHMS:
-        raise ValueError(f"unknown algorithm {cfg.algo!r}")
-    if cfg.approx_batch < 1:
-        # A zero-pass program reports more=True forever (the rule never
-        # ran), which would spin the overflow loop without terminating.
-        raise ValueError("approx_batch must be >= 1 (use "
-                         "max_approx_passes=0 to disable approximate "
-                         "passes)")
-    if cfg.mesh is not None and cfg.algo not in _SHARD_ALGOS:
-        if cfg.algo == "mpbcfw-gram":
-            raise ValueError(
-                "mpbcfw-gram cannot run on a mesh: the Sec-3.5 Gram cache "
-                "has no sharded twin yet (ROADMAP gap).  Drop "
-                "RunConfig.mesh, or pick one of "
-                f"{_SHARD_ALGOS} without the Gram scheme.")
-        raise ValueError(
-            f"RunConfig.mesh is only consumed by {_SHARD_ALGOS}; "
-            f"{cfg.algo!r} runs single-device")
-    rng = np.random.RandomState(cfg.seed)
-    clock = _Clock(cfg.cost_model)
-    res = RunResult()
-    n, lam = problem.n, cfg.lam
+    """Deprecated: use :class:`repro.api.Solver`.
 
-    if cfg.algo == "fw":
-        phi = jnp.zeros((problem.d + 1,), jnp.float32)
-        step = jax.jit(lambda p: bcfw.fw_pass(problem, p, lam))
-        for it in range(cfg.max_iters):
-            phi = step(phi)
-            phi.block_until_ready()
-            t = clock.exact(n)
-            with clock.exclude():
-                primal, dual, _ = _evaluate(problem, phi, None, lam)
-            res.trace.append(TraceRow(it, (it + 1) * n, 0, t, primal, dual,
-                                      primal - dual, primal, 0.0, 0))
-        res.w = np.asarray(weights_of(phi, lam))
-        return res
+    Equivalent to ``Solver(problem, cfg).run()`` (bit-for-bit identical
+    traces), without access to the Solver's streaming iteration,
+    stopping criteria, callbacks, or checkpoint/resume.
+    """
+    warnings.warn(
+        "driver.run is deprecated: use repro.api.Solver — "
+        "Solver(problem, cfg).run() is the identical call, and exposes "
+        "iterate()/stopping/callbacks/checkpointing on top",
+        DeprecationWarning, stacklevel=2)
+    from ..api.solver import Solver
 
-    if cfg.algo == "ssg":
-        w = jnp.zeros((problem.d,), jnp.float32)
-        t_ctr = jnp.ones((), jnp.int32)
-        for it in range(cfg.max_iters):
-            perm = jnp.asarray(rng.permutation(n))
-            w, t_ctr = subgradient.jit_ssg_pass(problem, w, t_ctr, perm,
-                                                lam=lam)
-            w.block_until_ready()
-            t = clock.exact(n)
-            with clock.exclude():
-                planes = batched_oracle(problem, w)
-                primal = float(0.5 * lam * jnp.dot(w, w)
-                               + jnp.sum(planes[:, :-1] @ w
-                                         + planes[:, -1]))
-            res.trace.append(TraceRow(it, (it + 1) * n, 0, t, primal,
-                                      float("nan"), float("nan"), primal,
-                                      0.0, 0))
-        res.w = np.asarray(w)
-        return res
-
-    if cfg.algo in ("bcfw", "bcfw-avg"):
-        state = init_state(problem)
-        avg = init_averaging(problem.d)
-        for it in range(cfg.max_iters):
-            perm = jnp.asarray(rng.permutation(n))
-            state, avg = bcfw.jit_exact_pass(problem, state, avg, perm,
-                                             lam=lam)
-            state.phi.block_until_ready()
-            t = clock.exact(n)
-            use_avg = avg if cfg.algo.endswith("avg") else None
-            with clock.exclude():
-                primal, dual, primal_avg = _evaluate(problem, state.phi,
-                                                     use_avg, lam)
-            res.trace.append(TraceRow(it, int(state.n_exact), 0, t, primal,
-                                      dual, primal - dual, primal_avg,
-                                      0.0, 0))
-        res.w = np.asarray(weights_of(state.phi, lam))
-        res.w_avg = np.asarray(weights_of(extract(avg, lam), lam))
-        return res
-
-    return _run_mp(problem, cfg, rng, clock, res,
-                   _make_engine(problem, cfg))
+    return Solver(problem, cfg).run()

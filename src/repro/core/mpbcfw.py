@@ -19,8 +19,8 @@ through its own clock; the TTL rule resolves ``N``.
 :func:`outer_iteration` fuses the whole outer iteration — TTL eviction,
 the exact pass (plain or Sec-3.5 Gram variant), on-device slope-clock
 seeding, and the batched approximate phase — into **one** program, which
-is what lets :func:`repro.core.driver.run` dispatch once and sync once
-per outer iteration for the entire MP-BCFW family.
+is what lets :class:`repro.api.Solver` dispatch once and sync once per
+outer iteration for the entire MP-BCFW family.
 """
 from __future__ import annotations
 

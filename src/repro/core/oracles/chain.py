@@ -10,14 +10,21 @@ features, zero loss), which keeps the oracle a single fixed-shape program
 that vmaps over the dataset.  The max-plus inner step has a Pallas kernel
 (:mod:`repro.kernels.viterbi`); this module uses the pure-jnp path so the
 core stays dependency-light — the kernels are validated against it.
+
+Implemented declaratively as a :class:`repro.api.OracleSpec`
+(:class:`ChainSpec`): :meth:`ChainSpec.decode` is the Viterbi DP,
+:meth:`ChainSpec.features` the masked unary+pairwise joint feature map,
+:meth:`ChainSpec.loss` the normalized Hamming distance.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
+from ...api.oracle import OracleSpec, build_problem as _build
 from ..types import SSVMProblem
 
 
@@ -53,47 +60,58 @@ def viterbi_decode(unary: jnp.ndarray, trans: jnp.ndarray,
     return jnp.concatenate([ys_rev, y_last[None]]).astype(jnp.int32)
 
 
-def _plane(x: jnp.ndarray, y_true: jnp.ndarray, y_pred: jnp.ndarray,
-           mask: jnp.ndarray, num_labels: int, n: int) -> jnp.ndarray:
-    """Assemble phi^{iy} = [ (phi(x,y)-phi(x,y_i))/n , Delta/n ]."""
-    L, f = x.shape
-    C = num_labels
-    m = mask.astype(x.dtype)
-    length = jnp.maximum(jnp.sum(m), 1.0)
-    # Unary part: sum_l onehot(y_l) (x) x_l, masked.
-    oh_pred = jax.nn.one_hot(y_pred, C, dtype=x.dtype) * m[:, None]
-    oh_true = jax.nn.one_hot(y_true, C, dtype=x.dtype) * m[:, None]
-    unary = ((oh_pred - oh_true).T @ x).reshape(-1)          # (C*f,)
-    # Pairwise part: transition indicator counts over valid adjacent pairs.
-    pm = (mask[:-1] & mask[1:]).astype(x.dtype)
-    pair_pred = jax.nn.one_hot(y_pred[:-1], C, dtype=x.dtype).T @ \
-        (jax.nn.one_hot(y_pred[1:], C, dtype=x.dtype) * pm[:, None])
-    pair_true = jax.nn.one_hot(y_true[:-1], C, dtype=x.dtype).T @ \
-        (jax.nn.one_hot(y_true[1:], C, dtype=x.dtype) * pm[:, None])
-    pair = (pair_pred - pair_true).reshape(-1)               # (C*C,)
-    loss = jnp.sum((y_pred != y_true) * m) / length
-    star = jnp.concatenate([unary, pair]) / n
-    return jnp.concatenate([star, (loss / n)[None]])
+@dataclass(frozen=True)
+class ChainSpec(OracleSpec):
+    """Chain-CRF sequence labeling over ``data = {"x", "y", "mask"}``."""
+
+    num_labels: int
+
+    def dim(self, data: Any) -> int:
+        f = int(data["x"].shape[-1])
+        return self.num_labels * f + self.num_labels * self.num_labels
+
+    def truth(self, ex: Dict[str, Any]):
+        return ex["y"]
+
+    def decode(self, w: jnp.ndarray, ex: Dict[str, Any]):
+        x, y, m = ex["x"], ex["y"], ex["mask"]
+        C, f = self.num_labels, x.shape[-1]
+        wu = w[: C * f].reshape(C, f)
+        wp = w[C * f:].reshape(C, C)
+        length = jnp.maximum(jnp.sum(m.astype(x.dtype)), 1.0)
+        # Loss-augmented unaries: <w_c, x_l> + [c != y_l] / L_i.
+        unary = x @ wu.T + (1.0 - jax.nn.one_hot(y, C,
+                                                 dtype=x.dtype)) / length
+        return viterbi_decode(unary, wp, m)
+
+    def features(self, ex: Dict[str, Any], y) -> jnp.ndarray:
+        x, mask = ex["x"], ex["mask"]
+        C = self.num_labels
+        m = mask.astype(x.dtype)
+        # Unary part: sum_l onehot(y_l) (x) x_l, masked.
+        oh = jax.nn.one_hot(y, C, dtype=x.dtype) * m[:, None]
+        unary = (oh.T @ x).reshape(-1)                       # (C*f,)
+        # Pairwise part: transition indicators over valid adjacent pairs.
+        pm = (mask[:-1] & mask[1:]).astype(x.dtype)
+        pair = (jax.nn.one_hot(y[:-1], C, dtype=x.dtype).T @
+                (jax.nn.one_hot(y[1:], C, dtype=x.dtype)
+                 * pm[:, None])).reshape(-1)                 # (C*C,)
+        return jnp.concatenate([unary, pair])
+
+    def loss(self, ex: Dict[str, Any], y) -> jnp.ndarray:
+        m = ex["mask"].astype(ex["x"].dtype)
+        length = jnp.maximum(jnp.sum(m), 1.0)
+        return jnp.sum((y != ex["y"]) * m) / length
+
+    def meta(self, data: Any):
+        return {"num_labels": self.num_labels,
+                "f": int(data["x"].shape[-1]),
+                "L": int(data["x"].shape[-2])}
 
 
 def make_problem(features: jnp.ndarray, labels: jnp.ndarray,
                  mask: jnp.ndarray, num_labels: int) -> SSVMProblem:
     """features: (n, L, f); labels: (n, L) int32; mask: (n, L) bool."""
-    n, L, f = features.shape
-    C = num_labels
-    d = C * f + C * C
-
-    def oracle(w: jnp.ndarray, ex: Dict[str, Any]) -> jnp.ndarray:
-        x, y, m = ex["x"], ex["y"], ex["mask"]
-        wu = w[: C * f].reshape(C, f)
-        wp = w[C * f:].reshape(C, C)
-        length = jnp.maximum(jnp.sum(m.astype(x.dtype)), 1.0)
-        # Loss-augmented unaries: <w_c, x_l> + [c != y_l] / L_i.
-        unary = x @ wu.T + (1.0 - jax.nn.one_hot(y, C, dtype=x.dtype)) / length
-        y_hat = viterbi_decode(unary, wp, m)
-        return _plane(x, y, y_hat, m, C, n)
-
     data = {"x": features.astype(jnp.float32),
             "y": labels.astype(jnp.int32), "mask": mask.astype(bool)}
-    return SSVMProblem(n=n, d=d, data=data, oracle=oracle,
-                       meta={"num_labels": C, "f": f, "L": L})
+    return _build(ChainSpec(num_labels), data)

@@ -3,42 +3,59 @@
 Joint feature map: phi(x, y) = one_hot(y) (x) psi(x)  (block layout, d = C*f).
 Loss: 0/1.  The oracle is an explicit argmax over the C class scores —
 "trivially cheap", the regime where MP-BCFW must not *lose* to BCFW.
+
+Implemented declaratively as a :class:`repro.api.OracleSpec`
+(:class:`MulticlassSpec`); the plane assembly lives in the one shared
+:func:`repro.api.build_problem`.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Dict
 
 import jax.numpy as jnp
 
+from ...api.oracle import OracleSpec, build_problem as _build
 from ..types import SSVMProblem
 
 
-def _plane(x: jnp.ndarray, y_true: jnp.ndarray, y_pred: jnp.ndarray,
-           loss: jnp.ndarray, num_classes: int, n: int) -> jnp.ndarray:
-    """phi^{iy}: star = (phi(x,y) - phi(x,y_i)) / n, circ = loss / n."""
-    f = x.shape[0]
-    star = (jnp.zeros((num_classes, f), x.dtype)
-            .at[y_pred].add(x)
-            .at[y_true].add(-x)).reshape(-1) / n
-    return jnp.concatenate([star, (loss / n)[None]])
+@dataclass(frozen=True)
+class MulticlassSpec(OracleSpec):
+    """0/1-loss multiclass classification over ``data = {"x", "y"}``."""
+
+    num_classes: int
+
+    def dim(self, data: Any) -> int:
+        return self.num_classes * int(data["x"].shape[-1])
+
+    def truth(self, ex: Dict[str, Any]):
+        return ex["y"]
+
+    def decode(self, w: jnp.ndarray, ex: Dict[str, Any]):
+        x, y = ex["x"], ex["y"]
+        wc = w.reshape(self.num_classes, x.shape[0])
+        # Loss-augmented scores: <w_c, x> + [c != y].  The -phi(x,y_i)
+        # shift is constant in c, so it does not change the argmax.
+        scores = wc @ x + (1.0 - jnp.eye(self.num_classes,
+                                         dtype=x.dtype)[y])
+        return jnp.argmax(scores)
+
+    def features(self, ex: Dict[str, Any], y) -> jnp.ndarray:
+        x = ex["x"]
+        return (jnp.zeros((self.num_classes, x.shape[0]), x.dtype)
+                .at[y].add(x)).reshape(-1)
+
+    def loss(self, ex: Dict[str, Any], y) -> jnp.ndarray:
+        return (y != ex["y"]).astype(ex["x"].dtype)
+
+    def meta(self, data: Any):
+        return {"num_classes": self.num_classes,
+                "f": int(data["x"].shape[-1])}
 
 
 def make_problem(features: jnp.ndarray, labels: jnp.ndarray,
                  num_classes: int) -> SSVMProblem:
     """features: (n, f) float32; labels: (n,) int32."""
-    n, f = features.shape
-    d = num_classes * f
-
-    def oracle(w: jnp.ndarray, example: Dict[str, Any]) -> jnp.ndarray:
-        x, y = example["x"], example["y"]
-        wc = w.reshape(num_classes, f)
-        # Loss-augmented scores: <w_c, x> + [c != y].  The -phi(x,y_i)
-        # shift is constant in c, so it does not change the argmax.
-        scores = wc @ x + (1.0 - jnp.eye(num_classes, dtype=x.dtype)[y])
-        y_hat = jnp.argmax(scores)
-        loss = (y_hat != y).astype(x.dtype)
-        return _plane(x, y, y_hat, loss, num_classes, n)
-
-    data = {"x": features.astype(jnp.float32), "y": labels.astype(jnp.int32)}
-    return SSVMProblem(n=n, d=d, data=data, oracle=oracle,
-                       meta={"num_classes": num_classes, "f": f})
+    data = {"x": features.astype(jnp.float32),
+            "y": labels.astype(jnp.int32)}
+    return _build(MulticlassSpec(num_classes), data)

@@ -108,8 +108,8 @@ class ApproxBatchStats(NamedTuple):
 
     Entries past ``passes_run`` are zero-filled; ``ran`` is the prefix mask
     of passes that actually executed.  The host consumes this with exactly
-    one device sync per outer iteration (``driver.run``), replaying the
-    per-pass plane counts through its own clock.
+    one device sync per outer iteration (:class:`repro.api.Solver`),
+    replaying the per-pass plane counts through its own clock.
     """
 
     duals: jnp.ndarray       # (B,) f32  dual value after pass k

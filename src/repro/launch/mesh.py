@@ -125,7 +125,7 @@ def ensure_data_mesh(mesh: Optional[Mesh] = None, *,
     ``None`` builds the default :func:`make_data_mesh` over all local
     devices; a provided mesh is validated to carry ``axis`` and returned
     as-is.  This is the ``RunConfig.mesh`` resolution path of the
-    ``mpbcfw-shard*`` algorithms in :func:`repro.core.driver.run`.
+    ``mpbcfw-shard*`` entries in the :mod:`repro.api` engine registry.
     """
     if mesh is None:
         return make_data_mesh(axis=axis)

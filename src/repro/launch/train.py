@@ -109,18 +109,18 @@ def scale_to_params(cfg, target: int):
 
 def train_ssvm(scenario: str, iters: int, algo: str = "mpbcfw") -> dict:
     """MP-BCFW trainer mode: structured head via the paper's algorithm."""
-    from repro.core import driver
+    from repro.api import RunConfig, Solver
     from repro.core.selection import CostModel
     from repro.configs.paper import SMALL
     from repro.trainer.ssvm_head import build_problem
 
     sc = SMALL[scenario]
     prob = build_problem(sc)
-    cfg = driver.RunConfig(
+    cfg = RunConfig(
         lam=1.0 / prob.n, algo=algo, max_iters=iters,
         cost_model=CostModel(oracle_cost=sc.oracle_cost,
                              plane_cost=sc.plane_cost))
-    res = driver.run(prob, cfg)
+    res = Solver(prob, cfg).run()
     for r in res.trace:
         print(f"iter {r.iteration:3d}  exact {r.n_exact:6d}  "
               f"approx {r.n_approx:7d}  dual {r.dual:.5f}  gap {r.gap:.5f}")

@@ -57,9 +57,11 @@ collectives so tests and benchmarks can assert the contract.
 eviction, on-device slope-clock seeding, the tau-nice epoch, and the
 approximate batch — into **one** program (a single dispatch).  It is the
 engine behind the ``mpbcfw-shard`` / ``mpbcfw-shard-avg`` /
-``mpbcfw-shard-tau`` algorithms of :func:`repro.core.driver.run`
-(``RunConfig.mesh`` / ``RunConfig.tau``); on a 1-device mesh the driver
-trace is bit-for-bit equal to single-device ``mpbcfw``.
+``mpbcfw-shard-tau`` entries of the :mod:`repro.api` engine registry
+(``RunConfig.mesh`` / ``RunConfig.tau``, driven by
+:class:`repro.api.Solver` through
+:class:`repro.api.engines.ShardDriverEngine`); on a 1-device mesh the
+solver trace is bit-for-bit equal to single-device ``mpbcfw``.
 
 This layer is the prerequisite for multi-host MP-BCFW: all cross-device
 traffic is already explicit (one psum per approximate pass, oracle

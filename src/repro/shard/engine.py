@@ -332,7 +332,7 @@ class ShardEngine:
         step at the current ``w``), it skips the per-chunk fallback
         scoring that tau=1 would never consume, and it traces the same
         scan body as the single-device fused program — which is what
-        makes a 1-device-mesh driver run bit-for-bit equal to ``mpbcfw``.
+        makes a 1-device-mesh Solver run bit-for-bit equal to ``mpbcfw``.
         """
         multi = self._multi_stage(run_all)
         epoch = self._epoch()

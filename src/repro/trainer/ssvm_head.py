@@ -19,33 +19,50 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.oracles import chain, graph, multiclass
+from repro.api import build_problem as build_from_spec
+from repro.core.oracles import chain
+from repro.core.oracles.chain import ChainSpec
+from repro.core.oracles.graph import GraphSpec
+from repro.core.oracles.multiclass import MulticlassSpec
 from repro.core.types import SSVMProblem
 from repro.data import synthetic
 
 
-def build_problem(sc) -> SSVMProblem:
-    """Instantiate one of the paper's scenarios from a SSVMScenario."""
+def scenario_spec_and_data(sc):
+    """(OracleSpec, data pytree) for one of the paper's scenarios —
+    the declarative form consumed by :func:`repro.api.build_problem`."""
     if sc.kind == "multiclass":
         x, y = synthetic.usps_like(n=sc.n, f=sc.f,
                                    num_classes=sc.num_classes)
-        return multiclass.make_problem(jnp.asarray(x), jnp.asarray(y),
-                                       sc.num_classes)
+        return MulticlassSpec(sc.num_classes), {
+            "x": jnp.asarray(x, jnp.float32),
+            "y": jnp.asarray(y, jnp.int32)}
     if sc.kind == "chain":
         X, Y, M = synthetic.ocr_like(n=sc.n, f=sc.f,
                                      num_labels=sc.num_classes,
                                      mean_len=sc.mean_len,
                                      max_len=sc.max_len)
-        return chain.make_problem(jnp.asarray(X), jnp.asarray(Y),
-                                  jnp.asarray(M), sc.num_classes)
+        return ChainSpec(sc.num_classes), {
+            "x": jnp.asarray(X, jnp.float32),
+            "y": jnp.asarray(Y, jnp.int32),
+            "mask": jnp.asarray(M, bool)}
     if sc.kind == "graph":
         Xg, Yg, Mg, Eg, EMg, Cg = synthetic.horseseg_like(
             n=sc.n, grid=sc.grid, f=sc.f)
-        return graph.make_problem(
-            jnp.asarray(Xg), jnp.asarray(Yg), jnp.asarray(Mg),
-            jnp.asarray(Eg), jnp.asarray(EMg), jnp.asarray(Cg),
-            num_sweeps=sc.oracle_sweeps)
+        return GraphSpec(num_sweeps=sc.oracle_sweeps), {
+            "x": jnp.asarray(Xg, jnp.float32),
+            "y": jnp.asarray(Yg, jnp.int32),
+            "mask": jnp.asarray(Mg, bool),
+            "edges": jnp.asarray(Eg, jnp.int32),
+            "edge_mask": jnp.asarray(EMg, bool),
+            "color": jnp.asarray(Cg, jnp.int32)}
     raise ValueError(sc.kind)
+
+
+def build_problem(sc) -> SSVMProblem:
+    """Instantiate one of the paper's scenarios from a SSVMScenario."""
+    spec, data = scenario_spec_and_data(sc)
+    return build_from_spec(spec, data)
 
 
 def backbone_chain_problem(cfg, params, tokens: jnp.ndarray,

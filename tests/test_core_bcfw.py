@@ -464,16 +464,18 @@ def test_wall_clock_excludes_evaluation_time(multiclass_problem,
     """Regression: `_evaluate`'s batched_oracle sweeps (n exact oracle
     calls per iteration) are "Not timed" — a deliberately slow oracle in
     the evaluation path must not inflate TraceRow.time."""
+    from repro.api import solver as api_solver
+
     prob = multiclass_problem
     lam = 1.0 / prob.n
-    real = driver.batched_oracle
+    real = api_solver.batched_oracle
     sleep_s = 0.15
 
     def slow_eval_oracle(problem, w):
         time.sleep(sleep_s)
         return real(problem, w)
 
-    monkeypatch.setattr(driver, "batched_oracle", slow_eval_oracle)
+    monkeypatch.setattr(api_solver, "batched_oracle", slow_eval_oracle)
     iters = 3
     wall0 = time.perf_counter()
     res = driver.run(prob, driver.RunConfig(
