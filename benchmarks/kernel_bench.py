@@ -13,12 +13,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mpbcfw, workset as ws_ops
+from repro import cache as plane_cache
+from repro.core import mpbcfw
 from repro.core.oracles import multiclass
 from repro.core.ssvm import dual_value
 from repro.data import synthetic
 from repro.kernels import ops, ref
 from repro.kernels import plane_scores as ps
+from repro.kernels import plane_select as psel
 
 
 def _time(fn, *args, iters=20):
@@ -65,7 +67,7 @@ def main(smoke: bool = False):
     mp = mpbcfw.init_mp_state(prob, cap=cap)
     perm = jnp.arange(prob.n)
     mp = mpbcfw.jit_exact_pass(prob, mp, perm, lam=lam)
-    flat_p, flat_b, _ = ws_ops.flat_view(mp.ws)
+    flat_p, flat_b, _ = plane_cache.flat_view(mp.cache)
     wq = jnp.asarray(r.randn(prob.d).astype(np.float32))
     backend = jax.default_backend()
     pallas_fn = jax.jit(functools.partial(
@@ -75,6 +77,35 @@ def main(smoke: bool = False):
     shape_tag = f"{flat_p.shape[0]}x{flat_p.shape[1]}"
     rows.append((f"plane_scores_pallas_us_{shape_tag}", t_pallas, backend))
     rows.append((f"plane_scores_ref_us_{shape_tag}", t_ref, backend))
+
+    # Fused score+select (the approximate-oracle hot path) vs the
+    # two-step score-then-argmax it replaced, on the same cache.  Both
+    # sides timed as the dispatcher runs them on this backend (jnp on
+    # CPU, with the Pallas kernel additionally timed in interpret mode
+    # as a functional check, not a perf claim off-TPU).
+    sel_tag = f"{prob.n}x{cap}x{prob.d}"
+
+    def fused(c, w):
+        return plane_cache.approx_oracle_all(c, w)
+
+    def two_step(c, w):
+        scores = plane_cache.score_all(c, w)
+        slots = jnp.argmax(scores, axis=1)
+        best = jnp.take_along_axis(scores, slots[:, None], axis=1)[:, 0]
+        planes = jnp.take_along_axis(c.planes, slots[:, None, None],
+                                     axis=1)[:, 0]
+        return planes, slots, best
+
+    t_fused = _time(jax.jit(fused), mp.cache, wq)
+    t_two = _time(jax.jit(two_step), mp.cache, wq)
+    rows.append((f"plane_select_fused_us_{sel_tag}", t_fused, backend))
+    rows.append((f"plane_select_two_step_us_{sel_tag}", t_two, backend))
+    t_sel_pallas = _time(jax.jit(functools.partial(
+        psel.plane_select, interpret=not ops.on_tpu())),
+        mp.cache.planes[:, :, :-1], wq, mp.cache.planes[:, :, -1],
+        mp.cache.valid, iters=3)
+    rows.append((f"plane_select_pallas_us_{sel_tag}", t_sel_pallas,
+                 backend))
 
     # full approximate pass (the paper's Theta(|W| d) step, jitted scan)
     def ap(mp):

@@ -19,7 +19,10 @@ data mesh and reports, per paper-style CSV row:
   * ``shard_driver_*``                the same contract through the public
     entry point — ``repro.api.Solver`` with ``algo='mpbcfw-shard'`` (what
     the deprecated ``driver.run`` shims to) — host syncs and dispatches
-    per outer iteration straight off the TraceRows.
+    per outer iteration straight off the TraceRows,
+  * ``shard_gram_*``                  the sharded Sec-3.5 gram twin
+    (``mpbcfw-shard-gram``: gram blocks inside the mesh-sharded
+    PlaneCache) holding the same 1-dispatch/1-sync contract.
 
 Mesh size is whatever the process has (1 device under plain CI; run with
 ``--xla_force_host_platform_device_count=8`` to smoke the 8-shard path).
@@ -80,6 +83,15 @@ def main(smoke: bool = True):
     drv_syncs = sum(r.host_syncs for r in res.trace) / ITERS
     drv_disp = sum(r.dispatches for r in res.trace) / ITERS
 
+    # The sharded gram twin (Sec. 3.5 on the mesh-sharded PlaneCache):
+    # same 1-dispatch/1-sync contract through the public entry point.
+    res_g = Solver(prob, RunConfig(
+        lam=lam, algo="mpbcfw-shard-gram", mesh=make_data_mesh(),
+        max_iters=ITERS, cap=CAP, max_approx_passes=BATCH,
+        cost_model=CostModel(plane_cost=1e-3))).run()
+    gram_syncs = sum(r.host_syncs for r in res_g.trace) / ITERS
+    gram_disp = sum(r.dispatches for r in res_g.trace) / ITERS
+
     return [
         ("shard_psums_per_approx_pass", eng.psums_per_approx_pass,
          eng.setup_psums),
@@ -96,6 +108,9 @@ def main(smoke: bool = True):
          res.trace[-1].approx_passes),
         ("shard_driver_dual_final", res.trace[-1].dual,
          res.trace[-1].gap),
+        ("shard_gram_dispatches_per_iter", gram_disp, gram_syncs),
+        ("shard_gram_dual_final", res_g.trace[-1].dual,
+         res_g.trace[-1].gap),
     ]
 
 

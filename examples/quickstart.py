@@ -23,18 +23,28 @@ Three layers, one seam each:
                        outer iteration (exact pass + slope-ruled
                        approximate batch), one host sync per iteration
     mpbcfw-avg         + two-track weighted averaging (Sec. 3.6)
-    mpbcfw-gram        + the Sec-3.5 Gram-cache inner loop
+    mpbcfw-gram        + the Sec-3.5 Gram-cache inner loop (with
+                       ``RunConfig.mesh`` it resolves to the sharded
+                       gram engine)
     mpbcfw-shard       mpbcfw on a 1-D data mesh (``RunConfig.mesh``):
                        tau-nice exact epoch + sharded approximate batch;
                        bit-for-bit ``mpbcfw`` on a 1-device mesh
     mpbcfw-shard-avg   + averaging
     mpbcfw-shard-tau   explicit tau-nice chunk size via ``RunConfig.tau``
+    mpbcfw-shard-gram  the Sec-3.5 scheme on the mesh-sharded plane
+                       cache; bit-for-bit ``mpbcfw-gram`` on 1 device
     ================== ======================================================
 
   * **The control loop** is :class:`repro.api.Solver`: streaming
     ``iterate()``, gap-tolerance / time-budget stopping, callbacks,
     checkpoint/resume.  (``repro.core.driver.run`` remains as a
     deprecated one-call shim over it.)
+
+Underneath every MP engine sits **the plane cache**
+(:mod:`repro.cache`): one :class:`~repro.cache.PlaneCache` pytree owns
+the cached planes, validity, activity clock, and (for the gram engines)
+the per-block Gram matrices, all declared by a
+:class:`~repro.cache.CacheLayout` — see the demo below.
 """
 import sys
 
@@ -92,6 +102,29 @@ def main():
           f"gap {last.gap:.5f}  dual {last.dual:.5f}  "
           f"[{disp} dispatches / {syncs} host syncs over "
           f"{len(res.trace)} iterations]")
+
+    # -- the plane cache is a first-class subsystem ------------------------
+    # Every MP engine's working set is a repro.cache.PlaneCache declared
+    # by a CacheLayout; gram=True materializes the Sec-3.5 Gram blocks
+    # inside the cache (insertions refresh them), which is what lets the
+    # sharded gram engine exist — the gram leaf shards with the blocks.
+    from repro import cache as plane_cache
+    from repro.cache import CacheLayout
+
+    res = Solver(problem, RunConfig(lam=lam, algo="mpbcfw-shard-gram",
+                                    mesh=mesh, max_iters=5, cap=32,
+                                    cost_model=cm())).run()
+    print(f"mpbcfw-shard-gram: gap {res.trace[-1].gap:.5f}  "
+          f"ws_mean {res.trace[-1].ws_mean:.1f}  "
+          f"[{res.trace[-1].dispatches} dispatch / "
+          f"{res.trace[-1].host_syncs} sync per iteration]")
+    layout = CacheLayout(cap=8, gram=True, axis="data")
+    demo = plane_cache.init(layout, n=4, d=problem.d)
+    demo = plane_cache.insert(demo, jnp.asarray(0),
+                              jnp.ones((problem.d + 1,)), jnp.asarray(0))
+    print(f"PlaneCache: planes {demo.planes.shape}  gram "
+          f"{demo.gram.shape}  sizes {np.asarray(plane_cache.sizes(demo))}  "
+          f"specs {plane_cache.partition_specs(layout).planes}")
 
     # -- accuracy of the learned (averaged) predictor ----------------------
     res = Solver(problem, RunConfig(lam=lam, algo="mpbcfw-avg",

@@ -60,7 +60,10 @@ class EngineCapabilities:
                   iterate).
       uses_tau:   the engine consumes ``RunConfig.tau`` (tau-nice chunk
                   size); ``requires_tau`` additionally makes it
-                  mandatory.
+                  mandatory, and ``tau_requires_mesh`` restricts tau to
+                  configs that set ``RunConfig.mesh`` (engines that only
+                  resolve to a mesh execution path when one is given,
+                  e.g. ``mpbcfw-gram``).
       note:       extra context appended to capability-mismatch errors
                   (e.g. *why* this engine cannot run on a mesh).
     """
@@ -72,6 +75,7 @@ class EngineCapabilities:
     supports_averaging: bool = False
     uses_tau: bool = False
     requires_tau: bool = False
+    tau_requires_mesh: bool = False
     note: str = ""
 
 
@@ -201,6 +205,11 @@ def validate_config(entry: EngineEntry, cfg: RunConfig) -> None:
             f"{tau_algos}, which run on a mesh; {entry.name!r} does not "
             "take tau.  Set RunConfig.mesh and pick a mesh engine, or "
             "drop tau.")
+    if cfg.tau is not None and caps.tau_requires_mesh and cfg.mesh is None:
+        raise UnsupportedConfigError(
+            f"{entry.name!r} only consumes RunConfig.tau on a mesh (it "
+            "resolves to the sharded engine when RunConfig.mesh is set); "
+            "set RunConfig.mesh, or drop tau for the single-device path.")
     if caps.requires_tau and cfg.tau is None:
         raise UnsupportedConfigError(
             f"{entry.name!r} requires RunConfig.tau (the tau-nice chunk "

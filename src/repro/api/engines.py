@@ -3,10 +3,12 @@
 Importing this module registers the whole algorithm family —
 ``fw`` / ``ssg`` / ``bcfw`` / ``bcfw-avg`` (single-program engines),
 ``mpbcfw`` / ``mpbcfw-avg`` / ``mpbcfw-gram`` (:class:`FusedEngine`:
-each outer iteration is one fused device program), and
-``mpbcfw-shard`` / ``mpbcfw-shard-avg`` / ``mpbcfw-shard-tau``
+each outer iteration is one fused device program; the gram variant is a
+``CacheLayout(gram=True)`` plane cache), and ``mpbcfw-shard`` /
+``mpbcfw-shard-avg`` / ``mpbcfw-shard-tau`` / ``mpbcfw-shard-gram``
 (:class:`ShardDriverEngine` over :class:`repro.shard.ShardEngine` on a
-1-D data mesh) — into the :mod:`repro.api.engine` registry.  The
+1-D data mesh; ``mpbcfw-gram`` + ``RunConfig.mesh`` resolves to the
+sharded gram path too) — into the :mod:`repro.api.engine` registry.  The
 registry loads this module lazily on first lookup, so ``import
 repro.core`` stays light.
 
@@ -24,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import bcfw, gram, mpbcfw, subgradient
+from ..cache import CacheLayout
+from ..core import bcfw, mpbcfw, subgradient
 from ..core.averaging import extract as extract_average, init_averaging
 from ..core.selection import SyncLedger
 from ..core.ssvm import init_state as init_bcfw_state, weights_of
@@ -68,8 +71,11 @@ class _EngineBase:
 
 class FusedEngine(_EngineBase):
     """Single-device engine: each outer iteration is one fused program
-    (:func:`repro.core.mpbcfw.outer_iteration`), with the Sec-3.5 Gram
-    cache threaded through the program when configured."""
+    (:func:`repro.core.mpbcfw.outer_iteration`).  The Sec-3.5 Gram
+    configuration is a :class:`~repro.cache.CacheLayout` choice — the
+    gram blocks live inside the state's :class:`~repro.cache.PlaneCache`,
+    so there is no engine-held cache to thread or checkpoint
+    separately."""
 
     capabilities = EngineCapabilities(multipass=True,
                                       supports_averaging=True)
@@ -80,27 +86,24 @@ class FusedEngine(_EngineBase):
         super().__init__(problem, lam)
         self.use_gram, self.gram_steps = use_gram, gram_steps
         self.averaged = averaged
-        self.gc = None
 
     def init_state(self, cap: int):
-        if self.use_gram:
-            self.gc = gram.init_gram(self.problem.n, cap)
-        return mpbcfw.init_mp_state(self.problem, cap)
+        return mpbcfw.init_mp_state(
+            self.problem, CacheLayout(cap=cap, gram=self.use_gram))
 
     def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
         """Dispatch one fused outer iteration (no blocking)."""
         self.ledger.dispatched()
-        mp, self.gc, clock, stats = mpbcfw.jit_outer_iteration(
-            self.problem, mp, self.gc, perm, perms, clock,
+        return mpbcfw.jit_outer_iteration(
+            self.problem, mp, perm, perms, clock,
             lam=self.lam, ttl=ttl, steps=self.gram_steps)
-        return mp, clock, stats
 
     def continue_passes(self, mp, perms, clock):
         """Overflow batch of approximate passes (rare: only when an
         iteration runs more than ``approx_batch`` passes)."""
         self.ledger.dispatched()
         return mpbcfw.jit_multi_approx_pass(
-            self.problem, mp, perms, clock, lam=self.lam, gc=self.gc,
+            self.problem, mp, perms, clock, lam=self.lam,
             steps=self.gram_steps)
 
     def read_stats(self, stats):
@@ -117,13 +120,6 @@ class FusedEngine(_EngineBase):
                                       self.lam))
         return w, w_avg
 
-    def pack_state(self, mp):
-        return (mp, self.gc)
-
-    def unpack_state(self, tree):
-        mp, self.gc = tree
-        return mp
-
 
 class ShardDriverEngine(FusedEngine):
     """Adapter driving :class:`repro.shard.ShardEngine` through the same
@@ -135,10 +131,13 @@ class ShardDriverEngine(FusedEngine):
                                       uses_tau=True)
 
     def __init__(self, problem: SSVMProblem, lam: float, mesh,
-                 tau: Optional[int], *, averaged: bool = False):
+                 tau: Optional[int], *, averaged: bool = False,
+                 use_gram: bool = False, gram_steps: int = 10):
         from ..shard import ShardEngine  # lazy: keep core importable alone
-        super().__init__(problem, lam, averaged=averaged)
-        self.eng = ShardEngine(problem, mesh, lam=lam)
+        super().__init__(problem, lam, averaged=averaged,
+                         use_gram=use_gram, gram_steps=gram_steps)
+        self.eng = ShardEngine(problem, mesh, lam=lam, use_gram=use_gram,
+                               gram_steps=gram_steps)
         self.tau = int(tau) if tau is not None else self.eng.n_shards
         self.ledger = self.eng.ledger
 
@@ -154,9 +153,6 @@ class ShardDriverEngine(FusedEngine):
 
     def read_stats(self, stats):
         return self.eng.read_stats(stats)
-
-    def pack_state(self, mp):
-        return mp
 
     def unpack_state(self, tree):
         return self.eng.place(tree)
@@ -296,10 +292,23 @@ def _register(name, factory, capabilities):
 
 
 def _shard_factory(problem: SSVMProblem, cfg: RunConfig,
-                   averaged: bool = False) -> ShardDriverEngine:
+                   averaged: bool = False,
+                   use_gram: bool = False) -> ShardDriverEngine:
     from ..launch.mesh import ensure_data_mesh
     return ShardDriverEngine(problem, cfg.lam, ensure_data_mesh(cfg.mesh),
-                             cfg.tau, averaged=averaged)
+                             cfg.tau, averaged=averaged, use_gram=use_gram,
+                             gram_steps=cfg.gram_steps)
+
+
+def _gram_factory(problem: SSVMProblem, cfg: RunConfig):
+    """``mpbcfw-gram`` resolves by configuration: single-device fused
+    program without a mesh, the sharded gram engine with one — the
+    capability check (supports_mesh) admits both instead of raising the
+    pre-cache ``UnsupportedConfigError`` for gram+mesh."""
+    if cfg.mesh is not None:
+        return _shard_factory(problem, cfg, use_gram=True)
+    return FusedEngine(problem, cfg.lam, use_gram=True,
+                       gram_steps=cfg.gram_steps)
 
 
 _register(
@@ -319,15 +328,14 @@ _register(
     "mpbcfw-avg", lambda p, cfg: FusedEngine(p, cfg.lam, averaged=True),
     FusedEngine.capabilities)
 _register(
-    "mpbcfw-gram",
-    lambda p, cfg: FusedEngine(p, cfg.lam, use_gram=True,
-                               gram_steps=cfg.gram_steps),
+    "mpbcfw-gram", _gram_factory,
     EngineCapabilities(
         multipass=True, supports_gram=True, supports_averaging=True,
-        note="mpbcfw-gram cannot run on a mesh: the Sec-3.5 Gram cache "
-             "has no sharded twin yet (ROADMAP gap).  Drop "
-             "RunConfig.mesh, or pick a mpbcfw-shard* engine without "
-             "the Gram scheme."))
+        supports_mesh=True, uses_tau=True, tau_requires_mesh=True,
+        note="mpbcfw-gram with RunConfig.mesh resolves to the sharded "
+             "gram engine (the mpbcfw-shard-gram path: PlaneCache.gram "
+             "shards with the blocks), which also consumes "
+             "RunConfig.tau."))
 _register(
     "mpbcfw-shard", _shard_factory, ShardDriverEngine.capabilities)
 _register(
@@ -338,3 +346,11 @@ _register(
     "mpbcfw-shard-tau", _shard_factory,
     dataclasses.replace(ShardDriverEngine.capabilities,
                         requires_tau=True))
+_register(
+    "mpbcfw-shard-gram",
+    lambda p, cfg: _shard_factory(p, cfg, use_gram=True),
+    dataclasses.replace(ShardDriverEngine.capabilities,
+                        supports_gram=True,
+                        note="Sec-3.5 Gram scheme on the mesh-sharded "
+                             "plane cache; bit-for-bit equal to "
+                             "mpbcfw-gram on a 1-device mesh."))

@@ -1,0 +1,41 @@
+"""repro.cache — the device-resident plane-cache subsystem.
+
+The paper's whole contribution is the cached-hyperplane working set
+(Sec. 3.3–3.5); this package makes it a first-class component instead of
+slot/TTL/LRU logic smeared across the optimizer layers:
+
+  * :class:`PlaneCache` — the one pytree owning planes + validity +
+    activity (+ optionally materialized per-block Gram matrices, which is
+    what lets the mesh-sharded gram engine exist: gram state shards with
+    the blocks like every other leaf);
+  * :class:`CacheLayout` — declarative configuration (cap, dtype, gram
+    on/off, mesh axis), consumed by :func:`partition_specs` so the shard
+    layout never hand-writes cache ``PartitionSpec``\\ s;
+  * the canonical operation set — :func:`init`, :func:`insert`,
+    :func:`mark_active`, :func:`evict_stale`, :func:`gather`,
+    :func:`flat_view`, :func:`score_all`, :func:`approx_oracle_all`,
+    :func:`approx_oracle`, :func:`sizes` — every cache mutation and
+    scoring call site in ``repro.core`` and ``repro.shard`` goes through
+    these;
+  * :data:`NEG_INF` — the one invalid-slot score sentinel (shared with
+    ``repro.kernels.ops.INVALID_SCORE``).
+
+Scoring is backed by the Pallas kernels on TPU (the fused
+``plane_select`` score-and-select launch on the batched hot path) and by
+bitwise-faithful jnp references elsewhere.  The legacy spellings
+``repro.core.workset`` / ``repro.core.gram.GramCache`` are thin
+deprecated aliases of this package for one release.
+"""
+from .layout import partition_specs, shardings  # noqa: F401
+from .ops import (NEG_INF, approx_oracle, approx_oracle_all,  # noqa: F401
+                  evict_stale, flat_view, gather, init, insert, mark_active,
+                  mark_active_where, score_all, sizes)
+from .state import CacheLayout, PlaneCache, layout_of  # noqa: F401
+
+__all__ = [
+    "PlaneCache", "CacheLayout", "layout_of", "NEG_INF",
+    "init", "insert", "mark_active", "mark_active_where", "evict_stale",
+    "gather", "flat_view", "score_all", "approx_oracle_all",
+    "approx_oracle", "sizes",
+    "partition_specs", "shardings",
+]

@@ -1,0 +1,38 @@
+"""Mesh placement of a :class:`~repro.cache.state.PlaneCache`.
+
+The cache's sharding story in one place: the block dimension (and with
+it every cache leaf — planes, validity, activity, gram blocks) is
+partitioned over the layout's mesh axis; there is no O(d) replicated
+cache state.  :mod:`repro.shard.layout` composes these specs into the
+full ``MPState`` placement instead of hand-writing ``PartitionSpec``
+trees per field.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .state import CacheLayout, PlaneCache
+
+
+def partition_specs(layout: CacheLayout) -> PlaneCache:
+    """``PartitionSpec`` pytree for a cache under ``layout``.
+
+    Requires ``layout.axis``; the tree's structure (gram leaf present or
+    ``None``) matches a cache built by :func:`repro.cache.init` from the
+    same layout, so the two can be zipped by any jax tree op.
+    """
+    if layout.axis is None:
+        raise ValueError(
+            "CacheLayout.axis is None: partition_specs needs the mesh "
+            "axis the block dimension shards over (e.g. axis='data')")
+    a = layout.axis
+    return PlaneCache(
+        planes=P(a, None, None), valid=P(a, None), last_active=P(a, None),
+        gram=P(a, None, None) if layout.gram else None)
+
+
+def shardings(layout: CacheLayout, mesh: Mesh) -> PlaneCache:
+    """``NamedSharding`` pytree for a cache under ``layout`` on ``mesh``."""
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  partition_specs(layout))

@@ -1,0 +1,198 @@
+"""The canonical plane-cache operations (the one mutation/scoring API).
+
+Every cache mutation (insert / activity / eviction) and every scoring
+path (per-block, batched, gathered sub-cache) in the optimizer goes
+through this module; nothing outside :mod:`repro.cache` touches the
+:class:`~repro.cache.state.PlaneCache` fields directly.  All operations
+are vectorized / ``lax.scan``-compatible so whole passes stay inside one
+device program.
+
+Scoring dispatches through :mod:`repro.kernels.ops`:
+
+  * :func:`score_all` — masked scores of every slot (one ``plane_scores``
+    launch over the flattened view; telemetry / benchmarks);
+  * :func:`approx_oracle_all` — the batched approximate oracle, backed by
+    the **fused score-and-select** kernel (``plane_select``: masked dot +
+    per-block argmax in one launch) instead of score-then-argmax;
+  * :func:`approx_oracle` — one block inside a scan body (tiny shapes:
+    XLA fuses the matvec into the enclosing scan).
+
+Invalid slots score :data:`NEG_INF` so they never win an argmax.
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .state import CacheLayout, PlaneCache
+
+# Score assigned to invalid slots so they never win the argmax — the one
+# sentinel, shared with the kernel layer (satellite: NEG_INF used to be an
+# independent copy of kernels.ops' ``neg=-1e30`` default).
+NEG_INF = jnp.float32(kops.INVALID_SCORE)
+
+
+def init(layout: Union[CacheLayout, int], n: int, d: int) -> PlaneCache:
+    """Empty cache for ``n`` blocks of ``(d+1)``-planes under ``layout``.
+
+    A bare int is accepted as shorthand for ``CacheLayout(cap=...)``.
+    """
+    if not isinstance(layout, CacheLayout):
+        layout = CacheLayout(cap=int(layout))
+    cap = layout.cap
+    return PlaneCache(
+        planes=jnp.zeros((n, cap, d + 1), layout.dtype),
+        valid=jnp.zeros((n, cap), bool),
+        last_active=jnp.full((n, cap), -1, jnp.int32),
+        gram=(jnp.zeros((n, cap, cap), layout.dtype)
+              if layout.gram else None),
+    )
+
+
+def _lru_slot(cache: PlaneCache, i: jnp.ndarray) -> jnp.ndarray:
+    """First empty slot if any, else the valid slot inactive the longest
+    (paper Alg. 3 step 3); ties break to the lowest slot index."""
+    key = jnp.where(cache.valid[i], cache.last_active[i],
+                    jnp.int32(-2 ** 31 + 1))
+    return jnp.argmin(key)
+
+
+def insert(cache: PlaneCache, i: jnp.ndarray, plane: jnp.ndarray,
+           it: jnp.ndarray) -> PlaneCache:
+    """Insert ``plane`` into block ``i``, evicting LRU if full.
+
+    The new plane is marked active at iteration ``it`` (it was just
+    returned by the exact oracle).  When the cache materializes Gram
+    blocks, the inserted slot's row/column is refreshed in the same
+    O(cap·d) step — callers never maintain gram state separately.
+    """
+    slot = _lru_slot(cache, i)
+    planes = cache.planes.at[i, slot].set(plane)
+    gram = cache.gram
+    if gram is not None:
+        row = planes[i, :, :-1] @ plane[:-1]             # (cap,)
+        gram = gram.at[i, slot, :].set(row).at[i, :, slot].set(row)
+    return PlaneCache(
+        planes=planes,
+        valid=cache.valid.at[i, slot].set(True),
+        last_active=cache.last_active.at[i, slot].set(it),
+        gram=gram,
+    )
+
+
+def mark_active(cache: PlaneCache, i: jnp.ndarray, slot: jnp.ndarray,
+                it: jnp.ndarray) -> PlaneCache:
+    """Record that block ``i``'s ``slot`` was returned by an oracle call."""
+    return cache._replace(last_active=cache.last_active.at[i, slot].set(it))
+
+
+def mark_active_where(cache: PlaneCache, i: jnp.ndarray, won: jnp.ndarray,
+                      it: jnp.ndarray) -> PlaneCache:
+    """Refresh activity of every slot of block ``i`` where ``won`` holds.
+
+    The Sec-3.5 multi-step pass reports per-slot win flags (planes the
+    approximate oracle returned at least once); this is its one batched
+    activity update.
+    """
+    la = jnp.where(won, it, cache.last_active[i])
+    return cache._replace(last_active=cache.last_active.at[i].set(la))
+
+
+def evict_stale(cache: PlaneCache, it: jnp.ndarray, ttl: int) -> PlaneCache:
+    """Drop planes not active during the last ``ttl`` outer iterations."""
+    keep = cache.valid & (it - cache.last_active <= ttl)
+    return cache._replace(valid=keep)
+
+
+def gather(cache: PlaneCache, ids: jnp.ndarray) -> PlaneCache:
+    """Sub-cache of the rows in ``ids`` (tau-nice chunks, shard views).
+
+    The result is a full :class:`PlaneCache` of shape ``(len(ids), cap,
+    ...)``, so the batched operations (:func:`score_all`,
+    :func:`approx_oracle_all`) apply unchanged — this is how the tau-nice
+    straggler fallback scores every sampled block's cache in one kernel
+    launch instead of one launch per block.
+    """
+    return PlaneCache(
+        planes=cache.planes[ids], valid=cache.valid[ids],
+        last_active=cache.last_active[ids],
+        gram=None if cache.gram is None else cache.gram[ids])
+
+
+def flat_view(cache: PlaneCache
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Kernel-facing flattened layout of the whole cache.
+
+    Returns ``(P, b, valid)`` with ``P`` the ``(n*cap, d)`` linear parts,
+    ``b`` the ``(n*cap,)`` offsets and ``valid`` the ``(n*cap,)`` slot
+    mask — the operand layout of the ``plane_scores`` kernel, so one
+    launch scores every cached plane of every block.
+    """
+    n, cap, d1 = cache.planes.shape
+    flat = cache.planes.reshape(n * cap, d1)
+    return flat[:, :-1], flat[:, -1], cache.valid.reshape(n * cap)
+
+
+def sizes(cache: PlaneCache) -> jnp.ndarray:
+    """Current per-block working-set sizes (paper Fig. 5 telemetry)."""
+    return jnp.sum(cache.valid, axis=1)
+
+
+def score_all(cache: PlaneCache, w: jnp.ndarray) -> jnp.ndarray:
+    """Masked scores of every cached plane at one shared ``w``: (n, cap).
+
+    Invalid slots score :data:`NEG_INF`.  One ``plane_scores`` launch
+    over the flattened view — used by telemetry and benchmarks; the hot
+    path selects through :func:`approx_oracle_all` instead, which never
+    materializes this matrix.
+    """
+    p, b, valid = flat_view(cache)
+    n, cap = cache.valid.shape
+    return kops.plane_scores_masked(p, w, b, valid,
+                                    neg=NEG_INF).reshape(n, cap)
+
+
+def approx_oracle_all(cache: PlaneCache, w: jnp.ndarray):
+    """Batched approximate oracle: best cached plane per block at one ``w``.
+
+    One fused score-and-select launch (``kernels.ops.plane_select``) over
+    the whole cache.  Returns ``(planes (n, d+1), slots (n,), scores
+    (n,))``; blocks with an empty set get the zero plane and score 0 (the
+    ground-truth plane).
+    """
+    best, slots = kops.plane_select(cache.planes[:, :, :-1], w,
+                                    cache.planes[:, :, -1], cache.valid,
+                                    neg=kops.INVALID_SCORE)
+    any_valid = jnp.any(cache.valid, axis=1)
+    planes = jnp.take_along_axis(cache.planes, slots[:, None, None],
+                                 axis=1)[:, 0]
+    planes = jnp.where(any_valid[:, None], planes, jnp.zeros_like(planes))
+    return planes, slots, jnp.where(any_valid, best, 0.0)
+
+
+def approx_oracle(cache: PlaneCache, i: jnp.ndarray, w: jnp.ndarray):
+    """argmax over block ``i``'s cached planes of ``<phi, [w 1]>``.
+
+    Returns ``(plane, slot, score)``; callers must mark ``slot`` active.
+    If the set is empty the zero plane is returned (score 0 >= NEG_INF
+    guard keeps behaviour well-defined; ``H~_i >= 0`` always holds
+    because the ground-truth plane is the zero plane).
+    """
+    planes_i = cache.planes[i]                   # (cap, d+1)
+    cap, d = planes_i.shape[0], planes_i.shape[1] - 1
+    if cap >= 8 and d >= 128:
+        # Big enough to fill a (8, 128) tile: worth a kernel launch.
+        scores = kops.plane_scores(planes_i[:, :-1], w, planes_i[:, -1])
+    else:
+        # Tiny blocks: padding to the minimum tile would dominate; let XLA
+        # fuse the matvec into the enclosing scan body instead.
+        scores = planes_i[:, :-1] @ w + planes_i[:, -1]
+    scores = jnp.where(cache.valid[i], scores, NEG_INF)
+    slot = jnp.argmax(scores)
+    best = scores[slot]
+    any_valid = jnp.any(cache.valid[i])
+    plane = jnp.where(any_valid, planes_i[slot],
+                      jnp.zeros_like(planes_i[slot]))
+    return plane, slot, jnp.where(any_valid, best, 0.0)

@@ -1,0 +1,79 @@
+"""Value types of the device-resident plane cache.
+
+:class:`PlaneCache` is the one pytree that owns the paper's cached
+working sets (Sec. 3.3–3.5): the dense ``(n, cap, d+1)`` plane ring, the
+``valid`` occupancy mask, the ``last_active`` activity clock that drives
+LRU eviction and the TTL rule, and — when the Sec-3.5 scheme is on — the
+per-block Gram matrices, refreshed on insertion.  Keeping the Gram block
+*inside* the cache (instead of threading a parallel ``GramCache`` through
+every pass) is what lets the mesh-sharded engine run the gram variant:
+the gram tensor shards with the blocks like every other cache leaf.
+
+:class:`CacheLayout` is the declarative configuration: capacity, dtype,
+whether Gram blocks are materialized, and which mesh axis (if any) the
+block dimension is partitioned over.  :func:`repro.cache.partition_specs`
+turns a layout into the cache's ``PartitionSpec`` tree, which
+:mod:`repro.shard.layout` consumes instead of hand-writing specs.
+
+This module holds only types (no kernels, no jax transforms) so it can
+be imported from anywhere — including :mod:`repro.core.types`, which
+keeps ``WorkSet`` as a deprecated alias of :class:`PlaneCache`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+
+class PlaneCache(NamedTuple):
+    """Per-block working sets of cached oracle planes (paper Sec. 3.3).
+
+    Attributes:
+      planes:      (n, cap, d+1) stored planes (linear part + offset).
+      valid:       (n, cap) bool, slot occupancy.  The *effective*
+                   working-set size is data-dependent exactly as in the
+                   paper; ``cap`` only bounds memory.
+      last_active: (n, cap) int32, outer-iteration index at which the
+                   slot's plane was last returned by an (exact or
+                   approximate) oracle call — drives LRU + TTL eviction.
+      gram:        (n, cap, cap) float32 per-block Gram matrices
+                   ``G[i, a, b] = <phi_a*, phi_b*>`` (paper Sec. 3.5),
+                   or ``None`` when the layout does not materialize them.
+                   Rows are refreshed only on insertion.
+    """
+
+    planes: jnp.ndarray
+    valid: jnp.ndarray
+    last_active: jnp.ndarray
+    gram: Optional[jnp.ndarray] = None
+
+
+@dataclass(frozen=True)
+class CacheLayout:
+    """Declarative plane-cache configuration.
+
+    Attributes:
+      cap:   hard per-block capacity ``N`` (paper: "very large"; memory
+             bound — the TTL rule resolves the effective size).
+      dtype: plane (and gram) storage dtype.
+      gram:  materialize per-block Gram matrices (Sec. 3.5) inside the
+             cache; insertions then refresh the affected row/column.
+      axis:  mesh axis name the block dimension is partitioned over, or
+             ``None`` for single-device placement.  Consumed by
+             :func:`repro.cache.partition_specs` / the shard layout.
+    """
+
+    cap: int = 64
+    dtype: Any = jnp.float32
+    gram: bool = False
+    axis: Optional[str] = None
+
+
+def layout_of(cache: PlaneCache, *, axis: Optional[str] = None
+              ) -> CacheLayout:
+    """Recover the :class:`CacheLayout` describing an existing cache."""
+    return CacheLayout(cap=int(cache.valid.shape[1]),
+                       dtype=cache.planes.dtype,
+                       gram=cache.gram is not None, axis=axis)

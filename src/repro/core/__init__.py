@@ -1,6 +1,6 @@
 """MP-BCFW core: the paper's contribution as a composable JAX module."""
 from . import (averaging, bcfw, distributed, driver, gram, mpbcfw, oracles,
-               selection, ssvm, subgradient, types, workset)
+               selection, ssvm, subgradient, types)
 from .driver import RunConfig, RunResult, run
 from .types import BCFWState, SSVMProblem, WorkSet
 
@@ -9,3 +9,13 @@ __all__ = [
     "oracles", "selection", "ssvm", "subgradient", "types", "workset",
     "RunConfig", "RunResult", "run", "BCFWState", "SSVMProblem", "WorkSet",
 ]
+
+
+def __getattr__(name: str):
+    # The deprecated workset shim loads lazily so `import repro.core`
+    # itself never emits its DeprecationWarning.
+    if name == "workset":
+        import importlib
+
+        return importlib.import_module(".workset", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

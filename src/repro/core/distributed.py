@@ -15,7 +15,8 @@ arrived in time; missing blocks transparently fall back to their cached
 working set — i.e. the paper's approximate oracle doubles as the
 fault-tolerance path.  The fallback is *batched*: every sampled block's
 cache is scored at the chunk's shared stale ``w`` in one
-``workset.approx_oracle_all`` call (one ``plane_scores`` launch), not one
+``repro.cache.approx_oracle_all`` call (one fused score-and-select
+launch), not one
 launch per missing block.
 
 This module holds the single-host *reference* implementation
@@ -41,7 +42,7 @@ from .bcfw import block_update
 from .mpbcfw import MPState
 from .types import SSVMProblem
 from .ssvm import weights_of
-from . import workset as ws_ops
+from .. import cache as plane_cache
 
 
 def gather_examples(problem: SSVMProblem, block_ids: jnp.ndarray):
@@ -78,12 +79,12 @@ def fallback_planes(ws, block_ids: jnp.ndarray, w: jnp.ndarray):
 
     Returns ``(planes (tau, d+1), slots (tau,), scores (tau,))`` — the
     tau-nice straggler fallback for a whole chunk in one batched
-    ``workset.approx_oracle_all`` scoring call over the gathered
-    sub-workset.  Blocks with an empty cache get the zero (ground-truth)
+    ``repro.cache.approx_oracle_all`` scoring call over the gathered
+    sub-cache.  Blocks with an empty cache get the zero (ground-truth)
     plane, which still yields a valid monotone fold step.  Re-exported as
     ``repro.ft.fallback_planes`` (the fault-tolerance API surface).
     """
-    return ws_ops.approx_oracle_all(ws_ops.gather_blocks(ws, block_ids), w)
+    return plane_cache.approx_oracle_all(plane_cache.gather(ws, block_ids), w)
 
 
 def fold_planes(mp: MPState, block_ids: jnp.ndarray, planes: jnp.ndarray,
@@ -93,8 +94,8 @@ def fold_planes(mp: MPState, block_ids: jnp.ndarray, planes: jnp.ndarray,
 
     ``done[b]`` False means block b's oracle result is missing (straggler /
     failure): the block's *precomputed* fallback — its best cached plane at
-    the chunk's shared stale ``w``, from ``workset.approx_oracle_all`` over
-    the gathered sub-workset — is folded instead.  Folding is a cheap
+    the chunk's shared stale ``w``, from ``repro.cache.approx_oracle_all`` over
+    the gathered sub-cache — is folded instead.  Folding is a cheap
     O(tau d) scan; each step uses exact line search at the *current* phi,
     hence monotone in F no matter which ``w`` produced the candidate.
     """
@@ -107,17 +108,17 @@ def fold_planes(mp: MPState, block_ids: jnp.ndarray, planes: jnp.ndarray,
         st = st._replace(n_exact=st.n_exact + ok.astype(jnp.int32),
                          n_approx=st.n_approx + (~ok).astype(jnp.int32))
         # Cache the fresh plane; on fallback just refresh activity.
-        ws_new = ws_ops.add_plane(ws, i, phi_hat, mp.outer_it)
-        ws_fb = ws_ops.mark_active(ws, i, fbs, mp.outer_it)
+        ws_new = plane_cache.insert(ws, i, phi_hat, mp.outer_it)
+        ws_fb = plane_cache.mark_active(ws, i, fbs, mp.outer_it)
         ws = jax.tree_util.tree_map(
             lambda a, b: jnp.where(ok, a, b), ws_new, ws_fb)
         av = update_average(av, st.phi, exact=True)
         return (st, ws, av), None
 
     (inner, ws, avg), _ = jax.lax.scan(
-        body, (mp.inner, mp.ws, mp.avg),
+        body, (mp.inner, mp.cache, mp.avg),
         (block_ids, planes, fb_planes, fb_slots, done))
-    return mp._replace(inner=inner, ws=ws, avg=avg)
+    return mp._replace(inner=inner, cache=ws, avg=avg)
 
 
 @functools.partial(jax.jit, static_argnames=("lam",))
@@ -144,7 +145,7 @@ def tau_chunk(oracle, data, mp: MPState, ids: jnp.ndarray, ok: jnp.ndarray,
         planes = jax.vmap(lambda ex: oracle(w, ex))(batch)
     else:
         planes = oracle_stage(data, w, ids)
-    fbp, fbs, _ = fallback_planes(mp.ws, ids, w)
+    fbp, fbs, _ = fallback_planes(mp.cache, ids, w)
     return fold_planes(mp, ids, planes, fbp, fbs, ok, lam)
 
 

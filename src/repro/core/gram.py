@@ -1,12 +1,17 @@
-"""Inner-product (kernel) caching for approximate steps (paper Sec. 3.5).
+"""Inner-product (kernel) recurrences for approximate steps (paper Sec. 3.5).
 
 When the approximate oracle is applied to the same block several times in a
 row (the paper uses 10 repeats), all the quantities needed by the BCFW line
 search can be maintained from scalar recurrences over cached Gram products
 <phi_a*, phi_b*>, making each inner step Theta(|W_i|) instead of
-Theta(|W_i| d).  The Gram matrix is stored persistently per block — rows are
-refreshed only when a plane is inserted — which is the "computed on demand
-and cached" scheme of the paper, and is also the hook for kernelized SSVMs.
+Theta(|W_i| d).  The Gram matrices live *inside* the plane cache
+(:class:`repro.cache.PlaneCache` with ``CacheLayout(gram=True)``): rows are
+refreshed by :func:`repro.cache.insert` whenever a plane lands in a slot —
+the "computed on demand and cached" scheme of the paper, and the hook for
+kernelized SSVMs.  This module holds only the optimization math that
+*consumes* those matrices; there is no separate gram state to thread
+through passes anymore (which is exactly what lets the mesh-sharded engine
+run this variant: the gram leaf shards with the blocks).
 
 Recurrences (phi' = phi + g(phi_j - phi_i); phi_i' = (1-g)phi_i + g phi_j):
     a_j = <phi_j*, phi*>   ->  a_j + g (G[j,h] - b_j)
@@ -16,84 +21,24 @@ Recurrences (phi' = phi + g(phi_j - phi_i); phi_i' = (1-g)phi_i + g phi_j):
 with h the argmax plane.  The final phi_i is materialized from the tracked
 convex-combination coefficients with one (cap+1, d+1) matvec, and
 phi' - phi_i' = phi - phi_i is invariant, so phi is materialized for free.
+
+``GramCache`` / ``init_gram`` / ``add_plane_with_gram`` /
+``exact_pass_gram`` remain as thin deprecated aliases for one release;
+they wrap the gram-carrying cache.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from .. import cache as plane_cache
+from ..cache import NEG_INF, PlaneCache
 from .averaging import update_average
-from .bcfw import block_update
-from .ssvm import weights_of
-from .types import AveragingState, BCFWState, SSVMProblem, WorkSet
-from .workset import NEG_INF
-from . import workset as ws_ops
-
-
-class GramCache(NamedTuple):
-    """Persistent per-block Gram matrices G[i, a, b] = <phi_a*, phi_b*>."""
-
-    gram: jnp.ndarray  # (n, cap, cap) float32
-
-
-def init_gram(n: int, cap: int) -> GramCache:
-    return GramCache(gram=jnp.zeros((n, cap, cap), jnp.float32))
-
-
-def add_plane_with_gram(ws: WorkSet, gc: GramCache, i: jnp.ndarray,
-                        plane: jnp.ndarray, it: jnp.ndarray
-                        ) -> Tuple[WorkSet, GramCache]:
-    """Insert a plane and refresh its Gram row/column (O(cap * d))."""
-    valid_i = ws.valid[i]
-    key = jnp.where(valid_i, ws.last_active[i], jnp.int32(-2**31 + 1))
-    slot = jnp.argmin(key)
-    ws = WorkSet(planes=ws.planes.at[i, slot].set(plane),
-                 valid=ws.valid.at[i, slot].set(True),
-                 last_active=ws.last_active.at[i, slot].set(it))
-    row = ws.planes[i, :, :-1] @ plane[:-1]          # (cap,)
-    gram = gc.gram.at[i, slot, :].set(row).at[i, :, slot].set(row)
-    return ws, GramCache(gram=gram)
-
-
-def exact_pass_gram(problem: SSVMProblem, mp, gc: GramCache,
-                    perm: jnp.ndarray, lam: float):
-    """Exact pass (Alg. 3 step 3) that also maintains the Gram cache.
-
-    Identical to :func:`repro.core.mpbcfw.exact_pass` except that each
-    plane insertion refreshes its Gram row/column.  Traced (no jit) so it
-    can be fused into :func:`repro.core.mpbcfw.outer_iteration`; the
-    standalone :func:`jit_exact_pass_gram` wraps it for direct use.
-    """
-
-    def body(carry, i):
-        mp, gc = carry
-        w = weights_of(mp.inner.phi, lam)
-        ex = jax.tree_util.tree_map(lambda a: a[i], problem.data)
-        phi_hat = problem.oracle(w, ex)
-        inner, _ = block_update(mp.inner, i, phi_hat, lam)
-        inner = inner._replace(n_exact=inner.n_exact + 1)
-        ws, gc = add_plane_with_gram(mp.ws, gc, i, phi_hat, mp.outer_it)
-        avg = update_average(mp.avg, inner.phi, exact=True)
-        return (mp._replace(inner=inner, ws=ws, avg=avg), gc), None
-
-    (mp, gc), _ = jax.lax.scan(body, (mp, gc), perm)
-    return mp, gc
-
-
-@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
-def _jit_exact_pass_gram(oracle, n, data, mp, gc, perm, *, lam):
-    prob = SSVMProblem(n=n, d=mp.inner.phi.shape[0] - 1, data=data,
-                       oracle=oracle)
-    return exact_pass_gram(prob, mp, gc, perm, lam)
-
-
-def jit_exact_pass_gram(problem: SSVMProblem, mp, gc: GramCache,
-                        perm: jnp.ndarray, *, lam: float):
-    return _jit_exact_pass_gram(problem.oracle, problem.n, problem.data,
-                                mp, gc, perm, lam=lam)
+from .types import AveragingState, BCFWState, SSVMProblem
 
 
 def multi_step_block_update(planes_i: jnp.ndarray, valid_i: jnp.ndarray,
@@ -152,37 +97,88 @@ def multi_step_block_update(planes_i: jnp.ndarray, valid_i: jnp.ndarray,
     return new_phi_i, new_phi, won
 
 
-def approx_pass_gram(problem: SSVMProblem, inner: BCFWState, ws: WorkSet,
-                     gc: GramCache, avg: AveragingState, perm: jnp.ndarray,
+def approx_pass_gram(inner: BCFWState, cache: PlaneCache,
+                     avg: AveragingState, perm: jnp.ndarray,
                      outer_it: jnp.ndarray, lam: float, steps: int = 10):
-    """Approximate pass using the cached-Gram multi-step scheme."""
-    del problem
+    """Approximate pass using the cached-Gram multi-step scheme.
+
+    ``cache`` must carry gram blocks (``CacheLayout(gram=True)``).
+    Returns ``(inner, cache, avg)``.
+    """
 
     def body(carry, i):
-        st, ws, av = carry
+        st, c, av = carry
         phi_i, phi, won = multi_step_block_update(
-            ws.planes[i], ws.valid[i], gc.gram[i], st.phi, st.phi_i[i],
+            c.planes[i], c.valid[i], c.gram[i], st.phi, st.phi_i[i],
             lam, steps)
         st = st._replace(phi_i=st.phi_i.at[i].set(phi_i), phi=phi,
                          n_approx=st.n_approx + steps)
-        la = jnp.where(won, outer_it, ws.last_active[i])
-        ws = ws._replace(last_active=ws.last_active.at[i].set(la))
+        c = plane_cache.mark_active_where(c, i, won, outer_it)
         av = update_average(av, st.phi, exact=False)
-        return (st, ws, av), None
+        return (st, c, av), None
 
-    (inner, ws, avg), _ = jax.lax.scan(body, (inner, ws, avg), perm)
-    return inner, ws, avg
+    (inner, cache, avg), _ = jax.lax.scan(body, (inner, cache, avg), perm)
+    return inner, cache, avg
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "steps"))
-def _jit_approx_pass_gram(inner, ws, gc, avg, perm, outer_it,
-                          *, lam: float, steps: int = 10):
-    return approx_pass_gram(None, inner, ws, gc, avg, perm, outer_it,
-                            lam, steps)
+def jit_approx_pass_gram(inner, cache, avg, perm, outer_it,
+                         *, lam: float, steps: int = 10):
+    return approx_pass_gram(inner, cache, avg, perm, outer_it, lam, steps)
 
 
-def jit_approx_pass_gram(problem: SSVMProblem, inner, ws, gc, avg, perm,
-                         outer_it, *, lam: float, steps: int = 10):
-    del problem  # never touches the data
-    return _jit_approx_pass_gram(inner, ws, gc, avg, perm, outer_it,
-                                 lam=lam, steps=steps)
+# ---------------------------------------------------------------------------
+# Deprecated aliases (one release): the separate GramCache is gone — gram
+# state lives inside the PlaneCache.  These wrappers attach/detach it.
+
+
+class GramCache(NamedTuple):
+    """Deprecated: per-block Gram matrices now ride in PlaneCache.gram."""
+
+    gram: jnp.ndarray  # (n, cap, cap) float32
+
+
+def _warn_gram(name: str) -> None:
+    warnings.warn(
+        f"repro.core.gram.{name} is deprecated: build the cache with "
+        "repro.cache.CacheLayout(gram=True) — insertions refresh the Gram "
+        "rows inside repro.cache.insert, and the passes read "
+        "PlaneCache.gram directly", DeprecationWarning, stacklevel=3)
+
+
+def init_gram(n: int, cap: int) -> GramCache:
+    _warn_gram("init_gram")
+    return GramCache(gram=jnp.zeros((n, cap, cap), jnp.float32))
+
+
+def add_plane_with_gram(ws: PlaneCache, gc: GramCache, i: jnp.ndarray,
+                        plane: jnp.ndarray, it: jnp.ndarray
+                        ) -> Tuple[PlaneCache, GramCache]:
+    """Deprecated: ``repro.cache.insert`` on a gram-carrying cache."""
+    _warn_gram("add_plane_with_gram")
+    out = plane_cache.insert(ws._replace(gram=gc.gram), i, plane, it)
+    return out._replace(gram=None), GramCache(gram=out.gram)
+
+
+def exact_pass_gram(problem: SSVMProblem, mp, gc: GramCache,
+                    perm: jnp.ndarray, lam: float):
+    """Deprecated: ``repro.core.mpbcfw.exact_pass`` is gram-aware once the
+    MPState's cache carries gram blocks."""
+    from . import mpbcfw
+
+    _warn_gram("exact_pass_gram")
+    mp = mp._replace(cache=mp.cache._replace(gram=gc.gram))
+    mp = mpbcfw.exact_pass(problem, mp, perm, lam)
+    gc = GramCache(gram=mp.cache.gram)
+    return mp._replace(cache=mp.cache._replace(gram=None)), gc
+
+
+def jit_exact_pass_gram(problem: SSVMProblem, mp, gc: GramCache,
+                        perm: jnp.ndarray, *, lam: float):
+    from . import mpbcfw
+
+    _warn_gram("jit_exact_pass_gram")
+    mp = mp._replace(cache=mp.cache._replace(gram=gc.gram))
+    mp = mpbcfw.jit_exact_pass(problem, mp, perm, lam=lam)
+    gc = GramCache(gram=mp.cache.gram)
+    return mp._replace(cache=mp.cache._replace(gram=None)), gc

@@ -7,6 +7,15 @@ The algorithm interleaves
   * **approximate passes** — BCFW steps against the *cached* planes only
     (``H~_i(w) = max_{phi in W_i} <phi, [w 1]>``), costing O(|W_i| d) each.
 
+All cache state rides in one :class:`repro.cache.PlaneCache` inside
+:class:`MPState`, and every mutation/scoring goes through the
+:mod:`repro.cache` API.  When the cache is built with
+``CacheLayout(gram=True)``, the Sec-3.5 scheme is on: insertions refresh
+the per-block Gram rows (inside :func:`repro.cache.insert`) and the
+approximate phase runs the O(cap)-per-step recurrences of
+:mod:`repro.core.gram` — no separate gram state is threaded through any
+pass.
+
 Both passes are single jitted ``lax.scan`` programs, and the *sequence* of
 approximate passes per exact pass is itself one jitted program:
 :func:`multi_approx_pass` runs up to ``B`` passes inside a
@@ -17,35 +26,42 @@ the host never round-trips between approximate passes.  The host-side
 through its own clock; the TTL rule resolves ``N``.
 
 :func:`outer_iteration` fuses the whole outer iteration — TTL eviction,
-the exact pass (plain or Sec-3.5 Gram variant), on-device slope-clock
-seeding, and the batched approximate phase — into **one** program, which
-is what lets :class:`repro.api.Solver` dispatch once and sync once per
-outer iteration for the entire MP-BCFW family.
+the exact pass, on-device slope-clock seeding, and the batched
+approximate phase — into **one** program, which is what lets
+:class:`repro.api.Solver` dispatch once and sync once per outer iteration
+for the entire MP-BCFW family.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from .. import cache as plane_cache
+from ..cache import CacheLayout, PlaneCache
 from .averaging import update_average
 from .bcfw import block_update
 from .selection import slope_continue_jnp
 from .ssvm import dual_value, weights_of
 from .types import (ApproxBatchStats, AveragingState, BCFWState, SlopeClock,
-                    SSVMProblem, WorkSet)
-from . import workset as ws_ops
+                    SSVMProblem)
 
 
 class MPState(NamedTuple):
-    """Full MP-BCFW state: dual state + working sets + averaging."""
+    """Full MP-BCFW state: dual state + plane cache + averaging."""
 
     inner: BCFWState
-    ws: WorkSet
+    cache: PlaneCache
     avg: AveragingState
     outer_it: jnp.ndarray  # () int32, outer-iteration counter (for TTL)
+
+    @property
+    def ws(self) -> PlaneCache:
+        """Deprecated accessor (one release): the working set *is* the
+        plane cache now."""
+        return self.cache
 
 
 def _example(problem: SSVMProblem, i: jnp.ndarray):
@@ -54,24 +70,30 @@ def _example(problem: SSVMProblem, i: jnp.ndarray):
 
 def exact_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
                lam: float) -> MPState:
-    """Paper Alg. 3 step 3: BCFW pass with the real oracle + plane caching."""
+    """Paper Alg. 3 step 3: BCFW pass with the real oracle + plane caching.
+
+    :func:`repro.cache.insert` refreshes the Gram rows when the cache
+    materializes them, so this one pass body serves both the plain and
+    the Sec-3.5 configurations.
+    """
 
     def body(carry, i):
-        st, ws, av = carry
+        st, c, av = carry
         w = weights_of(st.phi, lam)
         phi_hat = problem.oracle(w, _example(problem, i))
         st, _ = block_update(st, i, phi_hat, lam)
         st = st._replace(n_exact=st.n_exact + 1)
-        ws = ws_ops.add_plane(ws, i, phi_hat, mp.outer_it)
+        c = plane_cache.insert(c, i, phi_hat, mp.outer_it)
         av = update_average(av, st.phi, exact=True)
-        return (st, ws, av), None
+        return (st, c, av), None
 
-    (inner, ws, avg), _ = jax.lax.scan(body, (mp.inner, mp.ws, mp.avg), perm)
-    return MPState(inner=inner, ws=ws, avg=avg, outer_it=mp.outer_it)
+    (inner, cache, avg), _ = jax.lax.scan(body, (mp.inner, mp.cache, mp.avg),
+                                          perm)
+    return MPState(inner=inner, cache=cache, avg=avg, outer_it=mp.outer_it)
 
 
-def approx_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
-                lam: float) -> MPState:
+def approx_pass(problem: Optional[SSVMProblem], mp: MPState,
+                perm: jnp.ndarray, lam: float) -> MPState:
     """Paper Alg. 3 step 4: BCFW pass against the cached planes only.
 
     Each step is monotone in F because the cached planes are genuine data
@@ -81,25 +103,26 @@ def approx_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
     del problem  # the approximate pass never touches the data
 
     def body(carry, i):
-        st, ws, av = carry
+        st, c, av = carry
         w = weights_of(st.phi, lam)
-        phi_hat, slot, _ = ws_ops.approx_oracle(ws, i, w)
+        phi_hat, slot, _ = plane_cache.approx_oracle(c, i, w)
         st, gamma = block_update(st, i, phi_hat, lam)
         st = st._replace(n_approx=st.n_approx + 1)
         # A plane is "active" if the (approximate) oracle returned it.
-        ws = ws_ops.mark_active(ws, i, slot, mp.outer_it)
+        c = plane_cache.mark_active(c, i, slot, mp.outer_it)
         av = update_average(av, st.phi, exact=False)
-        return (st, ws, av), None
+        return (st, c, av), None
 
-    (inner, ws, avg), _ = jax.lax.scan(body, (mp.inner, mp.ws, mp.avg), perm)
-    return MPState(inner=inner, ws=ws, avg=avg, outer_it=mp.outer_it)
+    (inner, cache, avg), _ = jax.lax.scan(body, (mp.inner, mp.cache, mp.avg),
+                                          perm)
+    return MPState(inner=inner, cache=cache, avg=avg, outer_it=mp.outer_it)
 
 
 def begin_iteration(mp: MPState, ttl: int) -> MPState:
     """TTL eviction + outer-iteration increment (paper Sec. 3.4, param N/T)."""
     it = mp.outer_it + 1
-    ws = ws_ops.evict_stale(mp.ws._replace(), it, ttl)
-    return mp._replace(ws=ws, outer_it=it)
+    return mp._replace(cache=plane_cache.evict_stale(mp.cache, it, ttl),
+                       outer_it=it)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
@@ -197,7 +220,7 @@ def slope_batched_loop(carry, perms: jnp.ndarray, clock: SlopeClock, *,
 
 
 def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
-                      *, lam: float, gc=None, steps: int = 10,
+                      *, lam: float, steps: int = 10,
                       run_all: bool = False
                       ) -> Tuple[MPState, SlopeClock, ApproxBatchStats]:
     """Up to ``B = perms.shape[0]`` approximate passes in one device program.
@@ -210,27 +233,29 @@ def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
     exit, not masking), so the returned state equals exactly
     ``passes_run`` sequential :func:`approx_pass` applications.
 
-    ``gc`` switches the pass body to the Sec-3.5 Gram-cache scheme
-    (``steps`` inner repeats per block); ``run_all`` disables the stopping
-    rule (used by equivalence tests and fixed-budget callers).  Chunked
-    callers thread the returned clock into the next batch; the dual on
-    entry (= after the caller's exact pass) is recomputed on device into
-    ``stats.f_entry``, so no host sync is needed to seed the rule.
+    A gram-carrying cache (``CacheLayout(gram=True)``) switches the pass
+    body to the Sec-3.5 multi-step scheme (``steps`` inner repeats per
+    block); ``run_all`` disables the stopping rule (used by equivalence
+    tests and fixed-budget callers).  Chunked callers thread the returned
+    clock into the next batch; the dual on entry (= after the caller's
+    exact pass) is recomputed on device into ``stats.f_entry``, so no host
+    sync is needed to seed the rule.
     """
     from . import gram as gram_ops
 
     f_entry = dual_value(mp.inner.phi, lam)
     # Approximate passes never insert/evict planes, so the per-pass cost —
     # Theta(sum_i |W_i|) — is constant across the batch.
-    total_planes = jnp.sum(ws_ops.sizes(mp.ws)).astype(jnp.int32)
+    total_planes = jnp.sum(plane_cache.sizes(mp.cache)).astype(jnp.int32)
     cost = clock.plane_cost * jnp.maximum(total_planes, 1).astype(jnp.float32)
+    use_gram = mp.cache.gram is not None
 
     def step(state: MPState, perm: jnp.ndarray):
-        if gc is not None:
-            inner, ws, avg = gram_ops.approx_pass_gram(
-                None, state.inner, state.ws, gc, state.avg, perm,
-                state.outer_it, lam, steps)
-            state = state._replace(inner=inner, ws=ws, avg=avg)
+        if use_gram:
+            inner, cache, avg = gram_ops.approx_pass_gram(
+                state.inner, state.cache, state.avg, perm, state.outer_it,
+                lam, steps)
+            state = state._replace(inner=inner, cache=cache, avg=avg)
         else:
             state = approx_pass(None, state, perm, lam)
         return state, dual_value(state.inner.phi, lam)
@@ -242,79 +267,76 @@ def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "steps", "run_all"))
-def _jit_multi_approx_pass(mp, perms, clock, gc, *, lam, steps, run_all):
-    return multi_approx_pass(mp, perms, clock, lam=lam, gc=gc, steps=steps,
+def _jit_multi_approx_pass(mp, perms, clock, *, lam, steps, run_all):
+    return multi_approx_pass(mp, perms, clock, lam=lam, steps=steps,
                              run_all=run_all)
 
 
 def jit_multi_approx_pass(problem: Optional[SSVMProblem], mp: MPState,
                           perms: jnp.ndarray, clock: SlopeClock, *,
-                          lam: float, gc=None, steps: int = 10,
+                          lam: float, steps: int = 10,
                           run_all: bool = False):
     del problem  # approximate passes never touch the data
-    return _jit_multi_approx_pass(mp, perms, clock, gc, lam=lam, steps=steps,
+    return _jit_multi_approx_pass(mp, perms, clock, lam=lam, steps=steps,
                                   run_all=run_all)
 
 
-def outer_iteration(problem: SSVMProblem, mp: MPState, gc, perm: jnp.ndarray,
+def outer_iteration(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
                     perms: jnp.ndarray, clock: SlopeClock, *, lam: float,
                     ttl: int, steps: int = 10, run_all: bool = False):
     """One *fused* MP-BCFW outer iteration (paper Alg. 3, one device program).
 
     TTL eviction, the exact pass (oracle scan + plane insertion +
-    averaging; the Sec-3.5 Gram variant when ``gc`` is given), and the
-    slope-ruled batch of approximate passes run back to back inside a
-    single program — the driver dispatches once and syncs once per outer
-    iteration, with no dispatch boundary left between the exact and
-    approximate phases.
+    averaging; gram rows refreshed inside :func:`repro.cache.insert` when
+    the cache carries them), and the slope-ruled batch of approximate
+    passes run back to back inside a single program — the driver
+    dispatches once and syncs once per outer iteration, with no dispatch
+    boundary left between the exact and approximate phases.
 
     The slope clock is seeded **on device**: ``clock.f0`` is replaced by
     the dual at iteration entry (TTL eviction never changes ``phi``, so
     this is the paper's F at the start of the iteration) — the host only
     supplies the cost constants ``clock.t`` (modeled exact-pass cost) and
-    ``clock.plane_cost``.  Returns ``(mp, gc, clock, stats)``; ``gc`` is
-    ``None`` when no Gram cache is threaded.
+    ``clock.plane_cost``.  Returns ``(mp, clock, stats)``.
     """
-    from . import gram as gram_ops
-
     mp = begin_iteration(mp, ttl)
     clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
-    if gc is not None:
-        mp, gc = gram_ops.exact_pass_gram(problem, mp, gc, perm, lam)
-    else:
-        mp = exact_pass(problem, mp, perm, lam)
-    mp, clock, stats = multi_approx_pass(mp, perms, clock, lam=lam, gc=gc,
-                                         steps=steps, run_all=run_all)
-    return mp, gc, clock, stats
+    mp = exact_pass(problem, mp, perm, lam)
+    return multi_approx_pass(mp, perms, clock, lam=lam, steps=steps,
+                             run_all=run_all)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1),
                    static_argnames=("lam", "ttl", "steps", "run_all"))
-def _jit_outer_iteration(oracle, n, data, mp, gc, perm, perms, clock,
+def _jit_outer_iteration(oracle, n, data, mp, perm, perms, clock,
                          *, lam, ttl, steps, run_all):
     prob = SSVMProblem(n=n, d=mp.inner.phi.shape[0] - 1, data=data,
                        oracle=oracle)
-    return outer_iteration(prob, mp, gc, perm, perms, clock, lam=lam,
+    return outer_iteration(prob, mp, perm, perms, clock, lam=lam,
                            ttl=ttl, steps=steps, run_all=run_all)
 
 
-def jit_outer_iteration(problem: SSVMProblem, mp: MPState, gc,
+def jit_outer_iteration(problem: SSVMProblem, mp: MPState,
                         perm: jnp.ndarray, perms: jnp.ndarray,
                         clock: SlopeClock, *, lam: float, ttl: int,
                         steps: int = 10, run_all: bool = False):
     """Jitted :func:`outer_iteration` (cached per oracle/shape/flags)."""
     return _jit_outer_iteration(problem.oracle, problem.n, problem.data,
-                                mp, gc, perm, perms, clock, lam=lam,
+                                mp, perm, perms, clock, lam=lam,
                                 ttl=ttl, steps=steps, run_all=run_all)
 
 
-def init_mp_state(problem: SSVMProblem, cap: int) -> MPState:
+def init_mp_state(problem: SSVMProblem,
+                  cap: Union[int, CacheLayout]) -> MPState:
+    """Fresh MP-BCFW state; ``cap`` is an int or a full
+    :class:`~repro.cache.CacheLayout` (gram on/off, dtype, mesh axis)."""
     from .averaging import init_averaging
     from .ssvm import init_state
 
+    layout = cap if isinstance(cap, CacheLayout) else CacheLayout(cap=int(cap))
     return MPState(
         inner=init_state(problem),
-        ws=ws_ops.init_workset(problem.n, cap, problem.d),
+        cache=plane_cache.init(layout, problem.n, problem.d),
         avg=init_averaging(problem.d),
         outer_it=jnp.zeros((), jnp.int32),
     )

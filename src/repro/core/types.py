@@ -46,20 +46,11 @@ class AveragingState(NamedTuple):
     k_approx: jnp.ndarray    # () int32
 
 
-class WorkSet(NamedTuple):
-    """Fixed-capacity per-block working sets of planes (paper Sec. 3.3).
-
-    Attributes:
-      planes:      (n, cap, d+1) stored planes.
-      valid:       (n, cap) bool, slot occupancy.
-      last_active: (n, cap) int32, outer-iteration index at which the slot's
-                   plane was last returned by an (exact or approximate)
-                   oracle call.  Used for LRU eviction and the TTL rule.
-    """
-
-    planes: jnp.ndarray
-    valid: jnp.ndarray
-    last_active: jnp.ndarray
+# Deprecated alias (one release): the working set is now the first-class
+# repro.cache.PlaneCache pytree (planes + valid + last_active + optional
+# per-block Gram matrices).  Constructing WorkSet(planes, valid,
+# last_active) still works — the gram leaf defaults to None.
+from ..cache.state import PlaneCache as WorkSet  # noqa: E402,F401
 
 
 class SSVMProblem(NamedTuple):

@@ -1,154 +1,38 @@
-"""Per-example working sets of cached oracle planes (paper Sec. 3.3/3.4).
+"""Deprecated shim over :mod:`repro.cache` (kept one release).
 
-The paper stores a list of planes per training example; planes are added on
-every exact oracle call, and removed (a) by LRU when the hard cap ``N`` is
-exceeded and (b) by a TTL rule: planes that were not *active* (returned as
-the argmax of an exact or approximate oracle call) during the last ``T``
-outer iterations are dropped.
+The working-set logic that used to live here — slot choice, LRU/TTL
+eviction, the flattened kernel layout, batched scoring — is now the
+first-class plane-cache subsystem :mod:`repro.cache`.  Every name below
+is a thin alias; new code imports ``repro.cache`` directly:
 
-TPU adaptation: the sets are a dense ``(n, cap, d+1)`` ring with ``valid``
-and ``last_active`` metadata, so that all operations are vectorized /
-`lax.scan`-compatible.  Scoring goes through
-:func:`repro.kernels.ops.plane_scores` — the Pallas kernel on TPU, the
-pure-jnp reference elsewhere — and :func:`flat_view` exposes the
-kernel-friendly flattened ``(n*cap, d)`` layout so a *single* kernel launch
-can score every cached plane of every block.  The *effective* working-set
-size is data-dependent exactly as in the paper (the TTL rule invalidates
-slots); ``cap`` only bounds memory.
+  ==================  =============================
+  legacy name         repro.cache name
+  ==================  =============================
+  ``init_workset``    ``init`` (via ``CacheLayout``)
+  ``add_plane``       ``insert``
+  ``gather_blocks``   ``gather``
+  ``WorkSet``         ``PlaneCache``
+  (everything else)   same name
+  ==================  =============================
 """
 from __future__ import annotations
 
-from typing import Tuple
+import warnings
 
-import jax.numpy as jnp
+from ..cache import (NEG_INF, CacheLayout, approx_oracle,  # noqa: F401
+                     approx_oracle_all, evict_stale, flat_view, gather,
+                     init, insert, mark_active, score_all, sizes)
+from .types import WorkSet  # noqa: F401  (deprecated PlaneCache alias)
 
-from ..kernels import ops
-from .types import WorkSet
+warnings.warn(
+    "repro.core.workset is deprecated: the plane cache is the repro.cache "
+    "subsystem now (PlaneCache/CacheLayout + init/insert/mark_active/"
+    "evict_stale/gather/flat_view/score_all/approx_oracle_all/sizes)",
+    DeprecationWarning, stacklevel=2)
 
-# Score assigned to invalid slots so they never win the argmax.
-NEG_INF = jnp.float32(-1e30)
+add_plane = insert
+gather_blocks = gather
 
 
 def init_workset(n: int, cap: int, d: int) -> WorkSet:
-    return WorkSet(
-        planes=jnp.zeros((n, cap, d + 1), jnp.float32),
-        valid=jnp.zeros((n, cap), bool),
-        last_active=jnp.full((n, cap), -1, jnp.int32),
-    )
-
-
-def add_plane(ws: WorkSet, i: jnp.ndarray, plane: jnp.ndarray,
-              it: jnp.ndarray) -> WorkSet:
-    """Insert ``plane`` into block ``i``'s set, evicting LRU if full.
-
-    The slot chosen is the first invalid slot if one exists, otherwise the
-    valid slot with the smallest ``last_active`` ("inactive the longest",
-    paper Alg. 3 step 3).  The new plane is marked active at iteration
-    ``it`` (it was just returned by the exact oracle).
-    """
-    valid_i = ws.valid[i]
-    age_i = ws.last_active[i]
-    # Prefer empty slots: give them age -inf so argmin picks them first.
-    key = jnp.where(valid_i, age_i, jnp.int32(-2**31 + 1))
-    slot = jnp.argmin(key)
-    return WorkSet(
-        planes=ws.planes.at[i, slot].set(plane),
-        valid=ws.valid.at[i, slot].set(True),
-        last_active=ws.last_active.at[i, slot].set(it),
-    )
-
-
-def flat_view(ws: WorkSet) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Kernel-facing flattened layout of the whole cache.
-
-    Returns ``(P, b, valid)`` with ``P`` the ``(n*cap, d)`` linear parts,
-    ``b`` the ``(n*cap,)`` offsets and ``valid`` the ``(n*cap,)`` slot mask
-    — exactly the operand layout of the ``plane_scores`` kernel, so one
-    launch scores every cached plane of every block.
-    """
-    n, cap, d1 = ws.planes.shape
-    flat = ws.planes.reshape(n * cap, d1)
-    return flat[:, :-1], flat[:, -1], ws.valid.reshape(n * cap)
-
-
-def score_all(ws: WorkSet, w: jnp.ndarray) -> jnp.ndarray:
-    """Masked scores of every cached plane at one shared ``w``: (n, cap).
-
-    Invalid slots score ``NEG_INF``.  One ``plane_scores`` launch over the
-    flattened view — the batched form of :func:`approx_oracle` used by
-    telemetry, benchmarks and shared-``w`` (tau-nice) passes.
-    """
-    p, b, valid = flat_view(ws)
-    n, cap = ws.valid.shape
-    return ops.plane_scores_masked(p, w, b, valid,
-                                   neg=NEG_INF).reshape(n, cap)
-
-
-def gather_blocks(ws: WorkSet, ids: jnp.ndarray) -> WorkSet:
-    """Sub-workset of the rows in ``ids`` (tau-nice chunks, shard views).
-
-    The result is a fully valid :class:`WorkSet` of shape ``(len(ids), cap,
-    ...)``, so the batched operations (:func:`score_all`,
-    :func:`approx_oracle_all`) apply unchanged — this is how the tau-nice
-    straggler fallback scores every sampled block's cache in one
-    ``plane_scores`` launch instead of one launch per block.
-    """
-    return WorkSet(planes=ws.planes[ids], valid=ws.valid[ids],
-                   last_active=ws.last_active[ids])
-
-
-def approx_oracle_all(ws: WorkSet, w: jnp.ndarray):
-    """Batched approximate oracle: best cached plane per block at one ``w``.
-
-    Returns ``(planes (n, d+1), slots (n,), scores (n,))``; blocks with an
-    empty set get the zero plane and score 0 (the ground-truth plane).
-    """
-    scores = score_all(ws, w)
-    slots = jnp.argmax(scores, axis=1)
-    best = jnp.take_along_axis(scores, slots[:, None], axis=1)[:, 0]
-    any_valid = jnp.any(ws.valid, axis=1)
-    planes = jnp.take_along_axis(ws.planes, slots[:, None, None], axis=1)[:, 0]
-    planes = jnp.where(any_valid[:, None], planes,
-                       jnp.zeros_like(planes))
-    return planes, slots, jnp.where(any_valid, best, 0.0)
-
-
-def approx_oracle(ws: WorkSet, i: jnp.ndarray, w: jnp.ndarray):
-    """argmax over block i's cached planes of <phi, [w 1]>.
-
-    Returns ``(plane, slot, score)``; callers must mark ``slot`` active.
-    If the set is empty the zero plane is returned (score 0 >= NEG_INF
-    guard keeps behaviour well-defined; H~_i >= 0 always holds because the
-    ground-truth plane is the zero plane).
-    """
-    planes_i = ws.planes[i]                      # (cap, d+1)
-    cap, d = planes_i.shape[0], planes_i.shape[1] - 1
-    if cap >= 8 and d >= 128:
-        # Big enough to fill a (8, 128) tile: worth a kernel launch.
-        scores = ops.plane_scores(planes_i[:, :-1], w, planes_i[:, -1])
-    else:
-        # Tiny blocks: padding to the minimum tile would dominate; let XLA
-        # fuse the matvec into the enclosing scan body instead.
-        scores = planes_i[:, :-1] @ w + planes_i[:, -1]
-    scores = jnp.where(ws.valid[i], scores, NEG_INF)
-    slot = jnp.argmax(scores)
-    best = scores[slot]
-    any_valid = jnp.any(ws.valid[i])
-    plane = jnp.where(any_valid, planes_i[slot], jnp.zeros_like(planes_i[slot]))
-    return plane, slot, jnp.where(any_valid, best, 0.0)
-
-
-def mark_active(ws: WorkSet, i: jnp.ndarray, slot: jnp.ndarray,
-                it: jnp.ndarray) -> WorkSet:
-    return ws._replace(last_active=ws.last_active.at[i, slot].set(it))
-
-
-def evict_stale(ws: WorkSet, it: jnp.ndarray, ttl: int) -> WorkSet:
-    """Drop planes not active during the last ``ttl`` outer iterations."""
-    keep = ws.valid & (it - ws.last_active <= ttl)
-    return ws._replace(valid=keep)
-
-
-def sizes(ws: WorkSet) -> jnp.ndarray:
-    """Current per-block working-set sizes (paper Fig. 5 telemetry)."""
-    return jnp.sum(ws.valid, axis=1)
+    return init(CacheLayout(cap=cap), n, d)

@@ -10,9 +10,9 @@ affected blocks, and the TTL machinery keeps their caches warm.
 
 The fallback itself is **batched**: all sampled blocks' caches are scored
 at the chunk's shared stale ``w`` in a single
-``workset.approx_oracle_all`` call over the gathered sub-workset (one
-``plane_scores`` kernel launch), instead of one scoring program per missed
-block.  ``fallback_planes`` is that one-call path; both the host reference
+``repro.cache.approx_oracle_all`` call over the gathered sub-cache (one
+fused score-and-select kernel launch), instead of one scoring program per
+missed block.  ``fallback_planes`` is that one-call path; both the host reference
 (``core.distributed.host_tau_nice_pass``) and the fused shard engine
 (``repro.shard``) fold its output wherever the ``done`` mask is False.
 

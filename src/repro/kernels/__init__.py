@@ -1,8 +1,9 @@
 """Pallas TPU kernels for MP-BCFW hot spots + LM substrate.
 
-kernels: plane_scores (approximate-oracle matvec), gram (Sec-3.5 cache),
-viterbi (chain-oracle max-plus step), flash_attention (LM training path).
+kernels: plane_scores (approximate-oracle matvec), plane_select (fused
+score-and-select over the plane cache), gram (Sec-3.5 cache), viterbi
+(chain-oracle max-plus step), flash_attention (LM training path).
 Each has a pure-jnp oracle in ref.py; ops.py holds the jit'd dispatchers.
 """
 from . import (flash_attention, gram, moe_ffn, ops,  # noqa: F401
-               plane_scores, ref, viterbi)
+               plane_scores, plane_select, ref, viterbi)

@@ -13,8 +13,15 @@ from . import flash_attention as _fa
 from . import moe_ffn as _moe
 from . import gram as _gram
 from . import plane_scores as _ps
+from . import plane_select as _psel
 from . import viterbi as _vit
 from . import ref
+
+# The one invalid-slot score sentinel, shared by every masked scoring path
+# (kernel defaults, the jnp references, and repro.cache which re-exports it
+# as ``NEG_INF``).  Large enough to lose every argmax, small enough to stay
+# exactly representable in float32.
+INVALID_SCORE = -1e30
 
 
 def on_tpu() -> bool:
@@ -32,7 +39,8 @@ def plane_scores(planes, w, offsets, **kw):
     return ref.plane_scores_ref(planes, w, offsets)
 
 
-def plane_scores_masked(planes, w, offsets, valid, *, neg=-1e30, **kw):
+def plane_scores_masked(planes, w, offsets, valid, *, neg=INVALID_SCORE,
+                        **kw):
     """Masked plane scoring over a flattened (local) cache view.
 
     ``planes (m, d)``, ``offsets (m,)``, ``valid (m,)`` is exactly the
@@ -46,6 +54,23 @@ def plane_scores_masked(planes, w, offsets, valid, *, neg=-1e30, **kw):
     """
     scores = plane_scores(planes, w, offsets, **kw)
     return jax.numpy.where(valid, scores, jax.numpy.float32(neg))
+
+
+def plane_select(planes, w, offsets, valid, *, neg=INVALID_SCORE, **kw):
+    """Fused masked score + per-block argmax over a ``(n, cap, d)`` cache.
+
+    The one-launch replacement for the two-step score-then-argmax on the
+    approximate-oracle hot path: on TPU the ``plane_select`` Pallas kernel
+    keeps the per-slot scores in VMEM and folds each slot straight into
+    the running best/argmax tiles; elsewhere the jnp reference computes
+    the identical quantities through the same flattened matvec the
+    two-step path used (bitwise-equal scores).  Returns
+    ``(best (n,), slot (n,) int32)``; blocks with no valid slot score
+    ``neg`` with slot 0.
+    """
+    if use_pallas():
+        return _psel.plane_select(planes, w, offsets, valid, neg=neg, **kw)
+    return ref.plane_select_ref(planes, w, offsets, valid, neg)
 
 
 def gram(planes, **kw):

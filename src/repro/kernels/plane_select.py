@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused working-set score-and-select.
+
+One launch computes, for every block ``i``, the best cached plane under
+the current weights:
+
+    best[i] = max_s  valid[i, s] ? <planes[i, s], w> + offsets[i, s] : neg
+    idx[i]  = argmax_s ...                 (first maximal slot on ties)
+
+This fuses the two-step hot path of every approximate pass — a
+``plane_scores`` launch over the flattened ``(n*cap, d)`` cache followed
+by a separate masked argmax over the ``(n, cap)`` score matrix — into a
+single kernel, so the per-slot scores never round-trip through HBM.
+
+Layout: the plane stack is processed **slot-major** — grid
+``(n_tiles, cap, d_tiles)`` with the reduction dimension innermost.  For
+a fixed example tile the kernel walks slots ``s = 0..cap-1``; each slot
+contributes one ``(block_e, block_d) @ (block_d, 1)`` accumulation chain
+and, on its last ``d`` tile, folds its masked score into the running
+``best``/``idx`` tiles (which stay resident in VMEM across the whole
+slot sweep).  Offsets are folded into the dot product by augmenting the
+planes with one extra column against ``[w; 1]``, so the kernel has no
+separate bias operand.  All tiles are 2-D and sublane/lane aligned
+(``block_e`` a multiple of 8, ``block_d`` of 128); no reshapes or
+transposes happen inside the kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .plane_scores import effective_blocks
+
+
+def _kernel(p_ref, w_ref, v_ref, acc_ref, best_ref, idx_ref, *, nj, neg):
+    s = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _reset():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    acc_ref[...] += p_ref[0] @ w_ref[...]
+
+    @pl.when((j == nj - 1) & (s == 0))
+    def _first_slot():
+        best_ref[...] = jnp.where(v_ref[0] != 0.0, acc_ref[...],
+                                  jnp.float32(neg))
+        idx_ref[...] = jnp.zeros(idx_ref.shape, idx_ref.dtype)
+
+    @pl.when((j == nj - 1) & (s > 0))
+    def _later_slot():
+        masked = jnp.where(v_ref[0] != 0.0, acc_ref[...], jnp.float32(neg))
+        upd = masked > best_ref[...]
+        best_ref[...] = jnp.where(upd, masked, best_ref[...])
+        idx_ref[...] = jnp.where(upd, s.astype(idx_ref.dtype), idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("neg", "block_e", "block_d",
+                                             "interpret"))
+def plane_select(planes: jnp.ndarray, w: jnp.ndarray, offsets: jnp.ndarray,
+                 valid: jnp.ndarray, *, neg: float = -1e30,
+                 block_e: int = 128, block_d: int = 512,
+                 interpret: bool = False):
+    """Fused masked score + per-block argmax over a plane cache.
+
+    planes: (n, cap, d) float32; w: (d,); offsets, valid: (n, cap).
+    Returns ``(best (n,) float32, idx (n,) int32)``; blocks with no valid
+    slot score ``neg`` with ``idx`` 0.  ``n`` and ``d`` are padded to the
+    tile grid internally; ``cap`` is walked as a grid dimension.
+    """
+    n, cap, d = planes.shape
+    d_aug = d + 1  # offsets fold in as one extra feature against w=1
+    block_e, block_d = effective_blocks(n, d_aug, block_e, block_d)
+    n_pad = -n % block_e
+    d_pad = -d_aug % block_d
+
+    aug = jnp.concatenate([planes, offsets[..., None].astype(planes.dtype)],
+                          axis=-1)
+    # Slot-major (cap, n, d+1): the grid walks slots with the best/idx
+    # output tiles resident, so no (n, cap) score matrix is materialized.
+    aug = jnp.pad(aug.transpose(1, 0, 2), ((0, 0), (0, n_pad), (0, d_pad)))
+    wv = jnp.pad(jnp.concatenate([w, jnp.ones((1,), w.dtype)]),
+                 (0, d_pad)).reshape(-1, 1)
+    vm = jnp.pad(valid.T.astype(jnp.float32), ((0, 0), (0, n_pad)))[..., None]
+
+    nj = aug.shape[2] // block_d
+    grid = (aug.shape[1] // block_e, cap, nj)
+    _, best, idx = pl.pallas_call(
+        functools.partial(_kernel, nj=nj, neg=neg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_e, block_d), lambda i, s, j: (s, i, j)),
+            pl.BlockSpec((block_d, 1), lambda i, s, j: (j, 0)),
+            pl.BlockSpec((1, block_e, 1), lambda i, s, j: (s, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, 1), lambda i, s, j: (i, 0)),  # scratch
+            pl.BlockSpec((block_e, 1), lambda i, s, j: (i, 0)),
+            pl.BlockSpec((block_e, 1), lambda i, s, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((aug.shape[1], 1), jnp.float32),
+            jax.ShapeDtypeStruct((aug.shape[1], 1), jnp.float32),
+            jax.ShapeDtypeStruct((aug.shape[1], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(aug, wv, vm)
+    return best[:n, 0], idx[:n, 0]

@@ -14,6 +14,25 @@ def plane_scores_ref(planes: jnp.ndarray, w: jnp.ndarray,
     return planes @ w + offsets
 
 
+def plane_select_ref(planes: jnp.ndarray, w: jnp.ndarray,
+                     offsets: jnp.ndarray, valid: jnp.ndarray,
+                     neg: float = -1e30):
+    """Fused score-and-select: planes (n, cap, d), offsets/valid (n, cap).
+
+    Returns ``(best (n,), idx (n,) int32)``.  The scores are computed
+    through the same flattened ``(n*cap, d)`` matvec as the two-step
+    ``plane_scores_ref`` + argmax path, so on backends that dispatch to
+    this reference the fused call is bitwise identical to the path it
+    replaced.
+    """
+    n, cap, d = planes.shape
+    scores = (planes.reshape(n * cap, d) @ w
+              + offsets.reshape(-1)).reshape(n, cap)
+    masked = jnp.where(valid, scores, jnp.float32(neg))
+    return (jnp.max(masked, axis=1),
+            jnp.argmax(masked, axis=1).astype(jnp.int32))
+
+
 def gram_ref(planes: jnp.ndarray) -> jnp.ndarray:
     return planes @ planes.T
 

@@ -10,15 +10,19 @@ everything that is O(d):
   state                  shape                   placement
   =====================  ======================  =======================
   ``inner.phi_i``        ``(n, d+1)``            ``P('data', None)``
-  ``ws.planes``          ``(n, cap, d+1)``       ``P('data', None, None)``
-  ``ws.valid / last_*``  ``(n, cap)``            ``P('data', None)``
+  ``cache.planes``       ``(n, cap, d+1)``       ``P('data', None, None)``
+  ``cache.valid/last_*`` ``(n, cap)``            ``P('data', None)``
+  ``cache.gram``         ``(n, cap, cap)``       ``P('data', None, None)``
   ``inner.phi`` / ``w``  ``(d+1,)``              replicated
   ``avg.*``, counters    ``(d+1,)`` / scalars    replicated
   =====================  ======================  =======================
 
-Because ``n`` is a multiple of the shard count, the flattened
-``(n*cap, d)`` plane-cache view the ``kernels.ops.plane_scores``
-dispatcher consumes stays shard-aligned: each device scores its own
+The cache specs come from ``repro.cache.partition_specs`` driven by a
+declarative ``CacheLayout`` (``cache.gram`` is present under
+``CacheLayout(gram=True)`` — the Sec-3.5 engines).  Because ``n`` is a
+multiple of the shard count, the flattened ``(n*cap, d)`` plane-cache
+view the ``kernels.ops.plane_scores`` dispatcher consumes stays
+shard-aligned: each device scores its own
 ``(n_local*cap, d)`` slice with a purely local kernel launch
 (:func:`repro.kernels.ops.plane_scores_masked`), never a gather.
 
@@ -47,8 +51,9 @@ for the whole epoch: for each chunk of ``tau`` sampled blocks it gathers
 the examples, runs the max-oracles **in parallel at the shared stale
 ``w``** under ``shard_map`` (``tau/S`` oracles per shard, zero
 communication), scores every sampled block's cached fallback in one
-batched ``workset.approx_oracle_all`` call, and folds the ``done``-masked
-planes in sequentially with exact line search.  The host dispatches the
+batched ``repro.cache.approx_oracle_all`` call (the fused
+score-and-select kernel), and folds the ``done``-masked planes in
+sequentially with exact line search.  The host dispatches the
 epoch and syncs **at most once per outer iteration** (to read telemetry);
 :class:`~repro.core.selection.SyncLedger` counts both syncs and
 collectives so tests and benchmarks can assert the contract.
@@ -57,11 +62,15 @@ collectives so tests and benchmarks can assert the contract.
 eviction, on-device slope-clock seeding, the tau-nice epoch, and the
 approximate batch — into **one** program (a single dispatch).  It is the
 engine behind the ``mpbcfw-shard`` / ``mpbcfw-shard-avg`` /
-``mpbcfw-shard-tau`` entries of the :mod:`repro.api` engine registry
+``mpbcfw-shard-tau`` / ``mpbcfw-shard-gram`` entries of the
+:mod:`repro.api` engine registry
 (``RunConfig.mesh`` / ``RunConfig.tau``, driven by
 :class:`repro.api.Solver` through
 :class:`repro.api.engines.ShardDriverEngine`); on a 1-device mesh the
-solver trace is bit-for-bit equal to single-device ``mpbcfw``.
+solver trace is bit-for-bit equal to single-device ``mpbcfw`` (and
+``mpbcfw-shard-gram`` to ``mpbcfw-gram`` — the gram blocks ride inside
+the sharded ``PlaneCache``, so the Sec-3.5 variant needed no new
+collectives).
 
 This layer is the prerequisite for multi-host MP-BCFW: all cross-device
 traffic is already explicit (one psum per approximate pass, oracle

@@ -23,13 +23,14 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core import distributed, mpbcfw, workset as ws_ops
+from .. import cache as plane_cache
+from ..cache import CacheLayout, PlaneCache
+from ..core import distributed, gram as gram_ops, mpbcfw
 from ..core.bcfw import line_search_gamma
 from ..core.mpbcfw import MPState
 from ..core.selection import SyncLedger
 from ..core.ssvm import dual_value, weights_of
-from ..core.types import (ApproxBatchStats, SlopeClock, SSVMProblem,
-                          WorkSet)
+from ..core.types import ApproxBatchStats, SlopeClock, SSVMProblem
 from . import layout
 from .telemetry import CollectiveTrace
 
@@ -60,11 +61,14 @@ class ShardEngine:
     """
 
     def __init__(self, problem: SSVMProblem, mesh: Mesh, *, lam: float,
-                 axis: str = "data"):
+                 axis: str = "data", use_gram: bool = False,
+                 gram_steps: int = 10):
         self.problem = problem
         self.mesh = mesh
         self.lam = float(lam)
         self.axis = axis
+        self.use_gram = bool(use_gram)
+        self.gram_steps = int(gram_steps)
         self.n_shards = layout.validate_layout(problem.n, mesh, axis)
         self.n_local = problem.n // self.n_shards
         self.ledger = SyncLedger()
@@ -79,7 +83,9 @@ class ShardEngine:
     # -- state management ---------------------------------------------------
 
     def init_state(self, cap: int) -> MPState:
-        return self.place(mpbcfw.init_mp_state(self.problem, cap))
+        return self.place(mpbcfw.init_mp_state(
+            self.problem,
+            CacheLayout(cap=cap, gram=self.use_gram, axis=self.axis)))
 
     def place(self, mp: MPState) -> MPState:
         return layout.place_mp_state(mp, self.mesh, self.axis)
@@ -119,6 +125,7 @@ class ShardEngine:
         mesh, axis, lam = self.mesh, self.axis, self.lam
         S, n_local = self.n_shards, self.n_local
         n = self.problem.n
+        use_gram, steps = self.use_gram, self.gram_steps
         trace = self.collectives
 
         def local_prog(mp: MPState, perms, clock: SlopeClock):
@@ -128,13 +135,17 @@ class ShardEngine:
             trace.begin("multi_approx")
             lo = jax.lax.axis_index(axis) * n_local
             f_entry = dual_value(mp.inner.phi, lam)
-            local_planes = jnp.sum(mp.ws.valid).astype(jnp.int32)
+            local_planes = jnp.sum(mp.cache.valid).astype(jnp.int32)
             total_planes = trace.psum(local_planes, axis, tag="setup")
             cost = (clock.plane_cost
                     * jnp.maximum(total_planes, 1).astype(jnp.float32))
             # Approximate passes never insert/evict planes: the cache
-            # tensors are loop constants, only last_active is carried.
-            planes_c, valid_c = mp.ws.planes, mp.ws.valid
+            # tensors (incl. the local Gram blocks in the Sec-3.5
+            # configuration — they shard with the blocks, which is why
+            # this engine can run the gram variant at all) are loop
+            # constants; only last_active is carried.
+            planes_c, valid_c = mp.cache.planes, mp.cache.valid
+            gram_c = mp.cache.gram
 
             def step(carry, perm):
                 phi, phi_i, last_active, bar, k = carry
@@ -143,21 +154,38 @@ class ShardEngine:
 
                 def body(c, i):
                     phi_run, phi_i, last_active, bar, k = c
-                    w = weights_of(phi_run, lam)
-                    view = WorkSet(planes=planes_c, valid=valid_c,
-                                   last_active=last_active)
-                    plane, slot, _ = ws_ops.approx_oracle(view, i, w)
                     phi_i_old = phi_i[i]
-                    gamma = line_search_gamma(phi_run, phi_i_old, plane, lam)
-                    phi_i_new = (1.0 - gamma) * phi_i_old + gamma * plane
-                    phi_run = phi_run + (phi_i_new - phi_i_old)
+                    # Local view over the loop-constant cache tensors:
+                    # every mutation goes through the repro.cache API,
+                    # and only the mutated last_active is carried.
+                    view = PlaneCache(planes=planes_c, valid=valid_c,
+                                      last_active=last_active)
+                    if use_gram:
+                        # Sec-3.5 multi-step scheme on the local gram
+                        # block: `steps` O(cap) inner updates, same body
+                        # as the single-device gram pass.
+                        phi_i_new, phi_run, won = \
+                            gram_ops.multi_step_block_update(
+                                planes_c[i], valid_c[i], gram_c[i],
+                                phi_run, phi_i_old, lam, steps)
+                        last_active = plane_cache.mark_active_where(
+                            view, i, won, mp.outer_it).last_active
+                    else:
+                        w = weights_of(phi_run, lam)
+                        plane, slot, _ = plane_cache.approx_oracle(view, i,
+                                                                   w)
+                        gamma = line_search_gamma(phi_run, phi_i_old,
+                                                  plane, lam)
+                        phi_i_new = (1.0 - gamma) * phi_i_old + gamma * plane
+                        phi_run = phi_run + (phi_i_new - phi_i_old)
+                        last_active = plane_cache.mark_active(
+                            view, i, slot, mp.outer_it).last_active
                     phi_i = phi_i.at[i].set(phi_i_new)
-                    last_active = last_active.at[i, slot].set(mp.outer_it)
                     kf = k.astype(jnp.float32)
                     bar = (kf / (kf + 2.0)) * bar + (2.0 / (kf + 2.0)) * phi_run
-                    # k counts *global* approximate steps: each local step
-                    # runs concurrently with S-1 peers, so advance by S —
-                    # after a pass k has moved by n, matching the stored
+                    # k counts *global* block visits: each local step runs
+                    # concurrently with S-1 peers, so advance by S — after
+                    # a pass k has moved by n, matching the stored
                     # k_approx += n below (and the sequential schedule on
                     # one shard).
                     return (phi_run, phi_i, last_active, bar, k + S), None
@@ -194,24 +222,30 @@ class ShardEngine:
                 return ((phi_new, phi_i, last_active, bar_new, k),
                         dual_value(phi_new, lam))
 
-            carry0 = (mp.inner.phi, mp.inner.phi_i, mp.ws.last_active,
+            carry0 = (mp.inner.phi, mp.inner.phi_i, mp.cache.last_active,
                       mp.avg.bar_approx, mp.avg.k_approx)
             carry, t_end, stats = mpbcfw.slope_batched_loop(
                 carry0, perms, clock, step=step, f_entry=f_entry,
                 cost=cost, planes_per_pass=total_planes, run_all=run_all)
             trace.commit()
             phi, phi_i, last_active, bar_a, _ = carry
-            done_steps = stats.passes_run * n
+            # Block visits per executed pass is n in both configurations;
+            # each visit is `steps` approximate oracle calls under the
+            # gram scheme, 1 otherwise (matching the single-device
+            # accounting: n_approx counts calls, k_approx counts the
+            # per-visit averaging updates).
+            done_blocks = stats.passes_run * n
             inner = mp.inner._replace(
                 phi=phi, phi_i=phi_i,
-                n_approx=mp.inner.n_approx + done_steps)
+                n_approx=mp.inner.n_approx
+                + done_blocks * (steps if use_gram else 1))
             avg = mp.avg._replace(bar_approx=bar_a,
-                                  k_approx=mp.avg.k_approx + done_steps)
-            ws = mp.ws._replace(last_active=last_active)
-            return (mp._replace(inner=inner, ws=ws, avg=avg),
+                                  k_approx=mp.avg.k_approx + done_blocks)
+            cache = mp.cache._replace(last_active=last_active)
+            return (mp._replace(inner=inner, cache=cache, avg=avg),
                     clock._replace(t=t_end), stats)
 
-        mp_specs = layout.mp_state_specs(self.axis)
+        mp_specs = layout.mp_state_specs(self.axis, gram=self.use_gram)
         clock_specs = SlopeClock(t0=P(), f0=P(), t=P(), plane_cost=P())
         stats_specs = ApproxBatchStats(
             duals=P(None), times=P(None), planes=P(None), ran=P(None),

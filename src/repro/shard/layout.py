@@ -1,19 +1,25 @@
 """Mesh-sharded placement of the MP-BCFW state (see package docstring).
 
 Blocks — and with them the per-block dual planes ``phi_i`` and the whole
-``(n, cap, d+1)`` plane cache — are partitioned over one named mesh axis;
-the O(d) summaries (``phi``, averaging tracks, counters) are replicated.
-``mp_state_specs`` is the single source of truth: the ``shard_map``
-in/out specs of the engine and the ``NamedSharding`` placement of
-:func:`place_mp_state` are the same tree.
+:class:`repro.cache.PlaneCache` (planes, validity, activity, and the
+Sec-3.5 Gram blocks when materialized) — are partitioned over one named
+mesh axis; the O(d) summaries (``phi``, averaging tracks, counters) are
+replicated.  The cache's spec tree comes from
+:func:`repro.cache.partition_specs` (driven by a declarative
+:class:`~repro.cache.CacheLayout`) — this module never hand-writes cache
+``PartitionSpec``\\ s.  ``mp_state_specs`` is the single source of truth:
+the ``shard_map`` in/out specs of the engine and the ``NamedSharding``
+placement of :func:`place_mp_state` are the same tree.
 """
 from __future__ import annotations
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import cache as plane_cache
+from ..cache import CacheLayout
 from ..core.mpbcfw import MPState
-from ..core.types import AveragingState, BCFWState, WorkSet
+from ..core.types import AveragingState, BCFWState
 
 
 def validate_layout(n: int, mesh: Mesh, axis: str = "data") -> int:
@@ -36,25 +42,35 @@ def validate_layout(n: int, mesh: Mesh, axis: str = "data") -> int:
     return n_shards
 
 
-def mp_state_specs(axis: str = "data") -> MPState:
-    """PartitionSpec pytree for an :class:`~repro.core.mpbcfw.MPState`."""
+def mp_state_specs(axis: str = "data", *, gram: bool = False) -> MPState:
+    """PartitionSpec pytree for an :class:`~repro.core.mpbcfw.MPState`.
+
+    ``gram`` selects the cache tree shape (Sec-3.5 Gram blocks present or
+    not) so the specs zip against a matching state.
+    """
     return MPState(
         inner=BCFWState(phi_i=P(axis, None), phi=P(None),
                         n_exact=P(), n_approx=P()),
-        ws=WorkSet(planes=P(axis, None, None), valid=P(axis, None),
-                   last_active=P(axis, None)),
+        cache=plane_cache.partition_specs(
+            CacheLayout(gram=gram, axis=axis)),
         avg=AveragingState(bar_exact=P(None), bar_approx=P(None),
                            k_exact=P(), k_approx=P()),
         outer_it=P(),
     )
 
 
-def mp_state_shardings(mesh: Mesh, axis: str = "data") -> MPState:
+def mp_state_shardings(mesh: Mesh, axis: str = "data", *,
+                       gram: bool = False) -> MPState:
     return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
-                                  mp_state_specs(axis))
+                                  mp_state_specs(axis, gram=gram))
 
 
 def place_mp_state(mp: MPState, mesh: Mesh, axis: str = "data") -> MPState:
-    """Commit an MPState to the mesh layout (blocks sharded, rest repl.)."""
+    """Commit an MPState to the mesh layout (blocks sharded, rest repl.).
+
+    The cache spec tree (gram present or not) is derived from the state
+    itself, so gram-carrying and plain states both place correctly.
+    """
     validate_layout(mp.inner.phi_i.shape[0], mesh, axis)
-    return jax.device_put(mp, mp_state_shardings(mesh, axis))
+    return jax.device_put(
+        mp, mp_state_shardings(mesh, axis, gram=mp.cache.gram is not None))

@@ -101,11 +101,34 @@ def test_unknown_algorithm_is_typed_error(multiclass_problem):
                RunConfig(lam=0.1, algo="does-not-exist"))
 
 
-def test_gram_plus_mesh_rejected_by_capabilities(multiclass_problem,
-                                                 data_mesh):
-    with pytest.raises(UnsupportedConfigError, match="no sharded twin"):
+def test_gram_plus_mesh_now_resolves_to_sharded_engine(multiclass_problem,
+                                                       data_mesh):
+    """Regression for the capability routing: mpbcfw-gram + mesh used to
+    raise the typed UnsupportedConfigError ("no sharded twin"); with the
+    gram blocks living inside the sharded PlaneCache it now resolves to
+    the sharded gram engine — while tau without a mesh keeps raising."""
+    from repro.api.engines import ShardDriverEngine
+
+    solver = Solver(multiclass_problem,
+                    RunConfig(lam=0.1, algo="mpbcfw-gram", mesh=data_mesh,
+                              cost_model=_cm()))
+    assert isinstance(solver.engine, ShardDriverEngine)
+    assert solver.engine.use_gram
+    assert solver.state.cache.gram is not None
+    # ... and without a mesh it stays the single-device fused engine
+    solver1 = Solver(multiclass_problem,
+                     RunConfig(lam=0.1, algo="mpbcfw-gram",
+                               cost_model=_cm()))
+    assert not isinstance(solver1.engine, ShardDriverEngine)
+    # ... with the mesh, tau flows through to the sharded gram engine
+    solver_tau = Solver(multiclass_problem,
+                        RunConfig(lam=0.1, algo="mpbcfw-gram",
+                                  mesh=data_mesh, tau=4, cost_model=_cm()))
+    assert solver_tau.engine.tau == 4
+    # tau still needs the mesh: the typed error is not gone
+    with pytest.raises(UnsupportedConfigError, match="tau"):
         Solver(multiclass_problem,
-               RunConfig(lam=0.1, algo="mpbcfw-gram", mesh=data_mesh,
+               RunConfig(lam=0.1, algo="mpbcfw-gram", tau=4,
                          cost_model=_cm()))
 
 
@@ -131,8 +154,11 @@ def test_mesh_on_single_device_engine_rejected(multiclass_problem,
 def test_capabilities_descriptors():
     caps = capabilities_of("mpbcfw-shard")
     assert caps.supports_mesh and caps.multipass and caps.uses_tau
-    assert not capabilities_of("mpbcfw-gram").supports_mesh
+    assert capabilities_of("mpbcfw-gram").supports_mesh  # routes to shard
     assert capabilities_of("mpbcfw-gram").supports_gram
+    shard_gram = capabilities_of("mpbcfw-shard-gram")
+    assert shard_gram.supports_mesh and shard_gram.supports_gram
+    assert shard_gram.uses_tau and shard_gram.multipass
     assert not capabilities_of("fw").needs_perm
     assert capabilities_of("bcfw-avg").supports_averaging
 
@@ -206,14 +232,18 @@ def test_wall_clock_anchors_at_first_iteration(multiclass_problem):
 # Checkpoint / resume determinism
 
 
-def test_checkpoint_resume_trace_bitwise(tmp_path, multiclass_problem):
+@pytest.mark.parametrize("algo", ["mpbcfw", "mpbcfw-gram"])
+def test_checkpoint_resume_trace_bitwise(tmp_path, multiclass_problem,
+                                         algo):
     """Solver run k iterations, checkpointed, resumed == uninterrupted,
-    bit for bit under CostModel (state, RNG stream, virtual clock)."""
+    bit for bit under CostModel (state, RNG stream, virtual clock).
+    The gram engine covers the cache-resident Gram blocks riding in the
+    checkpointed PlaneCache (no side-channel engine state)."""
     prob = multiclass_problem
     lam = 1.0 / prob.n
 
     def cfg():
-        return RunConfig(lam=lam, algo="mpbcfw", max_iters=6, cap=8,
+        return RunConfig(lam=lam, algo=algo, max_iters=6, cap=8,
                          seed=3, cost_model=CostModel(plane_cost=1e-3))
 
     full = Solver(prob, cfg()).run()
@@ -308,8 +338,8 @@ def test_device_slope_rule_matches_host_tracker(multiclass_problem):
                                       for _ in range(B)]))
         clock = mpbcfw.make_slope_clock(0.0, 0.0, cm.oracle_cost * n,
                                         cm.plane_cost)
-        mp, _, clock, st = mpbcfw.jit_outer_iteration(
-            prob, mp, None, perm, perms, clock, lam=lam, ttl=10)
+        mp, clock, st = mpbcfw.jit_outer_iteration(
+            prob, mp, perm, perms, clock, lam=lam, ttl=10)
         st = jax.device_get(st)
         k = int(st.passes_run)
         assert k >= 1

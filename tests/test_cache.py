@@ -1,0 +1,303 @@
+"""repro.cache: the plane-cache subsystem as testable properties.
+
+Seeded parametrized property tests drive the device cache and a
+pure-Python host reference cache through the same operation sequences
+and assert they agree: insert-prefers-empty-slot, LRU eviction order,
+TTL invalidation, gather/flat_view round-trips, fused score+select vs
+the two-step path, gram row maintenance, and the declarative
+CacheLayout -> PartitionSpec mapping.  Tier-1 (no mesh marker).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import cache as pcache
+from repro.cache import CacheLayout, PlaneCache, layout_of, partition_specs
+
+PROPERTY_SEEDS = [int(s) for s in
+                  np.random.RandomState(99).randint(0, 2 ** 31 - 1, 8)]
+
+
+class HostCache:
+    """Pure-Python reference: per-block slot lists with the documented
+    policy — insert prefers the first empty slot, else evicts the valid
+    slot with the smallest last_active (lowest index on ties); TTL
+    invalidates without clearing the plane payload."""
+
+    def __init__(self, n, cap, d):
+        self.n, self.cap, self.d = n, cap, d
+        self.planes = np.zeros((n, cap, d + 1), np.float32)
+        self.valid = np.zeros((n, cap), bool)
+        self.last_active = np.full((n, cap), -1, np.int64)
+
+    def _slot(self, i):
+        empties = np.flatnonzero(~self.valid[i])
+        if empties.size:
+            return int(empties[0])
+        return int(np.argmin(self.last_active[i]))  # first min on ties
+
+    def insert(self, i, plane, it):
+        s = self._slot(i)
+        self.planes[i, s] = plane
+        self.valid[i, s] = True
+        self.last_active[i, s] = it
+        return s
+
+    def mark_active(self, i, s, it):
+        self.last_active[i, s] = it
+
+    def evict_stale(self, it, ttl):
+        self.valid &= (it - self.last_active) <= ttl
+
+    def scores(self, w):
+        s = self.planes[:, :, :-1] @ w + self.planes[:, :, -1]
+        return np.where(self.valid, s, -np.inf)
+
+
+def _random_ops(seed, n=5, cap=3, d=6, steps=40):
+    """Drive both caches through one random op sequence; yield both."""
+    r = np.random.RandomState(seed)
+    dev = pcache.init(CacheLayout(cap=cap), n, d)
+    host = HostCache(n, cap, d)
+    for t in range(steps):
+        op = r.rand()
+        i = int(r.randint(n))
+        if op < 0.6:
+            plane = r.randn(d + 1).astype(np.float32)
+            dev = pcache.insert(dev, jnp.asarray(i), jnp.asarray(plane),
+                                jnp.asarray(t))
+            host.insert(i, plane, t)
+        elif op < 0.8 and host.valid[i].any():
+            s = int(r.choice(np.flatnonzero(host.valid[i])))
+            dev = pcache.mark_active(dev, jnp.asarray(i), jnp.asarray(s),
+                                    jnp.asarray(t))
+            host.mark_active(i, s, t)
+        else:
+            ttl = int(r.randint(1, 15))
+            dev = pcache.evict_stale(dev, jnp.asarray(t), ttl)
+            host.evict_stale(t, ttl)
+    return dev, host
+
+
+@pytest.mark.parametrize("seed", PROPERTY_SEEDS)
+def test_cache_matches_host_reference(seed):
+    """Random insert/mark_active/evict_stale sequences: the device cache
+    and the host reference agree on occupancy, activity, payloads and
+    per-block sizes."""
+    dev, host = _random_ops(seed)
+    np.testing.assert_array_equal(np.asarray(dev.valid), host.valid)
+    np.testing.assert_array_equal(
+        np.asarray(dev.last_active)[host.valid],
+        host.last_active[host.valid])
+    np.testing.assert_array_equal(
+        np.asarray(dev.planes)[host.valid], host.planes[host.valid])
+    np.testing.assert_array_equal(np.asarray(pcache.sizes(dev)),
+                                  host.valid.sum(axis=1))
+
+
+@pytest.mark.parametrize("seed", PROPERTY_SEEDS[:4])
+def test_insert_prefers_empty_slot(seed):
+    r = np.random.RandomState(seed)
+    cap = 4
+    dev = pcache.init(CacheLayout(cap=cap), 1, 3)
+    host = HostCache(1, cap, 3)
+    # fill two slots, invalidate the first, insert again: slot 0 reused
+    for t in range(2):
+        p = r.randn(4).astype(np.float32)
+        dev = pcache.insert(dev, jnp.asarray(0), jnp.asarray(p),
+                            jnp.asarray(t))
+        host.insert(0, p, t)
+    dev = dev._replace(valid=dev.valid.at[0, 0].set(False))
+    host.valid[0, 0] = False
+    p = r.randn(4).astype(np.float32)
+    dev = pcache.insert(dev, jnp.asarray(0), jnp.asarray(p), jnp.asarray(9))
+    s = host.insert(0, p, 9)
+    assert s == 0                      # the empty slot, not an eviction
+    np.testing.assert_array_equal(np.asarray(dev.valid), host.valid)
+    np.testing.assert_array_equal(np.asarray(dev.planes[0, 0]), p)
+
+
+@pytest.mark.parametrize("seed", PROPERTY_SEEDS[:4])
+def test_lru_eviction_order(seed):
+    """Overfilling a block evicts in exact least-recently-active order."""
+    r = np.random.RandomState(seed)
+    cap, d = 3, 4
+    dev = pcache.init(CacheLayout(cap=cap), 1, d)
+    host = HostCache(1, cap, d)
+    planes = [r.randn(d + 1).astype(np.float32) for _ in range(cap + 3)]
+    # staggered activity times make the LRU order unambiguous
+    times = list(r.permutation(100)[:cap + 3])
+    for t_idx, (p, t) in enumerate(zip(planes, times)):
+        dev = pcache.insert(dev, jnp.asarray(0), jnp.asarray(p),
+                            jnp.asarray(int(t)))
+        host.insert(0, p, int(t))
+        np.testing.assert_array_equal(np.asarray(dev.planes[0]),
+                                      host.planes[0])
+        np.testing.assert_array_equal(np.asarray(dev.last_active[0]),
+                                      host.last_active[0])
+
+
+@pytest.mark.parametrize("seed", PROPERTY_SEEDS[:4])
+def test_ttl_invalidation(seed):
+    r = np.random.RandomState(seed)
+    dev, host = _random_ops(seed, steps=20)
+    it = 25
+    for ttl in (1, 5, 50):
+        d2 = pcache.evict_stale(dev, jnp.asarray(it), ttl)
+        expect = host.valid & ((it - host.last_active) <= ttl)
+        np.testing.assert_array_equal(np.asarray(d2.valid), expect)
+    del r
+
+
+@pytest.mark.parametrize("seed", PROPERTY_SEEDS[:4])
+def test_gather_flat_view_round_trip(seed):
+    """gather keeps rows verbatim; flat_view is the exact (n*cap, ...)
+    reshape of planes/valid — gather-then-flatten == flatten-then-index."""
+    dev, host = _random_ops(seed)
+    r = np.random.RandomState(seed + 1)
+    ids = r.permutation(host.n)[:3]
+    sub = pcache.gather(dev, jnp.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(sub.planes),
+                                  host.planes[ids])
+    np.testing.assert_array_equal(np.asarray(sub.valid), host.valid[ids])
+    P_flat, b, valid = pcache.flat_view(dev)
+    assert P_flat.shape == (host.n * host.cap, host.d)
+    np.testing.assert_array_equal(
+        np.asarray(P_flat).reshape(host.n, host.cap, host.d),
+        host.planes[:, :, :-1])
+    np.testing.assert_array_equal(np.asarray(b).reshape(host.n, host.cap),
+                                  host.planes[:, :, -1])
+    np.testing.assert_array_equal(
+        np.asarray(valid).reshape(host.n, host.cap), host.valid)
+    # flat_view of the gathered sub-cache == row-sliced flat_view
+    Pg, bg, vg = pcache.flat_view(sub)
+    np.testing.assert_array_equal(
+        np.asarray(Pg),
+        np.asarray(P_flat).reshape(host.n, host.cap, -1)[ids].reshape(
+            len(ids) * host.cap, -1))
+
+
+@pytest.mark.parametrize("seed", PROPERTY_SEEDS[:4])
+def test_fused_select_matches_two_step(seed):
+    """approx_oracle_all (fused score+select) == score_all + argmax +
+    gather — same slots, scores and planes, empty blocks -> zero plane."""
+    dev, host = _random_ops(seed)
+    r = np.random.RandomState(seed + 7)
+    w = jnp.asarray(r.randn(host.d).astype(np.float32))
+    planes, slots, scores = pcache.approx_oracle_all(dev, w)
+    two_step = np.asarray(pcache.score_all(dev, w))
+    ref_scores = host.scores(np.asarray(w))
+    any_valid = host.valid.any(axis=1)
+    np.testing.assert_array_equal(np.asarray(slots),
+                                  np.argmax(two_step, axis=1))
+    for i in range(host.n):
+        if any_valid[i]:
+            assert int(slots[i]) == int(np.argmax(ref_scores[i]))
+            np.testing.assert_allclose(float(scores[i]),
+                                       ref_scores[i].max(), rtol=1e-5)
+            np.testing.assert_array_equal(np.asarray(planes[i]),
+                                          host.planes[i, int(slots[i])])
+        else:
+            assert float(scores[i]) == 0.0
+            np.testing.assert_array_equal(np.asarray(planes[i]), 0.0)
+
+
+def test_insert_refreshes_gram_rows():
+    """A gram-carrying cache maintains G[i,a,b] = <phi_a*, phi_b*> over
+    the *valid* slots under arbitrary insert sequences (rows refreshed on
+    insertion, symmetric, diagonal = squared norms)."""
+    r = np.random.RandomState(0)
+    n, cap, d = 3, 3, 5
+    dev = pcache.init(CacheLayout(cap=cap, gram=True), n, d)
+    assert dev.gram.shape == (n, cap, cap)
+    for t in range(8):
+        i = int(r.randint(n))
+        plane = r.randn(d + 1).astype(np.float32)
+        dev = pcache.insert(dev, jnp.asarray(i), jnp.asarray(plane),
+                            jnp.asarray(t))
+    g = np.asarray(dev.gram)
+    stars = np.asarray(dev.planes)[:, :, :-1]
+    valid = np.asarray(dev.valid)
+    for i in range(n):
+        expect = stars[i] @ stars[i].T
+        occupied = np.outer(valid[i], valid[i])
+        np.testing.assert_allclose(g[i][occupied], expect[occupied],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(g[i], g[i].T, atol=1e-6)
+
+
+def test_cache_layout_partition_specs():
+    """The declarative CacheLayout drives the spec tree: block axis on
+    every leaf, gram leaf present exactly when materialized."""
+    specs = partition_specs(CacheLayout(gram=False, axis="data"))
+    assert specs.planes == P("data", None, None)
+    assert specs.valid == P("data", None)
+    assert specs.last_active == P("data", None)
+    assert specs.gram is None
+    specs_g = partition_specs(CacheLayout(gram=True, axis="data"))
+    assert specs_g.gram == P("data", None, None)
+    with pytest.raises(ValueError, match="axis"):
+        partition_specs(CacheLayout(gram=True, axis=None))
+    # layout_of round-trips a built cache
+    dev = pcache.init(CacheLayout(cap=7, gram=True), 2, 3)
+    lo = layout_of(dev, axis="data")
+    assert lo.cap == 7 and lo.gram and lo.axis == "data"
+
+
+def test_deprecated_workset_shim_warns_and_aliases():
+    """repro.core.workset stays importable for one release: it warns on
+    load and every name is a thin alias of the repro.cache API."""
+    import importlib
+    import warnings
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ws = importlib.reload(importlib.import_module("repro.core.workset"))
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    assert ws.add_plane is pcache.insert
+    assert ws.gather_blocks is pcache.gather
+    assert ws.approx_oracle_all is pcache.approx_oracle_all
+    assert ws.score_all is pcache.score_all
+    assert ws.WorkSet is PlaneCache
+    assert float(ws.NEG_INF) == float(pcache.NEG_INF)
+    legacy = ws.init_workset(2, 3, 4)
+    assert isinstance(legacy, PlaneCache) and legacy.gram is None
+
+
+def test_deprecated_gram_cache_shim(multiclass_problem):
+    """The legacy GramCache entry points still work (warning included)
+    and agree with the cache-resident gram path."""
+    from repro.core import gram, mpbcfw
+
+    prob = multiclass_problem
+    lam = 1.0 / prob.n
+    rng = np.random.RandomState(2)
+    perm = jnp.asarray(rng.permutation(prob.n))
+    with pytest.deprecated_call():
+        gc = gram.init_gram(prob.n, 8)
+    mp = mpbcfw.init_mp_state(prob, cap=8)
+    with pytest.deprecated_call():
+        mp_l, gc = gram.jit_exact_pass_gram(prob, mp, gc, perm, lam=lam)
+    mp_c = mpbcfw.init_mp_state(prob, CacheLayout(cap=8, gram=True))
+    mp_c = mpbcfw.jit_exact_pass(prob, mp_c, perm, lam=lam)
+    np.testing.assert_array_equal(np.asarray(gc.gram),
+                                  np.asarray(mp_c.cache.gram))
+    np.testing.assert_array_equal(np.asarray(mp_l.inner.phi),
+                                  np.asarray(mp_c.inner.phi))
+
+
+def test_invalid_score_sentinel_single_source():
+    """Satellite: NEG_INF and the kernels' masked-score default are the
+    same constant from one definition (no independent copies)."""
+    from repro.kernels import ops as kops
+
+    assert kops.INVALID_SCORE == -1e30
+    assert float(pcache.NEG_INF) == float(np.float32(kops.INVALID_SCORE))
+    # the masked dispatcher's default really uses it: an invalid slot
+    # scores exactly the (float32) sentinel
+    scores = kops.plane_scores_masked(
+        jnp.ones((1, 4)), jnp.ones((4,)), jnp.zeros((1,)),
+        jnp.zeros((1,), bool))
+    assert float(scores[0]) == float(pcache.NEG_INF)

@@ -11,7 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import averaging, bcfw, driver, gram, mpbcfw, workset
+from repro import cache as pcache
+from repro.cache import CacheLayout
+from repro.core import averaging, bcfw, driver, gram, mpbcfw
 from repro.core.selection import CostModel, IterationTracker
 from repro.core.ssvm import (batched_oracle, dual_value, duality_gap,
                              init_state, primal_value, weights_of)
@@ -94,53 +96,52 @@ def test_phi_stays_sum_of_blocks(multiclass_problem):
 
 
 # ---------------------------------------------------------------------------
-# Working sets
+# Working sets (the repro.cache plane-cache subsystem)
 
 
-def test_workset_lru_eviction():
-    ws = workset.init_workset(n=1, cap=2, d=3)
+def test_cache_lru_eviction():
+    ws = pcache.init(CacheLayout(cap=2), 1, 3)
     p1 = jnp.asarray([1.0, 0, 0, 0.1])
     p2 = jnp.asarray([0, 1.0, 0, 0.2])
     p3 = jnp.asarray([0, 0, 1.0, 0.3])
     i = jnp.asarray(0)
-    ws = workset.add_plane(ws, i, p1, jnp.asarray(1))
-    ws = workset.add_plane(ws, i, p2, jnp.asarray(2))
-    assert int(workset.sizes(ws)[0]) == 2
-    ws = workset.add_plane(ws, i, p3, jnp.asarray(3))  # evicts p1 (oldest)
-    assert int(workset.sizes(ws)[0]) == 2
+    ws = pcache.insert(ws, i, p1, jnp.asarray(1))
+    ws = pcache.insert(ws, i, p2, jnp.asarray(2))
+    assert int(pcache.sizes(ws)[0]) == 2
+    ws = pcache.insert(ws, i, p3, jnp.asarray(3))  # evicts p1 (oldest)
+    assert int(pcache.sizes(ws)[0]) == 2
     planes = np.asarray(ws.planes[0])
     assert not any(np.allclose(row, np.asarray(p1)) for row in planes)
 
 
-def test_workset_ttl_eviction():
-    ws = workset.init_workset(n=1, cap=4, d=3)
-    ws = workset.add_plane(ws, jnp.asarray(0), jnp.ones(4),
-                           jnp.asarray(0))
-    ws2 = workset.evict_stale(ws, jnp.asarray(5), ttl=10)
-    assert int(workset.sizes(ws2)[0]) == 1
-    ws3 = workset.evict_stale(ws, jnp.asarray(20), ttl=10)
-    assert int(workset.sizes(ws3)[0]) == 0
+def test_cache_ttl_eviction():
+    ws = pcache.init(CacheLayout(cap=4), 1, 3)
+    ws = pcache.insert(ws, jnp.asarray(0), jnp.ones(4), jnp.asarray(0))
+    ws2 = pcache.evict_stale(ws, jnp.asarray(5), ttl=10)
+    assert int(pcache.sizes(ws2)[0]) == 1
+    ws3 = pcache.evict_stale(ws, jnp.asarray(20), ttl=10)
+    assert int(pcache.sizes(ws3)[0]) == 0
 
 
 def test_approx_oracle_matches_naive():
     r = np.random.RandomState(0)
     d = 8
-    ws = workset.init_workset(n=1, cap=5, d=d)
+    ws = pcache.init(CacheLayout(cap=5), 1, d)
     for t in range(4):
-        ws = workset.add_plane(
+        ws = pcache.insert(
             ws, jnp.asarray(0),
             jnp.asarray(r.randn(d + 1).astype(np.float32)), jnp.asarray(t))
     w = jnp.asarray(r.randn(d).astype(np.float32))
-    plane, slot, score = workset.approx_oracle(ws, jnp.asarray(0), w)
+    plane, slot, score = pcache.approx_oracle(ws, jnp.asarray(0), w)
     scores = np.array(ws.planes[0, :, :d] @ w + ws.planes[0, :, d])
     scores[~np.asarray(ws.valid[0])] = -np.inf
     assert int(slot) == int(np.argmax(scores))
     np.testing.assert_allclose(float(score), scores.max(), rtol=1e-5)
 
 
-def test_empty_workset_returns_zero_plane():
-    ws = workset.init_workset(n=1, cap=3, d=4)
-    plane, slot, score = workset.approx_oracle(
+def test_empty_cache_returns_zero_plane():
+    ws = pcache.init(CacheLayout(cap=3), 1, 4)
+    plane, slot, score = pcache.approx_oracle(
         ws, jnp.asarray(0), jnp.ones(4))
     np.testing.assert_allclose(np.asarray(plane), 0.0)
     assert float(score) == 0.0
@@ -193,22 +194,21 @@ def test_gram_pass_equivalent_to_plain_updates(multiclass_problem):
     """Sec-3.5 scalar recurrences == materialized updates (same block)."""
     prob = multiclass_problem
     lam = 1.0 / prob.n
-    mp = mpbcfw.init_mp_state(prob, cap=8)
-    gc = gram.init_gram(prob.n, 8)
+    mp = mpbcfw.init_mp_state(prob, CacheLayout(cap=8, gram=True))
     r = np.random.RandomState(1)
     perm = jnp.asarray(r.permutation(prob.n))
-    mp, gc = gram.jit_exact_pass_gram(prob, mp, gc, perm, lam=lam)
+    mp = mpbcfw.jit_exact_pass(prob, mp, perm, lam=lam)
     i = jnp.asarray(3)
     # naive: repeated approximate updates with materialized planes
     inner_naive = mp.inner
     for _ in range(5):
         w = weights_of(inner_naive.phi, lam)
-        plane, slot, _ = workset.approx_oracle(mp.ws, i, w)
+        plane, slot, _ = pcache.approx_oracle(mp.cache, i, w)
         inner_naive, _ = bcfw.block_update(inner_naive, i, plane, lam)
-    # gram: scalar recurrences
+    # gram: scalar recurrences on the cache-resident Gram block
     phi_i, phi, won = gram.multi_step_block_update(
-        mp.ws.planes[i], mp.ws.valid[i], gc.gram[i], mp.inner.phi,
-        mp.inner.phi_i[i], lam, steps=5)
+        mp.cache.planes[i], mp.cache.valid[i], mp.cache.gram[i],
+        mp.inner.phi, mp.inner.phi_i[i], lam, steps=5)
     np.testing.assert_allclose(np.asarray(phi),
                                np.asarray(inner_naive.phi), atol=2e-4)
     np.testing.assert_allclose(np.asarray(phi_i),
@@ -251,10 +251,10 @@ def test_multi_approx_pass_matches_sequential(multiclass_problem):
     np.testing.assert_allclose(np.asarray(mp_b.inner.phi_i),
                                np.asarray(mp_s.inner.phi_i), atol=1e-6)
     assert int(mp_b.inner.n_approx) == int(mp_s.inner.n_approx)
-    assert (np.asarray(mp_b.ws.last_active)
-            == np.asarray(mp_s.ws.last_active)).all()
+    assert (np.asarray(mp_b.cache.last_active)
+            == np.asarray(mp_s.cache.last_active)).all()
     # the clock advanced by plane_cost * total_planes per pass
-    total = int(jnp.sum(workset.sizes(mp.ws)))
+    total = int(jnp.sum(pcache.sizes(mp.cache)))
     np.testing.assert_allclose(float(clock_out.t),
                                float(clock.t) + n_passes * 1e-3 * total,
                                rtol=1e-5)
@@ -285,8 +285,8 @@ def test_multi_approx_pass_early_exit(multiclass_problem):
     np.testing.assert_allclose(np.asarray(mp_b.inner.phi),
                                np.asarray(mp_s.inner.phi), atol=1e-6)
     assert int(mp_b.inner.n_approx) == int(mp_s.inner.n_approx)
-    assert (np.asarray(mp_b.ws.last_active)
-            == np.asarray(mp_s.ws.last_active)).all()
+    assert (np.asarray(mp_b.cache.last_active)
+            == np.asarray(mp_s.cache.last_active)).all()
 
 
 def test_multi_approx_pass_stop_matches_host_rule(multiclass_problem):
@@ -316,25 +316,25 @@ def test_multi_approx_pass_gram_variant(multiclass_problem):
     prob = multiclass_problem
     lam = 1.0 / prob.n
     rng = np.random.RandomState(3)
-    mp = mpbcfw.init_mp_state(prob, cap=8)
-    gc = gram.init_gram(prob.n, 8)
+    mp = mpbcfw.init_mp_state(prob, CacheLayout(cap=8, gram=True))
     mp = mpbcfw.begin_iteration(mp, ttl=10)
-    mp, gc = gram.jit_exact_pass_gram(
-        prob, mp, gc, jnp.asarray(rng.permutation(prob.n)), lam=lam)
+    mp = mpbcfw.jit_exact_pass(prob, mp,
+                               jnp.asarray(rng.permutation(prob.n)),
+                               lam=lam)
     perm = jnp.asarray(rng.permutation(prob.n))
     clock = mpbcfw.make_slope_clock(
         0.0, float(dual_value(mp.inner.phi, lam)), float(prob.n), 1e-3)
     mp_b, _, stats = mpbcfw.jit_multi_approx_pass(
-        prob, mp, perm[None], clock, lam=lam, gc=gc, steps=5, run_all=True)
-    inner, ws, avg = gram.jit_approx_pass_gram(
-        prob, mp.inner, mp.ws, gc, mp.avg, perm, mp.outer_it,
-        lam=lam, steps=5)
+        prob, mp, perm[None], clock, lam=lam, steps=5, run_all=True)
+    inner, cache_out, avg = gram.jit_approx_pass_gram(
+        mp.inner, mp.cache, mp.avg, perm, mp.outer_it, lam=lam, steps=5)
     np.testing.assert_allclose(np.asarray(mp_b.inner.phi),
                                np.asarray(inner.phi), atol=1e-5)
     assert int(mp_b.inner.n_approx) == int(inner.n_approx)
 
 
-@pytest.mark.parametrize("algo", ["mpbcfw", "mpbcfw-avg", "mpbcfw-gram"])
+@pytest.mark.parametrize("algo", ["mpbcfw", "mpbcfw-avg", "mpbcfw-gram",
+                                  "mpbcfw-shard-gram"])
 def test_driver_one_dispatch_one_sync_per_iteration(multiclass_problem,
                                                     algo):
     """SyncLedger contract: the fused control loop performs exactly one
@@ -378,8 +378,8 @@ def test_outer_iteration_matches_two_program_sequence(multiclass_problem):
             prob, mp_l, perms, clock_l, lam=lam)
         # fused: one program, f0 seeded from the on-device dual
         clock_f = mpbcfw.make_slope_clock(0.0, 0.0, float(prob.n), 1e-3)
-        mp_f, _, clock_f, st_f = mpbcfw.jit_outer_iteration(
-            prob, mp_f, None, perm, perms, clock_f, lam=lam, ttl=10)
+        mp_f, clock_f, st_f = mpbcfw.jit_outer_iteration(
+            prob, mp_f, perm, perms, clock_f, lam=lam, ttl=10)
         for a, b in zip(jax.tree_util.tree_leaves(mp_l),
                         jax.tree_util.tree_leaves(mp_f)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -389,20 +389,20 @@ def test_outer_iteration_matches_two_program_sequence(multiclass_problem):
         np.testing.assert_array_equal(np.asarray(st_l.planes),
                                       np.asarray(st_f.planes))
         assert float(clock_l.t) == float(clock_f.t)
-        assert int(st_f.ws_total) == int(jnp.sum(workset.sizes(mp_f.ws)))
+        assert int(st_f.ws_total) == int(jnp.sum(pcache.sizes(mp_f.cache)))
 
 
 def test_outer_iteration_gram_matches_two_program_sequence(
         multiclass_problem):
     """The Sec-3.5 Gram variant is folded into the same fused program:
-    == jit_exact_pass_gram + jit_multi_approx_pass(gc=...), bitwise."""
+    == jit_exact_pass (gram-aware insert) + jit_multi_approx_pass on a
+    gram-carrying cache, bitwise."""
     prob = multiclass_problem
     lam = 1.0 / prob.n
     rng = np.random.RandomState(11)
-    mp_l = mpbcfw.init_mp_state(prob, cap=8)
-    gc_l = gram.init_gram(prob.n, 8)
-    mp_f = mpbcfw.init_mp_state(prob, cap=8)
-    gc_f = gram.init_gram(prob.n, 8)
+    layout = CacheLayout(cap=8, gram=True)
+    mp_l = mpbcfw.init_mp_state(prob, layout)
+    mp_f = mpbcfw.init_mp_state(prob, layout)
     for _ in range(2):
         perm = jnp.asarray(rng.permutation(prob.n))
         perms = jnp.asarray(
@@ -410,16 +410,14 @@ def test_outer_iteration_gram_matches_two_program_sequence(
         f0 = float(dual_value(mp_l.inner.phi, lam))
         clock_l = mpbcfw.make_slope_clock(0.0, f0, float(prob.n), 1e-3)
         mp_l = mpbcfw.begin_iteration(mp_l, 10)
-        mp_l, gc_l = gram.jit_exact_pass_gram(prob, mp_l, gc_l, perm,
-                                              lam=lam)
+        mp_l = mpbcfw.jit_exact_pass(prob, mp_l, perm, lam=lam)
         mp_l, clock_l, st_l = mpbcfw.jit_multi_approx_pass(
-            prob, mp_l, perms, clock_l, lam=lam, gc=gc_l, steps=5)
+            prob, mp_l, perms, clock_l, lam=lam, steps=5)
         clock_f = mpbcfw.make_slope_clock(0.0, 0.0, float(prob.n), 1e-3)
-        mp_f, gc_f, clock_f, st_f = mpbcfw.jit_outer_iteration(
-            prob, mp_f, gc_f, perm, perms, clock_f, lam=lam, ttl=10,
-            steps=5)
-        for a, b in zip(jax.tree_util.tree_leaves((mp_l, gc_l)),
-                        jax.tree_util.tree_leaves((mp_f, gc_f))):
+        mp_f, clock_f, st_f = mpbcfw.jit_outer_iteration(
+            prob, mp_f, perm, perms, clock_f, lam=lam, ttl=10, steps=5)
+        for a, b in zip(jax.tree_util.tree_leaves(mp_l),
+                        jax.tree_util.tree_leaves(mp_f)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert int(st_l.passes_run) == int(st_f.passes_run)
         np.testing.assert_array_equal(np.asarray(st_l.duals),
@@ -492,15 +490,16 @@ def test_wall_clock_excludes_evaluation_time(multiclass_problem,
     assert all(b >= a for a, b in zip(ts, ts[1:]))
 
 
-def test_workset_batched_scoring_matches_per_block(multiclass_problem):
-    """approx_oracle_all (flat kernel layout) == per-block approx_oracle."""
+def test_cache_batched_scoring_matches_per_block(multiclass_problem):
+    """approx_oracle_all (fused score+select) == per-block approx_oracle."""
     prob = multiclass_problem
     lam = 1.0 / prob.n
     mp, rng = _warm_mp_state(prob, lam)
     w = jnp.asarray(rng.randn(prob.d).astype(np.float32))
-    planes_b, slots_b, scores_b = workset.approx_oracle_all(mp.ws, w)
+    planes_b, slots_b, scores_b = pcache.approx_oracle_all(mp.cache, w)
     for i in range(0, prob.n, 7):
-        plane, slot, score = workset.approx_oracle(mp.ws, jnp.asarray(i), w)
+        plane, slot, score = pcache.approx_oracle(mp.cache, jnp.asarray(i),
+                                                  w)
         np.testing.assert_allclose(np.asarray(planes_b[i]),
                                    np.asarray(plane), atol=1e-6)
         assert int(slots_b[i]) == int(slot)
@@ -564,7 +563,8 @@ def test_cost_model_clock():
 
 @pytest.mark.parametrize("algo", ["bcfw", "bcfw-avg", "mpbcfw",
                                   "mpbcfw-avg", "mpbcfw-gram",
-                                  "mpbcfw-shard", "mpbcfw-shard-avg"])
+                                  "mpbcfw-shard", "mpbcfw-shard-avg",
+                                  "mpbcfw-shard-gram"])
 def test_algorithms_converge(multiclass_problem, algo):
     prob = multiclass_problem
     lam = 1.0 / prob.n

@@ -7,6 +7,7 @@ from numpy.testing import assert_allclose
 from repro.kernels import flash_attention as fa
 from repro.kernels import gram as gr
 from repro.kernels import plane_scores as ps
+from repro.kernels import plane_select as psel
 from repro.kernels import ref
 from repro.kernels import viterbi as vit
 
@@ -49,25 +50,82 @@ def test_plane_scores_effective_blocks_aligned(n, d, block_n, block_d):
     assert bn >= min(block_n, 8) and bd >= min(block_d, 128)
 
 
-def test_workset_flat_view_scores_through_kernel():
-    """flat_view + plane_scores == per-block masked matvecs."""
-    from repro.core import workset
-    r = np.random.RandomState(0)
-    n, cap, d = 6, 4, 40
-    ws = workset.init_workset(n=n, cap=cap, d=d)
+def _random_cache(r, n, cap, d):
+    from repro import cache as pcache
+    from repro.cache import CacheLayout
+    ws = pcache.init(CacheLayout(cap=cap), n, d)
     for i in range(n):
         for t in range(r.randint(0, cap + 1)):
-            ws = workset.add_plane(
+            ws = pcache.insert(
                 ws, jnp.asarray(i),
                 jnp.asarray(r.randn(d + 1).astype(np.float32)),
                 jnp.asarray(t))
+    return ws
+
+
+def test_cache_flat_view_scores_through_kernel():
+    """flat_view + plane_scores == per-block masked matvecs."""
+    from repro import cache as pcache
+    r = np.random.RandomState(0)
+    n, cap, d = 6, 4, 40
+    ws = _random_cache(r, n, cap, d)
     w = jnp.asarray(r.randn(d).astype(np.float32))
-    P, b, valid = workset.flat_view(ws)
+    P, b, valid = pcache.flat_view(ws)
     assert P.shape == (n * cap, d) and b.shape == (n * cap,)
     assert (np.asarray(valid) == np.asarray(ws.valid).reshape(-1)).all()
     scores = np.asarray(ps.plane_scores(P, w, b, interpret=True))
     expect = np.asarray(ws.planes[:, :, :-1] @ w + ws.planes[:, :, -1])
     assert_allclose(scores.reshape(n, cap), expect, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("n,cap,d", [(1, 1, 1), (6, 4, 40), (13, 7, 200),
+                                     (48, 16, 12), (130, 5, 513)])
+def test_plane_select_shapes(n, cap, d):
+    """Fused score+select kernel vs the jnp reference: masked best score
+    and first-maximal argmax agree on aligned and ragged shapes."""
+    r = np.random.RandomState(n * 100 + cap * 10 + d)
+    P = jnp.asarray(r.randn(n, cap, d).astype(np.float32))
+    w = jnp.asarray(r.randn(d).astype(np.float32))
+    b = jnp.asarray(r.randn(n, cap).astype(np.float32))
+    v = jnp.asarray(r.rand(n, cap) > 0.3)
+    best, idx = psel.plane_select(P, w, b, v, interpret=True)
+    best_r, idx_r = ref.plane_select_ref(P, w, b, v)
+    assert_allclose(np.asarray(best), np.asarray(best_r), rtol=3e-5,
+                    atol=3e-5)
+    assert (np.asarray(idx) == np.asarray(idx_r)).all()
+
+
+def test_plane_select_all_invalid_rows():
+    """Rows with no valid slot score the sentinel with idx 0 (the caller
+    maps them to the zero ground-truth plane)."""
+    r = np.random.RandomState(3)
+    n, cap, d = 9, 4, 24
+    P = jnp.asarray(r.randn(n, cap, d).astype(np.float32))
+    w = jnp.asarray(r.randn(d).astype(np.float32))
+    b = jnp.asarray(r.randn(n, cap).astype(np.float32))
+    v = jnp.zeros((n, cap), bool)
+    best, idx = psel.plane_select(P, w, b, v, interpret=True)
+    assert (np.asarray(best) == np.float32(-1e30)).all()
+    assert (np.asarray(idx) == 0).all()
+
+
+def test_plane_select_fused_equals_two_step_path():
+    """The fused kernel == plane_scores over the flat view + host argmax
+    (the exact hot path it replaced), on a real cache's layout."""
+    from repro import cache as pcache
+    r = np.random.RandomState(1)
+    n, cap, d = 10, 6, 33
+    ws = _random_cache(r, n, cap, d)
+    w = jnp.asarray(r.randn(d).astype(np.float32))
+    best, idx = psel.plane_select(ws.planes[:, :, :-1], w,
+                                  ws.planes[:, :, -1], ws.valid,
+                                  interpret=True)
+    P, b, valid = pcache.flat_view(ws)
+    scores = np.asarray(ps.plane_scores(P, w, b, interpret=True))
+    scores = np.where(np.asarray(valid), scores, -1e30).reshape(n, cap)
+    assert (np.asarray(idx) == scores.argmax(axis=1)).all()
+    assert_allclose(np.asarray(best), scores.max(axis=1), rtol=3e-5,
+                    atol=3e-5)
 
 
 @pytest.mark.parametrize("block_n,block_d", [(8, 128), (16, 256), (128, 512)])

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import distributed, mpbcfw, workset
+from repro import cache as pcache
+from repro.core import distributed, mpbcfw
 from repro.core.ssvm import dual_value, weights_of
 from repro.ft import fallback_planes
 from repro.launch import mesh as mesh_mod
@@ -229,21 +230,50 @@ def test_shard_driver_tau_variant(multiclass_problem, data_mesh):
             max_iters=1, cost_model=CostModel()))
 
 
-def test_gram_refuses_sharded_engine(multiclass_problem, data_mesh):
-    """The Sec-3.5 Gram cache has no sharded twin (ROADMAP gap): asking
-    for it on a mesh must fail loudly instead of silently diverging."""
+def test_shard_gram_trace_bitwise_matches_mpbcfw_gram(multiclass_problem,
+                                                      data_mesh):
+    """The once-missing sharded gram twin: `mpbcfw-shard-gram` on a
+    1-device mesh == `mpbcfw-gram` under CostModel, bit for bit — every
+    TraceRow field and the final weights — at one fused dispatch and one
+    host sync per outer iteration.  `mpbcfw-gram` + mesh resolves to the
+    same engine (the pre-cache UnsupportedConfigError for this combo is
+    gone; see test_api for the capability-routing regression test)."""
+    import dataclasses
+
+    from repro.api import Solver
     from repro.core import driver
     from repro.core.selection import CostModel
 
     prob = multiclass_problem
     lam = 1.0 / prob.n
-    with pytest.raises(ValueError, match="no sharded twin"):
-        driver.run(prob, driver.RunConfig(
-            lam=lam, algo="mpbcfw-gram", mesh=data_mesh, max_iters=1,
-            cost_model=CostModel()))
+    kw = dict(lam=lam, max_iters=4, cap=8, seed=3)
+    res_a = Solver(prob, driver.RunConfig(
+        algo="mpbcfw-gram", cost_model=CostModel(plane_cost=1e-3),
+        **kw)).run()
+    res_b = Solver(prob, driver.RunConfig(
+        algo="mpbcfw-shard-gram", mesh=data_mesh,
+        cost_model=CostModel(plane_cost=1e-3), **kw)).run()
+    res_c = Solver(prob, driver.RunConfig(
+        algo="mpbcfw-gram", mesh=data_mesh,
+        cost_model=CostModel(plane_cost=1e-3), **kw)).run()
+    assert len(res_a.trace) == len(res_b.trace) == len(res_c.trace)
+    for ra, rb, rc in zip(res_a.trace, res_b.trace, res_c.trace):
+        assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+        assert dataclasses.asdict(ra) == dataclasses.asdict(rc)
+        assert rb.host_syncs == 1 and rb.dispatches == 1
+    np.testing.assert_array_equal(res_a.w, res_b.w)
+    np.testing.assert_array_equal(res_a.w_avg, res_b.w_avg)
+
+
+def test_mesh_on_single_device_engine_still_refused(multiclass_problem,
+                                                    data_mesh):
+    """Capability validation survives the gram+mesh routing change."""
+    from repro.core import driver
+    from repro.core.selection import CostModel
+
     with pytest.raises(ValueError, match="only consumed by"):
-        driver.run(prob, driver.RunConfig(
-            lam=lam, algo="bcfw", mesh=data_mesh, max_iters=1,
+        driver.run(multiclass_problem, driver.RunConfig(
+            lam=0.1, algo="bcfw", mesh=data_mesh, max_iters=1,
             cost_model=CostModel()))
 
 
@@ -261,7 +291,7 @@ def test_stale_fold_ins_never_decrease_dual(multiclass_problem):
     w_stale = weights_of(mp.inner.phi, lam)
     ids = jnp.asarray(rng.permutation(prob.n)[:16])
     planes = distributed.parallel_oracles(prob, w_stale, ids)
-    fbp, fbs, _ = fallback_planes(mp.ws, ids, w_stale)
+    fbp, fbs, _ = fallback_planes(mp.cache, ids, w_stale)
     f = float(dual_value(mp.inner.phi, lam))
     for j in range(16):
         ok = jnp.asarray([j % 3 != 0])  # mix oracle folds and fallbacks
@@ -283,9 +313,9 @@ def test_fallback_planes_matches_per_block_scoring(multiclass_problem):
     mp, rng = _warm_mp(prob, lam)
     w = weights_of(mp.inner.phi, lam)
     ids = jnp.asarray(rng.permutation(prob.n)[:8])
-    planes_b, slots_b, scores_b = fallback_planes(mp.ws, ids, w)
+    planes_b, slots_b, scores_b = fallback_planes(mp.cache, ids, w)
     for j, i in enumerate(np.asarray(ids)):
-        plane, slot, score = workset.approx_oracle(mp.ws, jnp.asarray(i), w)
+        plane, slot, score = pcache.approx_oracle(mp.cache, jnp.asarray(i), w)
         np.testing.assert_array_equal(np.asarray(planes_b[j]),
                                       np.asarray(plane))
         assert int(slots_b[j]) == int(slot)
@@ -442,3 +472,47 @@ def test_driver_shard_algo_on_eight_forced_devices():
                          env=env)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "MULTIDEV_DRIVER_OK" in out.stdout
+
+
+_MULTIDEV_GRAM_SCRIPT = textwrap.dedent("""
+    from repro.launch.mesh import force_host_platform_device_count, \\
+        make_data_mesh
+    assert force_host_platform_device_count(8)
+    import jax
+    import jax.numpy as jnp
+    from repro.api import RunConfig, Solver
+    from repro.core.selection import CostModel
+    from repro.data import synthetic
+    from repro.core.oracles import multiclass
+
+    assert jax.local_device_count() == 8
+    x, y = synthetic.usps_like(n=48, f=12, num_classes=5, seed=0)
+    prob = multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), 5)
+    lam = 1.0 / prob.n
+    res = Solver(prob, RunConfig(
+        lam=lam, algo="mpbcfw-shard-gram", mesh=make_data_mesh(8),
+        max_iters=3, cap=8, max_approx_passes=32,
+        cost_model=CostModel())).run()
+    for row in res.trace:
+        assert row.host_syncs == 1, row
+        assert row.dispatches == 1, row
+    duals = [t.dual for t in res.trace]
+    assert all(b >= a - 1e-7 for a, b in zip(duals, duals[1:])), duals
+    assert res.trace[-1].gap < res.trace[0].gap
+    print("MULTIDEV_GRAM_OK", duals[-1])
+""")
+
+
+@pytest.mark.mesh
+def test_shard_gram_algo_on_eight_forced_devices():
+    """`mpbcfw-shard-gram` end-to-end on a real 8-shard mesh: the gram
+    blocks shard with the plane cache, duals stay monotone (damped
+    recombination), one dispatch and one host sync per outer iteration.
+    Fresh subprocess (device count forced before jax init)."""
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", _MULTIDEV_GRAM_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MULTIDEV_GRAM_OK" in out.stdout
