@@ -1,0 +1,50 @@
+"""Static-analyzer benchmark rows (``analysis_*``).
+
+Times the :mod:`repro.analysis` layers and reports the statically
+counted per-engine collective facts — the same numbers the CI gate
+proves against the declared :class:`repro.api.engine.EngineCapabilities`
+budgets, surfaced as benchmark rows so a regression in analyzer cost or
+a drift in program structure shows up in the smoke run's CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+#: smoke subset: one single-device and one mesh engine (the full set is
+#: what ``python -m repro.analysis --strict`` covers in CI's --analyze
+#: stage).
+SMOKE_ENGINES = ("mpbcfw", "mpbcfw-shard")
+
+
+def main(smoke: bool = False) -> List[Tuple]:
+    from repro.analysis import run_jaxpr_layer, run_lint_layer
+
+    rows: List[Tuple] = []
+
+    t0 = time.perf_counter()
+    engines = list(SMOKE_ENGINES) if smoke else None
+    findings, _, traces = run_jaxpr_layer(engines)
+    t_jaxpr = time.perf_counter() - t0
+    rows.append(("analysis_jaxpr_s", round(t_jaxpr, 3),
+                 f"trace+check {len(traces)} engine config(s)"))
+
+    t0 = time.perf_counter()
+    lint_findings = run_lint_layer()
+    t_lint = time.perf_counter() - t0
+    rows.append(("analysis_lint_s", round(t_lint, 3), "AST lint of src/"))
+    rows.append(("analysis_findings", len(findings) + len(lint_findings),
+                 "static contract violations (0 = budgets proven)"))
+
+    for et in traces:
+        outer = et.programs[0].facts
+        rows.append((f"analysis_{et.label}_setup_collectives",
+                     outer.setup_collectives, "once per fused program"))
+        rows.append((f"analysis_{et.label}_pass_collectives",
+                     outer.pass_collectives, "inside the pass loop"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(smoke=True):
+        print(",".join(str(x) for x in r))

@@ -11,6 +11,8 @@ Prints ``name,value,derived`` CSV rows:
              host-loop equivalent — including ``shard_driver_*`` rows for
              the public ``repro.api.Solver`` path (``algo='mpbcfw-shard'``)
   * kernel_* hot-path microbenchmarks (us per call)
+  * analysis_* static-analyzer wall time + per-engine statically counted
+             collectives (the budgets ``repro.analysis`` proves)
   * dryrun_/roofline_ summary of the (arch x shape) grid
 
 ``--smoke``: a fast CI-friendly subset — 4-iteration convergence runs and
@@ -26,13 +28,14 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     smoke = "--smoke" in sys.argv
-    from . import (kernel_bench, paper_convergence, sharded_bench,
-                   workset_stats)
+    from . import (analysis_bench, kernel_bench, paper_convergence,
+                   sharded_bench, workset_stats)
     rows = []
     rows += paper_convergence.main(quick=quick or smoke)
     rows += workset_stats.main()
     rows += sharded_bench.main(smoke=smoke)
     rows += kernel_bench.main(smoke=smoke)
+    rows += analysis_bench.main(smoke=smoke)
     if not smoke:
         from . import roofline_report
         rows += roofline_report.main()

@@ -5,6 +5,8 @@
 #   scripts/ci.sh --runslow  # + the multi-minute XLA compile cells
 #   scripts/ci.sh --mesh     # + the mesh-marked tests under 8 forced
 #                            #   host devices (XLA_FLAGS)
+#   scripts/ci.sh --analyze  # + the static program-contract checker
+#                            #   (python -m repro.analysis --strict)
 #
 # pytest.ini keeps the deprecated driver.run shim's DeprecationWarning
 # filtered (its firing is itself asserted by tests/test_api.py), along
@@ -18,10 +20,20 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 MESH=0
+ANALYZE=0
 ARGS=()
 for a in "$@"; do
-  if [[ "$a" == "--mesh" ]]; then MESH=1; else ARGS+=("$a"); fi
+  if [[ "$a" == "--mesh" ]]; then MESH=1
+  elif [[ "$a" == "--analyze" ]]; then ANALYZE=1
+  else ARGS+=("$a"); fi
 done
+
+if [[ "$ANALYZE" == 1 ]]; then
+  # Static gate first: traces every registered engine's fused programs,
+  # cross-checks jaxpr/HLO collective budgets, lints src/.  Fails fast
+  # (nonzero exit on any finding) before the test suite spends minutes.
+  python -m repro.analysis --strict
+fi
 
 if [[ "$MESH" == 1 ]]; then
   # Split stages: the fast suite without the mesh-marked tests first,

@@ -1,0 +1,75 @@
+"""Static program-contract checker: jaxpr + HLO + AST, before runtime.
+
+The runtime telemetry (:class:`repro.core.selection.SyncLedger`,
+:class:`repro.shard.telemetry.CollectiveTrace`) *observes* the repo's
+sync/collective/precision contracts; this package *proves* them without
+executing anything, in three layers:
+
+  1. :mod:`~repro.analysis.contracts` — trace every registered engine's
+     fused program(s) with ``jax.make_jaxpr`` and check the statically
+     counted collectives / host callbacks / dtypes against the budgets
+     declared on :class:`repro.api.engine.EngineCapabilities`
+     (rules J001-J005);
+  2. :mod:`~repro.analysis.hlo` — lower the same programs to optimized
+     HLO and cross-check what XLA actually emitted, plus the Pallas
+     (8, 128) tile-alignment policies (rules H001-H004);
+  3. :mod:`~repro.analysis.lint` — AST lint of the source tree for the
+     contracts tracing cannot see: stray sentinel literals, deprecated
+     APIs, un-counted ``lax.psum``, implicit host syncs, float64 in
+     device code (rules R001-R005, with inline
+     ``# repro: allow[R00x] reason`` waivers).
+
+CLI: ``python -m repro.analysis --strict`` (CI runs this via
+``scripts/ci.sh --analyze``); see ``--help`` for layer/engine filters.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+from .contracts import (EngineTrace, ProgramFacts, count_program,
+                        install_registration_guard, run_jaxpr_layer,
+                        trace_cases, trace_engine)
+from .findings import RULES, Finding, Report, rule_table
+from .hlo import check_tiles, run_hlo_layer
+from .lint import lint_source, run_lint_layer
+
+LAYERS = ("jaxpr", "hlo", "lint")
+
+
+def run_all(layers: Iterable[str] = LAYERS,
+            engines: Optional[Iterable[str]] = None,
+            root=None) -> Report:
+    """Run the requested layers and aggregate one :class:`Report`.
+
+    The HLO layer reuses the jaxpr layer's traces (the programs are
+    traced once, lowered once); ``engines`` filters the traced engines,
+    ``root`` points the lint layer at an alternate source tree.
+    """
+    layers = list(layers)
+    unknown = [l for l in layers if l not in LAYERS]
+    if unknown:
+        raise ValueError(f"unknown analysis layer(s) {unknown}; "
+                         f"pick from {list(LAYERS)}")
+    report = Report(layers=layers)
+    if "jaxpr" in layers or "hlo" in layers:
+        findings, facts, traces = run_jaxpr_layer(
+            list(engines) if engines is not None else None)
+        if "jaxpr" in layers:
+            report.extend(findings)
+            report.facts.update(facts)
+        if "hlo" in layers:
+            hlo_findings, hlo_facts = run_hlo_layer(traces)
+            report.extend(hlo_findings)
+            for label, fx in hlo_facts.items():
+                report.facts.setdefault(label, {}).update(fx)
+    if "lint" in layers:
+        report.extend(run_lint_layer(root))
+    return report
+
+
+__all__ = [
+    "LAYERS", "RULES", "EngineTrace", "Finding", "ProgramFacts", "Report",
+    "check_tiles", "count_program", "install_registration_guard",
+    "lint_source", "rule_table", "run_all", "run_hlo_layer",
+    "run_jaxpr_layer", "run_lint_layer", "trace_cases", "trace_engine",
+]

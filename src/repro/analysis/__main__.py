@@ -1,0 +1,64 @@
+"""CLI for the static program-contract checker.
+
+    python -m repro.analysis --strict              # CI gate (all layers)
+    python -m repro.analysis --layer lint          # source lint only
+    python -m repro.analysis --engines mpbcfw-shard --layer jaxpr --layer hlo
+    python -m repro.analysis --json                # machine-readable
+    python -m repro.analysis --rules               # print the rule table
+
+Exit code: 0 when clean; with ``--strict``, 1 when any finding survives.
+Without ``--strict`` findings are reported but the exit stays 0 (report
+mode for local iteration).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from . import LAYERS, Report, rule_table, run_all
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static program-contract checker "
+                    "(jaxpr + HLO + AST lint).")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on any finding (the CI gate)")
+    p.add_argument("--layer", action="append", choices=LAYERS,
+                   dest="layers", metavar="LAYER",
+                   help="run only these layers (repeatable; "
+                        f"default: all of {', '.join(LAYERS)})")
+    p.add_argument("--engines", default=None,
+                   help="comma-separated engine names to trace "
+                        "(default: every registered engine)")
+    p.add_argument("--root", default=None,
+                   help="source root for the lint layer "
+                        "(default: the repo src/ directory)")
+    p.add_argument("--json", action="store_true",
+                   help="emit the report as JSON")
+    p.add_argument("--verbose", action="store_true",
+                   help="also print per-engine static facts when there "
+                        "are findings")
+    p.add_argument("--rules", action="store_true",
+                   help="print the rule table and exit")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.rules:
+        print(rule_table())
+        return 0
+    layers = args.layers or list(LAYERS)
+    engines = (None if args.engines is None
+               else [e.strip() for e in args.engines.split(",") if e.strip()])
+    report: Report = run_all(layers=layers, engines=engines, root=args.root)
+    print(report.to_json() if args.json
+          else report.format_text(verbose=args.verbose))
+    return 1 if (args.strict and not report.ok) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

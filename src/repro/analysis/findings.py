@@ -1,0 +1,102 @@
+"""Finding records and reports shared by all three analyzer layers.
+
+A :class:`Finding` is one violated contract — a rule id (``J0xx`` jaxpr,
+``H0xx`` HLO, ``R0xx`` source lint), *where* it was found (an engine name
+or a ``file:line``), and a human message.  Layers return plain lists of
+findings; :class:`Report` aggregates them for the CLI (text table or
+JSON, exit code).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+#: rule id -> one-line description (the CLI prints this table on --rules).
+RULES: Dict[str, str] = {
+    # Layer 1: jaxpr program contracts
+    "J001": "per-pass collective count differs from the engine's "
+            "declared collectives_per_pass budget",
+    "J002": "setup (outside-loop) collective count differs from the "
+            "declared collectives_setup budget",
+    "J003": "host-callback primitive (pure_callback/io_callback/"
+            "debug_callback) beyond the declared host_callbacks budget",
+    "J004": "mesh-capable engine does not declare collective budgets",
+    "J005": "dtype discipline: float64 aval in a traced program, or dual "
+            "telemetry not carried in the declared accum_dtype",
+    # Layer 2: compiled-HLO cross-checks
+    "H001": "optimized HLO contains more collective ops than the jaxpr "
+            "(XLA introduced a collective, e.g. a hidden all-reduce)",
+    "H002": "zero-collective-budget program compiles to HLO that still "
+            "contains collective ops",
+    "H003": "Pallas BlockSpec tile not (8, 128)-aligned",
+    "H004": "program failed to lower/compile for HLO analysis",
+    # Layer 3: AST source lint
+    "R001": "raw +/-1e30 sentinel literal outside kernels/ops.py "
+            "(use kernels.ops.INVALID_SCORE)",
+    "R002": "deprecated WorkSet/GramCache/driver.run outside the "
+            "compatibility shims",
+    "R003": "direct lax.psum in repro.shard outside "
+            "CollectiveTrace.psum (collectives must be trace-counted)",
+    "R004": "implicit host sync (float()/np.asarray()/.item()/"
+            ".block_until_ready()) in an engine/kernel hot path",
+    "R005": "float64 dtype in device code (fp32 accumulation "
+            "discipline)",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One contract violation."""
+
+    rule: str            # e.g. "J001"
+    where: str           # engine name or "path/to/file.py:42"
+    message: str
+
+    def __str__(self) -> str:  # pragma: no cover - formatting
+        return f"{self.rule} {self.where}: {self.message}"
+
+
+@dataclass
+class Report:
+    """Aggregated findings from one analyzer run."""
+
+    findings: List[Finding] = field(default_factory=list)
+    #: layers that actually ran, e.g. ["jaxpr", "hlo", "lint"]
+    layers: List[str] = field(default_factory=list)
+    #: per-engine static facts, e.g. {"mpbcfw-shard": {"setup": 1, ...}}
+    facts: Dict[str, Dict[str, object]] = field(default_factory=dict)
+
+    def extend(self, findings: List[Finding]) -> None:
+        self.findings.extend(findings)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "ok": self.ok,
+            "layers": self.layers,
+            "findings": [{"rule": f.rule, "where": f.where,
+                          "message": f.message} for f in self.findings],
+            "facts": self.facts,
+        }, indent=2, sort_keys=True)
+
+    def format_text(self, verbose: bool = False) -> str:
+        lines: List[str] = []
+        for f in sorted(self.findings, key=lambda f: (f.rule, f.where)):
+            lines.append(str(f))
+        if verbose or not self.findings:
+            for name in sorted(self.facts):
+                facts = self.facts[name]
+                kv = " ".join(f"{k}={facts[k]}" for k in sorted(facts))
+                lines.append(f"# {name}: {kv}")
+        status = "OK" if self.ok else f"{len(self.findings)} finding(s)"
+        lines.append(f"repro.analysis [{' + '.join(self.layers)}]: {status}")
+        return "\n".join(lines)
+
+
+def rule_table() -> str:
+    """The R/J/H rule listing (mirrors README 'Program contracts')."""
+    return "\n".join(f"{rid}  {desc}" for rid, desc in sorted(RULES.items()))

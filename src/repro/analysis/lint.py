@@ -1,0 +1,230 @@
+"""Layer 3: AST lint of the source tree (rules R001-R005).
+
+Pure ``ast`` walk over every ``*.py`` under the source root — no imports
+of the linted code, so it runs in milliseconds and works on fixture
+trees in tests.  Each rule encodes one repo contract that the runtime
+layers cannot see (they check traced programs; these check the *source*
+that builds them):
+
+  R001  raw ``+/-1e30`` sentinel literals outside ``kernels/ops.py`` —
+        the masking sentinel has one home, ``kernels.ops.INVALID_SCORE``.
+  R002  deprecated ``WorkSet`` / ``GramCache`` / ``driver.run`` usage
+        outside the compatibility shims that define them.
+  R003  direct ``lax.psum`` inside :mod:`repro.shard` outside
+        ``CollectiveTrace.psum`` — collectives in the shard engine must
+        go through the trace counter or the Layer-1 budgets lie.
+  R004  implicit host syncs (``float()`` / ``np.asarray()`` /
+        ``.item()`` / ``.block_until_ready()``) inside engine/kernel
+        hot-path functions (constructors and module level are host-side
+        by definition and exempt).
+  R005  ``float64`` dtypes in device code (fp32 accumulation
+        discipline; host-side ``np.float64`` bookkeeping is fine).
+
+A finding on line N is suppressed by an inline waiver on that line:
+
+    x = float(lam)  # repro: allow[R004] cache key, traced once
+
+The waiver names the rule(s) it waives and must carry a reason.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+# The sentinel magnitude R001 polices.  Spelled without its own literal
+# so this file never trips the rule it implements.
+_SENTINEL = float("1e30")
+
+#: rule -> path prefixes/files (relative, posix) the rule does NOT apply
+#: to: the sentinel's home, the deprecation shims, the trace counter.
+ALLOWED: Dict[str, Tuple[str, ...]] = {
+    "R001": ("repro/kernels/ops.py",),
+    "R002": ("repro/core/types.py", "repro/core/__init__.py",
+             "repro/core/workset.py", "repro/core/gram.py",
+             "repro/core/driver.py", "repro/cache/state.py",
+             "repro/cache/__init__.py"),
+    "R003": ("repro/shard/telemetry.py",),
+}
+
+#: R003 scope: the sharded engine package.
+_SHARD_SCOPE = ("repro/shard/",)
+
+#: R004 scope: hot-path modules — every statement here is either traced
+#: into a device program or sits on the dispatch path.
+_HOT_SCOPE = ("repro/kernels/", "repro/shard/", "repro/core/mpbcfw.py",
+              "repro/core/bcfw.py")
+
+#: R005 scope: device code (kernels, optimizer cores, model stacks).
+_DEVICE_SCOPE = ("repro/kernels/", "repro/core/", "repro/shard/",
+                 "repro/cache/", "repro/models/")
+
+_WAIVER_RE = re.compile(
+    r"#\s*repro:\s*allow\[([A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)\]")
+
+_HOST_SYNC_ATTRS = ("item", "block_until_ready")
+
+
+def _in_scope(rel: str, scope: Sequence[str]) -> bool:
+    return any(rel == s or rel.startswith(s) for s in scope)
+
+
+def _allowed(rel: str, rule: str) -> bool:
+    return _in_scope(rel, ALLOWED.get(rule, ()))
+
+
+def parse_waivers(text: str) -> Dict[int, Set[str]]:
+    """line number (1-based) -> waived rule ids on that line."""
+    waivers: Dict[int, Set[str]] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _WAIVER_RE.search(line)
+        if m is not None:
+            waivers[i] = {r.strip() for r in m.group(1).split(",")}
+    return waivers
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel: str, waivers: Dict[int, Set[str]]):
+        self.rel = rel
+        self.waivers = waivers
+        self.findings: List[Finding] = []
+        self._funcs: List[str] = []   # enclosing function-name stack
+
+    # -- plumbing ---------------------------------------------------------
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if rule in self.waivers.get(line, ()):
+            return
+        if _allowed(self.rel, rule):
+            return
+        self.findings.append(Finding(rule, f"{self.rel}:{line}", message))
+
+    def _in_hot_function(self) -> bool:
+        """Inside a function body that is not a constructor."""
+        return bool(self._funcs) and "__init__" not in self._funcs
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._funcs.append(node.name)
+        self.generic_visit(node)
+        self._funcs.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- R001: raw sentinel literals --------------------------------------
+
+    def visit_Constant(self, node: ast.Constant) -> None:
+        v = node.value
+        if isinstance(v, float) and abs(v) == _SENTINEL:
+            self._emit("R001", node,
+                       "raw sentinel literal; use "
+                       "repro.kernels.ops.INVALID_SCORE")
+        self.generic_visit(node)
+
+    # -- R002: deprecated names -------------------------------------------
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if node.id in ("WorkSet", "GramCache"):
+            self._emit("R002", node,
+                       f"deprecated {node.id}; use repro.cache.PlaneCache"
+                       + (" (gram blocks live inside the cache)"
+                          if node.id == "GramCache" else ""))
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        for alias in node.names:
+            if alias.name in ("WorkSet", "GramCache"):
+                self._emit("R002", node,
+                           f"import of deprecated {alias.name} "
+                           f"from {mod!r}")
+            if alias.name == "run" and mod.split(".")[-1] == "driver":
+                self._emit("R002", node,
+                           "deprecated driver.run; use repro.api.Solver")
+        self.generic_visit(node)
+
+    # -- attribute-shaped rules -------------------------------------------
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        base = node.value.id if isinstance(node.value, ast.Name) else None
+        # R002: driver.run
+        if node.attr == "run" and base == "driver":
+            self._emit("R002", node,
+                       "deprecated driver.run; use repro.api.Solver")
+        # R003: lax.psum outside CollectiveTrace in the shard package
+        if (node.attr == "psum" and base in ("lax", "jax")
+                and _in_scope(self.rel, _SHARD_SCOPE)):
+            self._emit("R003", node,
+                       "direct lax.psum in repro.shard; route through "
+                       "CollectiveTrace.psum so the collective budgets "
+                       "stay statically provable")
+        # R005: float64 dtype in device code
+        if (node.attr == "float64" and base in ("jnp", "jax")
+                and _in_scope(self.rel, _DEVICE_SCOPE)):
+            self._emit("R005", node,
+                       "float64 in device code; dual accumulation is "
+                       "float32 (EngineCapabilities.accum_dtype)")
+        self.generic_visit(node)
+
+    # -- R004: implicit host syncs in hot paths ---------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _in_scope(self.rel, _HOT_SCOPE) and self._in_hot_function():
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id == "float":
+                self._emit("R004", node,
+                           "float() on a device value blocks the "
+                           "dispatch pipeline (implicit host sync)")
+            elif isinstance(fn, ast.Attribute):
+                base = (fn.value.id if isinstance(fn.value, ast.Name)
+                        else None)
+                if fn.attr == "asarray" and base in ("np", "numpy"):
+                    self._emit("R004", node,
+                               "np.asarray() fetches the device buffer "
+                               "(implicit host sync)")
+                elif fn.attr in _HOST_SYNC_ATTRS:
+                    self._emit("R004", node,
+                               f".{fn.attr}() is an implicit host sync")
+        self.generic_visit(node)
+
+    # -- R005: string dtype spellings -------------------------------------
+
+    def visit_keyword(self, node: ast.keyword) -> None:
+        if (node.arg == "dtype" and isinstance(node.value, ast.Constant)
+                and node.value.value == "float64"
+                and _in_scope(self.rel, _DEVICE_SCOPE)):
+            self._emit("R005", node.value,
+                       "dtype='float64' in device code; accumulation "
+                       "is float32")
+        self.generic_visit(node)
+
+
+def lint_source(rel: str, text: str) -> List[Finding]:
+    """Lint one file's source.  ``rel`` is its path relative to the
+    source root (posix separators) — rule scoping keys off it."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding("R000", f"{rel}:{e.lineno or 0}",
+                        f"syntax error: {e.msg}")]
+    linter = _Linter(rel, parse_waivers(text))
+    linter.visit(tree)
+    return linter.findings
+
+
+def default_root() -> Path:
+    """The repo's ``src/`` directory (this package's grandparent)."""
+    return Path(__file__).resolve().parents[2]
+
+
+def run_lint_layer(root: Optional[Path] = None) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (default: the repo ``src/``)."""
+    root = default_root() if root is None else Path(root)
+    findings: List[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        findings.extend(lint_source(rel, path.read_text()))
+    return findings

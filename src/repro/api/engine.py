@@ -33,7 +33,7 @@ drivable via ``RunConfig(algo=<their name>)``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Protocol, Tuple, \
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple, \
     runtime_checkable
 
 from .config import RunConfig
@@ -64,8 +64,35 @@ class EngineCapabilities:
                   configs that set ``RunConfig.mesh`` (engines that only
                   resolve to a mesh execution path when one is given,
                   e.g. ``mpbcfw-gram``).
+      mesh_optional: the factory resolves to a single-device program when
+                  ``RunConfig.mesh`` is None and to the mesh path when it
+                  is set (``mpbcfw-gram``); the static analyzer traces
+                  *both* configurations.
       note:       extra context appended to capability-mismatch errors
                   (e.g. *why* this engine cannot run on a mesh).
+
+    Program-contract budgets (checked statically by
+    :mod:`repro.analysis` — the jaxpr/HLO layers trace the engine's
+    fused programs and fail on any mismatch, making the runtime
+    ``SyncLedger``/``CollectiveTrace`` contracts provable properties):
+
+      collectives_per_pass: collective ops (``psum``/``all_gather``/...)
+                  issued per approximate pass, i.e. inside the fused
+                  program's pass loop, when running on a mesh.  The paper
+                  contract for the shard family is exactly 1.  ``None``
+                  means undeclared — the analyzer flags mesh-capable
+                  engines that do not declare it.
+      collectives_setup: collective ops issued once per fused program,
+                  outside the pass loop (the shard engine's plane-count
+                  reduction), when running on a mesh.
+      host_callbacks: host-callback primitives (``pure_callback`` /
+                  ``io_callback`` / ``debug_callback``) allowed inside
+                  the fused programs.  0 for every built-in: a callback
+                  is a hidden host sync.
+      accum_dtype: dtype the dual accumulators (``phi``/``phi_i`` and
+                  the per-pass dual telemetry) must carry — the paper's
+                  fp32 dual-accumulation discipline.  A future bf16 plane
+                  cache still accumulates in float32.
     """
 
     multipass: bool = False
@@ -76,6 +103,11 @@ class EngineCapabilities:
     uses_tau: bool = False
     requires_tau: bool = False
     tau_requires_mesh: bool = False
+    mesh_optional: bool = False
+    collectives_per_pass: Optional[int] = None
+    collectives_setup: Optional[int] = None
+    host_callbacks: int = 0
+    accum_dtype: str = "float32"
     note: str = ""
 
 
@@ -117,6 +149,55 @@ class EngineEntry:
 _REGISTRY: "Dict[str, EngineEntry]" = {}
 _BUILTINS_LOADED = False
 
+# Registration-time hooks: each is called with every EngineEntry as it
+# registers (the static analyzer installs its budget guard here, so an
+# engine that fails to declare its program contracts is caught at the
+# registration site, before any run).
+RegistrationHook = Callable[[EngineEntry], None]
+_REG_HOOKS: "List[RegistrationHook]" = []
+
+
+def add_registration_hook(hook: RegistrationHook, *,
+                          retroactive: bool = True) -> None:
+    """Install ``hook(entry)`` to run on every engine registration.
+
+    With ``retroactive`` (default) the hook also runs immediately over
+    the already-registered entries (builtins included), so installing a
+    contract guard late still covers the whole registry.  Hooks raise to
+    reject a registration.
+    """
+    _REG_HOOKS.append(hook)
+    if retroactive:
+        _ensure_builtins()
+        for entry in list(_REGISTRY.values()):
+            hook(entry)
+
+
+def remove_registration_hook(hook: RegistrationHook) -> None:
+    """Uninstall a registration hook (no-op if absent)."""
+    try:
+        _REG_HOOKS.remove(hook)
+    except ValueError:
+        pass
+
+
+def _validate_capabilities(name: str, caps: EngineCapabilities) -> None:
+    """Reject malformed contract budgets at the registration site."""
+    for fld in ("collectives_per_pass", "collectives_setup"):
+        v = getattr(caps, fld)
+        if v is not None and (not isinstance(v, int) or v < 0):
+            raise ValueError(
+                f"engine {name!r}: {fld} must be None or a non-negative "
+                f"int, got {v!r}")
+    if not isinstance(caps.host_callbacks, int) or caps.host_callbacks < 0:
+        raise ValueError(
+            f"engine {name!r}: host_callbacks must be a non-negative int, "
+            f"got {caps.host_callbacks!r}")
+    if not caps.accum_dtype or not isinstance(caps.accum_dtype, str):
+        raise ValueError(
+            f"engine {name!r}: accum_dtype must be a dtype name, got "
+            f"{caps.accum_dtype!r}")
+
 
 def _ensure_builtins() -> None:
     """Import the built-in engine module once (it self-registers)."""
@@ -149,9 +230,13 @@ def register_engine(name: str, factory: EngineFactory,
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"engine {name!r} already registered "
                          "(pass overwrite=True to replace)")
-    _REGISTRY[name] = EngineEntry(
+    entry = EngineEntry(
         name=name, factory=factory,
         capabilities=capabilities or EngineCapabilities())
+    _validate_capabilities(name, entry.capabilities)
+    for hook in list(_REG_HOOKS):
+        hook(entry)  # raising here vetoes the registration
+    _REGISTRY[name] = entry
 
 
 def unregister_engine(name: str) -> None:

@@ -44,6 +44,17 @@ class IterStats(NamedTuple):
     n_approx: int
 
 
+# Contract budgets (repro.analysis proves these statically on the traced
+# fused programs): single-device engines issue no collectives and no host
+# callbacks; the shard engines issue exactly one setup psum per program
+# and one psum per approximate pass; every engine accumulates duals in
+# float32.
+_SINGLE_DEVICE_BUDGET = dict(collectives_per_pass=0, collectives_setup=0,
+                             host_callbacks=0)
+_SHARD_BUDGET = dict(collectives_per_pass=1, collectives_setup=1,
+                     host_callbacks=0)
+
+
 class _EngineBase:
     """Shared plumbing: ledger + default checkpoint pack/unpack hooks."""
 
@@ -78,7 +89,8 @@ class FusedEngine(_EngineBase):
     separately."""
 
     capabilities = EngineCapabilities(multipass=True,
-                                      supports_averaging=True)
+                                      supports_averaging=True,
+                                      **_SINGLE_DEVICE_BUDGET)
 
     def __init__(self, problem: SSVMProblem, lam: float, *,
                  use_gram: bool = False, gram_steps: int = 10,
@@ -128,7 +140,7 @@ class ShardDriverEngine(FusedEngine):
 
     capabilities = EngineCapabilities(multipass=True, supports_mesh=True,
                                       supports_averaging=True,
-                                      uses_tau=True)
+                                      uses_tau=True, **_SHARD_BUDGET)
 
     def __init__(self, problem: SSVMProblem, lam: float, mesh,
                  tau: Optional[int], *, averaged: bool = False,
@@ -167,7 +179,8 @@ class FWEngine(_EngineBase):
     no per-block state, no permutation.  The oracle-call counter rides
     in the state tuple so checkpoints resume it exactly."""
 
-    capabilities = EngineCapabilities(needs_perm=False)
+    capabilities = EngineCapabilities(needs_perm=False,
+                                      **_SINGLE_DEVICE_BUDGET)
 
     def __init__(self, problem: SSVMProblem, lam: float):
         super().__init__(problem, lam)
@@ -204,7 +217,8 @@ class SSGEngine(_EngineBase):
     are reported as NaN).  ``t_ctr`` (the 1/(lam t) schedule counter,
     starting at 1) doubles as the oracle-call counter."""
 
-    capabilities = EngineCapabilities(needs_perm=True)
+    capabilities = EngineCapabilities(needs_perm=True,
+                                      **_SINGLE_DEVICE_BUDGET)
 
     def init_state(self, cap: int):
         del cap
@@ -236,7 +250,8 @@ class BCFWEngine(_EngineBase):
     averaging tracks maintained (reported when ``averaged=True``)."""
 
     capabilities = EngineCapabilities(needs_perm=True,
-                                      supports_averaging=True)
+                                      supports_averaging=True,
+                                      **_SINGLE_DEVICE_BUDGET)
 
     def __init__(self, problem: SSVMProblem, lam: float, *,
                  averaged: bool = False):
@@ -332,6 +347,7 @@ _register(
     EngineCapabilities(
         multipass=True, supports_gram=True, supports_averaging=True,
         supports_mesh=True, uses_tau=True, tau_requires_mesh=True,
+        mesh_optional=True, **_SHARD_BUDGET,
         note="mpbcfw-gram with RunConfig.mesh resolves to the sharded "
              "gram engine (the mpbcfw-shard-gram path: PlaneCache.gram "
              "shards with the blocks), which also consumes "

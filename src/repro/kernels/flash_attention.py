@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_NEG = -1e30  # python float: jnp scalars may not be captured by kernels
+from .ops import INVALID_SCORE
+
+_NEG = INVALID_SCORE  # python float: jnp scalars may not be captured by kernels
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,

@@ -9,19 +9,21 @@ from __future__ import annotations
 
 import jax
 
-from . import flash_attention as _fa
-from . import moe_ffn as _moe
-from . import gram as _gram
-from . import plane_scores as _ps
-from . import plane_select as _psel
-from . import viterbi as _vit
-from . import ref
-
 # The one invalid-slot score sentinel, shared by every masked scoring path
 # (kernel defaults, the jnp references, and repro.cache which re-exports it
 # as ``NEG_INF``).  Large enough to lose every argmax, small enough to stay
-# exactly representable in float32.
+# exactly representable in float32.  Defined before the kernel imports
+# below so the kernel modules can import it back from here without a
+# cycle (lint rule R001 points every other -1e30 spelling at this name).
 INVALID_SCORE = -1e30
+
+from . import flash_attention as _fa    # noqa: E402
+from . import moe_ffn as _moe           # noqa: E402
+from . import gram as _gram             # noqa: E402
+from . import plane_scores as _ps       # noqa: E402
+from . import plane_select as _psel     # noqa: E402
+from . import viterbi as _vit           # noqa: E402
+from . import ref                       # noqa: E402
 
 
 def on_tpu() -> bool:

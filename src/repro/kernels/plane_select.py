@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .ops import INVALID_SCORE
 from .plane_scores import effective_blocks
 
 
@@ -61,7 +62,7 @@ def _kernel(p_ref, w_ref, v_ref, acc_ref, best_ref, idx_ref, *, nj, neg):
 @functools.partial(jax.jit, static_argnames=("neg", "block_e", "block_d",
                                              "interpret"))
 def plane_select(planes: jnp.ndarray, w: jnp.ndarray, offsets: jnp.ndarray,
-                 valid: jnp.ndarray, *, neg: float = -1e30,
+                 valid: jnp.ndarray, *, neg: float = INVALID_SCORE,
                  block_e: int = 128, block_d: int = 512,
                  interpret: bool = False):
     """Fused masked score + per-block argmax over a plane cache.

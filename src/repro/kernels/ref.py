@@ -8,6 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .ops import INVALID_SCORE
+
 
 def plane_scores_ref(planes: jnp.ndarray, w: jnp.ndarray,
                      offsets: jnp.ndarray) -> jnp.ndarray:
@@ -16,7 +18,7 @@ def plane_scores_ref(planes: jnp.ndarray, w: jnp.ndarray,
 
 def plane_select_ref(planes: jnp.ndarray, w: jnp.ndarray,
                      offsets: jnp.ndarray, valid: jnp.ndarray,
-                     neg: float = -1e30):
+                     neg: float = INVALID_SCORE):
     """Fused score-and-select: planes (n, cap, d), offsets/valid (n, cap).
 
     Returns ``(best (n,), idx (n,) int32)``.  The scores are computed
@@ -49,7 +51,7 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         sm_scale = 1.0 / (d ** 0.5)
     scores = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * sm_scale
     mask = jnp.tril(jnp.ones((s, s), bool))
-    scores = jnp.where(mask, scores, -1e30)
+    scores = jnp.where(mask, scores, INVALID_SCORE)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
 

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .ops import INVALID_SCORE
+
 
 def _kernel(m_ref, t_ref, out_ref, back_ref):
     m = m_ref[...]            # (bb, C)
@@ -39,7 +41,7 @@ def viterbi_step(m: jnp.ndarray, trans: jnp.ndarray, *, block_b: int = 8,
     B, C = m.shape
     c_pad = -C % 128
     b_pad = -B % block_b
-    neg = jnp.float32(-1e30)
+    neg = jnp.float32(INVALID_SCORE)
     mp = jnp.pad(m, ((0, b_pad), (0, c_pad)), constant_values=neg)
     tp = jnp.pad(trans, ((0, c_pad), (0, c_pad)))
     Bp, Cp = mp.shape

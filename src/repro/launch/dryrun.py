@@ -272,9 +272,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     hlo = compiled.as_text()
     rec["hlo_bytes"] = len(hlo)
     coll = hlo_analysis.collective_bytes(hlo)
+    # Static = once-per-program ops; the in_loop buckets are per-while-trip
+    # (scan-over-layers) and need a trip-count multiplier the HLO text
+    # does not carry — report them separately instead of folding them in.
     rec["collective_bytes_static"] = coll.total_bytes
     rec["collective_by_kind"] = coll.bytes_by_kind
     rec["collective_counts"] = coll.count_by_kind
+    rec["collective_in_loop_bytes"] = coll.total_in_loop_bytes
+    rec["collective_in_loop_by_kind"] = coll.in_loop_bytes_by_kind
+    rec["collective_in_loop_counts"] = coll.in_loop_count_by_kind
     rec["while_trip_counts"] = hlo_analysis.while_trip_counts(hlo)[:32]
 
     rec["tokens"] = tokens

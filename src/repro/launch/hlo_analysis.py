@@ -1,9 +1,21 @@
-"""Roofline-term extraction from compiled dry-run artifacts.
+"""Roofline-term and collective extraction from compiled HLO artifacts.
 
 compute/memory terms come from ``compiled.cost_analysis()``; the collective
 term is NOT in cost_analysis, so we parse the optimized HLO text and sum
 the result-operand bytes of every communication op (all-gather, all-reduce,
 reduce-scatter, all-to-all, collective-permute).
+
+Collectives inside while-loop bodies execute once per trip, but the HLO
+text contains the body computation once, so a flat line scan under-counts
+them.  :func:`collective_bytes` is therefore computation-aware: it parses
+the module into named computations, finds every ``while`` op's body and
+condition computations, marks everything transitively reachable from them
+as *in-loop*, and reports those ops in separate
+``in_loop_bytes_by_kind`` / ``in_loop_count_by_kind`` buckets instead of
+silently folding them into the static totals.  Callers that know the trip
+counts (e.g. a scan over layers) multiply the in-loop bucket themselves;
+:mod:`repro.analysis` uses the same split to cross-check the jaxpr-level
+per-pass collective budgets.
 
 Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
 ~50 GB/s/link ICI (3 links/chip on a 2D torus slice).
@@ -12,7 +24,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, List, Set, Tuple
 
 PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip
@@ -30,6 +42,13 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 # e.g.  %all-gather.5 = bf16[16,512,7168]{2,1,0} all-gather(...)
 _RESULT_RE = re.compile(r"(\w[\w\-.]*)\[([0-9,]*)\]")
 
+# Computation header: '%name (params) -> type {' or 'ENTRY %name ... {'
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+# References to other computations from inside an op line.
+_CALLEE_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations|called_"
+    r"computations)=\{?\s*(%?[\w\.\-]+(?:\s*,\s*%?[\w\.\-]+)*)\s*\}?")
+
 
 def _bytes_of(dtype: str, dims: str) -> int:
     n = 1
@@ -41,50 +60,136 @@ def _bytes_of(dtype: str, dims: str) -> int:
 
 @dataclass
 class CollectiveStats:
+    """Collective ops of one HLO module, split by loop placement.
+
+    ``bytes_by_kind`` / ``count_by_kind`` cover ops that execute once per
+    program; ``in_loop_bytes_by_kind`` / ``in_loop_count_by_kind`` cover
+    ops inside while-loop bodies (once *per trip* — static bytes, the
+    caller owns the trip-count multiplier).
+    """
+
     bytes_by_kind: Dict[str, int] = field(default_factory=dict)
     count_by_kind: Dict[str, int] = field(default_factory=dict)
+    in_loop_bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    in_loop_count_by_kind: Dict[str, int] = field(default_factory=dict)
 
     @property
     def total_bytes(self) -> int:
+        """Static bytes of the once-per-program collectives."""
         return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_in_loop_bytes(self) -> int:
+        """Static bytes of the per-loop-trip collectives."""
+        return sum(self.in_loop_bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        """All collective op sites, loop placement ignored."""
+        return (sum(self.count_by_kind.values())
+                + sum(self.in_loop_count_by_kind.values()))
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Map computation name -> its op lines (best-effort text parse).
+
+    Lines outside any ``%name (...) -> ... {`` block (module headers, or
+    canned op-line snippets in tests) collect under the "" computation,
+    which is never in-loop.
+    """
+    comps: Dict[str, List[str]] = {"": []}
+    current = comps[""]
+    name = ""
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m is not None:
+            name = m.group(1)
+            current = comps.setdefault(name, [])
+            continue
+        s = line.strip()
+        if s == "}":
+            name = ""
+            current = comps[""]
+            continue
+        if s:
+            current.append(s)
+    return comps
+
+
+def _callees(line: str, known: Set[str]) -> List[str]:
+    out = []
+    for m in _CALLEE_RE.finditer(line):
+        for ref in m.group(1).split(","):
+            ref = ref.strip().lstrip("%")
+            if ref in known:
+                out.append(ref)
+    return out
+
+
+def _in_loop_computations(comps: Dict[str, List[str]]) -> Set[str]:
+    """Names of computations that execute inside some while loop.
+
+    Roots are every ``while`` op's body and condition computations; the
+    set closes transitively over computation references (fusions,
+    ``to_apply`` reductions, nested whiles, conditional branches).
+    """
+    known = set(comps)
+    roots: Set[str] = set()
+    for lines in comps.values():
+        for line in lines:
+            if re.search(r"\bwhile\(", line):
+                roots.update(_callees(line, known))
+    seen: Set[str] = set()
+    stack = list(roots)
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for line in comps.get(name, ()):
+            stack.extend(c for c in _callees(line, known) if c not in seen)
+    return seen
 
 
 def collective_bytes(hlo_text: str) -> CollectiveStats:
     """Sum result bytes of every collective op in (optimized) HLO text.
 
-    Collectives inside while-loop bodies (scan-over-layers) execute once
-    per layer; the HLO text contains the body once.  We multiply by the
-    trip count when the op sits inside a computation referenced by a
-    while-loop whose trip count is statically inferable from the name
-    (XLA names scan loops ``while``; trip counts are not in the text), so
-    instead we conservatively report *static* bytes and also expose the
-    per-kind op counts — the launcher multiplies by layer counts where it
-    knows the structure (see dryrun.py: ``loop_multiplier``).
+    Ops in computations reachable from a while-loop body/condition land in
+    the ``in_loop_*`` buckets (they run once per trip; trip counts are not
+    in the text — see :func:`while_trip_counts` for a best-effort
+    extraction); everything else lands in the static ``bytes_by_kind`` /
+    ``count_by_kind`` buckets.
     """
     stats = CollectiveStats()
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        if not s or s.startswith("//"):
-            continue
-        kind = None
-        for c in _COLLECTIVES:
-            # match op invocation: "<result> = <type> <kind>(" or fused name
-            if f" {c}(" in s or f" {c}-start(" in s or f" {c}-done(" in s:
-                kind = c
-                break
-        if kind is None:
-            continue
-        if f" {kind}-done(" in s:
-            continue  # counted at -start
-        lhs = s.split(f" {kind}(")[0].split(f" {kind}-start(")[0]
-        if "=" in lhs:
-            lhs = lhs.split("=", 1)[1]
-        total = 0
-        for dtype, dims in _RESULT_RE.findall(lhs):
-            if dtype in _DTYPE_BYTES:
-                total += _bytes_of(dtype, dims)
-        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + total
-        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    comps = _split_computations(hlo_text)
+    in_loop = _in_loop_computations(comps)
+    for comp_name, lines in comps.items():
+        looped = comp_name in in_loop
+        for s in lines:
+            if s.startswith("//"):
+                continue
+            kind = None
+            for c in _COLLECTIVES:
+                # match op invocation: "<result> = <type> <kind>(" or the
+                # async "-start(" form ("-done(" is skipped: same op)
+                if f" {c}(" in s or f" {c}-start(" in s:
+                    kind = c
+                    break
+            if kind is None:
+                continue
+            lhs = s.split(f" {kind}(")[0].split(f" {kind}-start(")[0]
+            if "=" in lhs:
+                lhs = lhs.split("=", 1)[1]
+            total = 0
+            for dtype, dims in _RESULT_RE.findall(lhs):
+                if dtype in _DTYPE_BYTES:
+                    total += _bytes_of(dtype, dims)
+            bk = (stats.in_loop_bytes_by_kind if looped
+                  else stats.bytes_by_kind)
+            ck = (stats.in_loop_count_by_kind if looped
+                  else stats.count_by_kind)
+            bk[kind] = bk.get(kind, 0) + total
+            ck[kind] = ck.get(kind, 0) + 1
     return stats
 
 

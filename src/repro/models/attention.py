@@ -16,6 +16,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import INVALID_SCORE
 from .common import ModelConfig, ParamSpec
 from .layers import apply_rope, rms_norm
 
@@ -112,7 +113,7 @@ def chunked_causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         mask = row[:, None] >= col[None, :]
         if sliding_window > 0:
             mask &= col[None, :] > row[:, None] - sliding_window
-        s = jnp.where(mask[None, None], s, jnp.asarray(-1e30, sdt))
+        s = jnp.where(mask[None, None], s, jnp.asarray(INVALID_SCORE, sdt))
         p = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("bhqk,bhkd->bqhd", p,
                           vT.astype(sdt)).astype(q.dtype)
@@ -192,7 +193,7 @@ def gqa_decode(p: dict, x: jnp.ndarray, cache: Tuple[jnp.ndarray, jnp.ndarray],
     valid = idx[None, None, None, :] <= pos
     if cfg.sliding_window > 0:
         valid &= idx[None, None, None, :] > pos - cfg.sliding_window
-    s = jnp.where(valid, s, -1e30)
+    s = jnp.where(valid, s, INVALID_SCORE)
     pw = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", pw, vv.astype(jnp.float32))
     o = o.astype(x.dtype).reshape(B, 1, -1)
@@ -272,7 +273,7 @@ def mla_decode(p: dict, x: jnp.ndarray, cache, pos: jnp.ndarray,
                       cr.astype(jnp.float32)))
     s = s * (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
     valid = jnp.arange(Smax)[None, None, None, :] <= pos
-    s = jnp.where(valid, s, -1e30)
+    s = jnp.where(valid, s, INVALID_SCORE)
     pw = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bhqk,bkr->bqhr", pw, cc.astype(jnp.float32))
     o = jnp.einsum("bqhr,rhk->bqhk", o_c.astype(x.dtype),

@@ -421,7 +421,9 @@ _ENGINES: "OrderedDict[tuple, ShardEngine]" = OrderedDict()
 
 def _engine(problem: SSVMProblem, mesh: Mesh, lam: float,
             axis: str) -> ShardEngine:
-    key = (id(problem.oracle), id(problem.data), id(mesh), float(lam), axis)
+    key = (id(problem.oracle), id(problem.data), id(mesh),
+           float(lam),  # repro: allow[R004] host float, cache key only
+           axis)
     eng = _ENGINES.get(key)
     if eng is None:
         eng = _ENGINES[key] = ShardEngine(problem, mesh, lam=lam, axis=axis)

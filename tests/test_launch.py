@@ -62,6 +62,43 @@ def test_hlo_collective_parser():
     assert stats.total_bytes > 0
 
 
+def test_hlo_collective_parser_in_loop_buckets():
+    """Collectives inside a while-loop body land in the in_loop buckets
+    (once per trip), not the static per-program totals; ops in
+    computations only reachable from the entry stay static."""
+    from repro.launch.hlo_analysis import collective_bytes
+    hlo = """
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %ar.1 = f32[4]{0} all-reduce(%v), to_apply=%add
+  ROOT %t = (s32[], f32[4]) tuple(%i, %ar.1)
+}
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[4]) -> f32[4] {
+  %ag.2 = f32[8]{0} all-gather(%x), dim=0
+  %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[4] get-tuple-element(%w), index=1
+}
+"""
+    stats = collective_bytes(hlo)
+    assert stats.count_by_kind == {"all-gather": 1}
+    assert stats.bytes_by_kind["all-gather"] == 8 * 4
+    assert stats.in_loop_count_by_kind == {"all-reduce": 1}
+    assert stats.in_loop_bytes_by_kind["all-reduce"] == 4 * 4
+    assert stats.total_bytes == 32          # static bucket only
+    assert stats.total_in_loop_bytes == 16  # caller owns the trip count
+    assert stats.total_count == 2
+
+
 def test_roofline_terms_math():
     from repro.launch.hlo_analysis import roofline_terms, PEAK_FLOPS
     t = roofline_terms(197e12, 819e9, 50e9, chips=256)
