@@ -1,0 +1,78 @@
+"""Recorder-overhead benchmark rows (``obs_overhead_*``).
+
+Runs the same small MP-BCFW problem twice — once bare, once with a
+:class:`repro.obs.RunRecorder` installed — and reports the host wall
+time per outer iteration for each, plus the delta.  The recorder rides
+the existing single per-iteration host sync (no extra device work), so
+its cost is pure host-side bookkeeping + JSONL writes; these rows keep
+that cost visible in the smoke CSV.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+
+def _build():
+    from repro.api import RunConfig, Solver
+    from repro.core.oracles import multiclass
+    from repro.core.selection import CostModel
+    from repro.data import synthetic
+
+    x, y = synthetic.usps_like(n=32, f=10, num_classes=4, seed=11)
+    problem = multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), 4)
+
+    def make(recorder=None):
+        cfg = RunConfig(lam=0.1, algo="mpbcfw", cap=8, ttl=5,
+                        max_iters=8, max_approx_passes=12, approx_batch=4,
+                        seed=0,
+                        cost_model=CostModel(oracle_cost=1.0,
+                                             plane_cost=1e-3))
+        return Solver(problem, cfg, recorder=recorder)
+
+    return make
+
+
+def _timed_run(solver, iters: int) -> float:
+    t0 = time.perf_counter()
+    solver.run()
+    return (time.perf_counter() - t0) / iters
+
+
+def main(smoke: bool = False) -> List[Tuple]:
+    from repro.obs import RunRecorder
+
+    make = _build()
+    iters = 8
+    # Warm-up compiles both paths so the rows time steady-state host work,
+    # not jit tracing.
+    _timed_run(make(), iters)
+
+    bare_s = _timed_run(make(), iters)
+
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    try:
+        with RunRecorder(path) as rec:
+            rec_s = _timed_run(make(recorder=rec), iters)
+    finally:
+        os.unlink(path)
+
+    rows: List[Tuple] = [
+        ("obs_overhead_bare_s_per_iter", round(bare_s, 6),
+         "mpbcfw without recorder"),
+        ("obs_overhead_recorded_s_per_iter", round(rec_s, 6),
+         "mpbcfw + RunRecorder (JSONL)"),
+        ("obs_overhead_delta_s_per_iter", round(rec_s - bare_s, 6),
+         "host-side recorder cost"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(smoke=True):
+        print(",".join(str(x) for x in r))

@@ -13,6 +13,8 @@ Prints ``name,value,derived`` CSV rows:
   * kernel_* hot-path microbenchmarks (us per call)
   * analysis_* static-analyzer wall time + per-engine statically counted
              collectives (the budgets ``repro.analysis`` proves)
+  * obs_overhead_* host wall time per iteration with and without a
+             ``repro.obs.RunRecorder`` installed (recorder cost)
   * dryrun_/roofline_ summary of the (arch x shape) grid
 
 ``--smoke``: a fast CI-friendly subset — 4-iteration convergence runs and
@@ -28,14 +30,15 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     smoke = "--smoke" in sys.argv
-    from . import (analysis_bench, kernel_bench, paper_convergence,
-                   sharded_bench, workset_stats)
+    from . import (analysis_bench, kernel_bench, obs_bench,
+                   paper_convergence, sharded_bench, workset_stats)
     rows = []
     rows += paper_convergence.main(quick=quick or smoke)
     rows += workset_stats.main()
     rows += sharded_bench.main(smoke=smoke)
     rows += kernel_bench.main(smoke=smoke)
     rows += analysis_bench.main(smoke=smoke)
+    rows += obs_bench.main(smoke=smoke)
     if not smoke:
         from . import roofline_report
         rows += roofline_report.main()

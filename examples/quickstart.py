@@ -84,7 +84,12 @@ def main():
                                        cap=32, gap_tol=1e-3,
                                        cost_model=cm()))
     for row in solver.iterate():            # rows stream as iterations run
+        # cache_hit_rate / planes_evicted / oracle_share are measured
+        # on-device and drained through the same single host sync as the
+        # rest of the row (see the README's Observability section).
         print(f"  iter {row.iteration:2d}  gap {row.gap:.6f}  "
+              f"hit {row.cache_hit_rate:.2f}  evicted {row.planes_evicted}  "
+              f"oracle share {row.oracle_share:.2f}  "
               f"[{row.dispatches} dispatch / {row.host_syncs} sync]")
     print(f"stopped after {solver.iteration} of 50 iterations "
           f"(gap_tol=1e-3, final gap {solver.trace[-1].gap:.2e})")
@@ -125,6 +130,25 @@ def main():
     print(f"PlaneCache: planes {demo.planes.shape}  gram "
           f"{demo.gram.shape}  sizes {np.asarray(plane_cache.sizes(demo))}  "
           f"specs {plane_cache.partition_specs(layout).planes}")
+
+    # -- record a run: repro.obs (spans + metrics, zero extra syncs) -------
+    # The recorder is a Solver callback: it streams JSONL (meta, rows,
+    # spans, events, summary), exportable to Perfetto, and summarized by
+    # `python -m repro.obs run.jsonl`.
+    import tempfile
+
+    from repro.obs import RunRecorder, summarize_run
+
+    with tempfile.NamedTemporaryFile(suffix=".jsonl") as tmp:
+        with RunRecorder(tmp.name) as rec:
+            Solver(problem, RunConfig(lam=lam, algo="mpbcfw", max_iters=5,
+                                      cap=32, cost_model=cm()),
+                   recorder=rec).run()
+        s = summarize_run(tmp.name)
+        print(f"recorded run: {s['iterations']} iterations  "
+              f"oracle share {s['oracle_share_mean']:.2f}  "
+              f"host_syncs/iter <= "
+              f"{s['contract']['host_syncs_per_iter_max']}")
 
     # -- accuracy of the learned (averaged) predictor ----------------------
     res = Solver(problem, RunConfig(lam=lam, algo="mpbcfw-avg",

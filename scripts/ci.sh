@@ -7,6 +7,12 @@
 #                            #   host devices (XLA_FLAGS)
 #   scripts/ci.sh --analyze  # + the static program-contract checker
 #                            #   (python -m repro.analysis --strict)
+#   scripts/ci.sh --obs      # only the obs stage: two recorded smoke
+#                            #   runs, JSONL schema validation, Perfetto
+#                            #   export round-trip, and a run diff
+#
+# The obs stage also runs as part of the default flow (after the test
+# suite, before the benchmark smoke) so a broken recorder/CLI fails CI.
 #
 # pytest.ini keeps the deprecated driver.run shim's DeprecationWarning
 # filtered (its firing is itself asserted by tests/test_api.py), along
@@ -21,12 +27,41 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 MESH=0
 ANALYZE=0
+OBS_ONLY=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--mesh" ]]; then MESH=1
   elif [[ "$a" == "--analyze" ]]; then ANALYZE=1
+  elif [[ "$a" == "--obs" ]]; then OBS_ONLY=1
   else ARGS+=("$a"); fi
 done
+
+obs_stage() {
+  # End-to-end obs check: record two tiny runs, validate them against
+  # the JSONL schema, round-trip the Chrome-trace/Perfetto export, and
+  # summarize + diff them through the CLI.
+  local dir
+  dir="$(mktemp -d)"
+  trap 'rm -rf "$dir"' RETURN
+  python -m repro.obs --smoke-run "$dir/a.jsonl" --algo mpbcfw --iters 5
+  python -m repro.obs --smoke-run "$dir/b.jsonl" --algo mpbcfw-gram --iters 5
+  python -m repro.obs --validate "$dir/a.jsonl" "$dir/b.jsonl"
+  python -m repro.obs --export-trace "$dir/a.jsonl" -o "$dir/a.trace.json"
+  python - "$dir/a.trace.json" <<'EOF'
+import json, sys
+events = json.load(open(sys.argv[1]))["traceEvents"]
+assert events, "empty Perfetto export"
+assert any(e.get("ph") == "X" for e in events), "no span events"
+print(f"{sys.argv[1]}: round-trip OK ({len(events)} events)")
+EOF
+  python -m repro.obs "$dir/a.jsonl"
+  python -m repro.obs --diff "$dir/a.jsonl" "$dir/b.jsonl"
+}
+
+if [[ "$OBS_ONLY" == 1 ]]; then
+  obs_stage
+  exit 0
+fi
 
 if [[ "$ANALYZE" == 1 ]]; then
   # Static gate first: traces every registered engine's fused programs,
@@ -41,10 +76,12 @@ if [[ "$MESH" == 1 ]]; then
   # subprocess smokes force the count themselves; the stage-level flag
   # covers any in-process multi-device collection).
   python -m pytest -x -q -m "not mesh" ${ARGS[@]+"${ARGS[@]}"}
+  obs_stage
   python -m benchmarks.run --smoke
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m mesh ${ARGS[@]+"${ARGS[@]}"}
 else
   python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+  obs_stage
   python -m benchmarks.run --smoke
 fi

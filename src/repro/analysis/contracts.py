@@ -301,7 +301,50 @@ def check_trace(et: EngineTrace) -> Tuple[List[Finding],
                 f"{f.f64_avals} float64 aval(s) in the traced program "
                 f"(accum_dtype={caps.accum_dtype})"))
         findings.extend(_check_accum_dtype(et, prog))
+        findings.extend(_check_obs_drain(et, prog))
     return findings, facts
+
+
+def _check_obs_drain(et: EngineTrace, prog: ProgramTrace) -> List[Finding]:
+    """Rule J006: multipass engines must drain the on-device obs
+    counters (:class:`repro.core.types.ObsMetrics`) through the stats
+    payload of the fused outer program — the *existing* single
+    per-iteration host sync.  Together with the J003 host-callback
+    budget (0 for the whole family) this statically proves the obs
+    layer adds zero host callbacks and zero extra syncs.
+
+    Only the built-in mpbcfw family is held to this (its engines all
+    return ApproxBatchStats); a third-party multipass engine with its
+    own stats type is exempt unless it adopts the field.
+    """
+    if not et.caps.multipass or prog.name != "outer":
+        return []
+    where = f"{et.label}:{prog.name}"
+    stats_shape = prog.out_shape[2]
+    if not hasattr(stats_shape, "metrics"):
+        return []  # third-party stats payload: not under this contract
+    metrics = stats_shape.metrics
+    if metrics is None:
+        return [Finding(
+            "J006", where,
+            "stats.metrics is None: the fused outer program does not "
+            "accumulate the ObsMetrics counters on device, so the obs "
+            "layer would need a second host sync to report them")]
+    out: List[Finding] = []
+    for fld in ("ttl_evicted", "lru_evicted", "occupancy",
+                "nonempty_blocks"):
+        leaf = getattr(metrics, fld, None)
+        if leaf is None:
+            out.append(Finding(
+                "J006", where,
+                f"stats.metrics.{fld} missing from the drained counters"))
+        elif leaf.shape != () or str(leaf.dtype) != "int32":
+            out.append(Finding(
+                "J006", where,
+                f"stats.metrics.{fld} is {leaf.dtype}{list(leaf.shape)}, "
+                "expected a () int32 scalar (one fixed-size rider on the "
+                "existing sync)"))
+    return out
 
 
 def _check_accum_dtype(et: EngineTrace,

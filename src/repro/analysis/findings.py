@@ -24,6 +24,10 @@ RULES: Dict[str, str] = {
     "J004": "mesh-capable engine does not declare collective budgets",
     "J005": "dtype discipline: float64 aval in a traced program, or dual "
             "telemetry not carried in the declared accum_dtype",
+    "J006": "obs drain contract: a multipass engine's fused outer "
+            "program must return the on-device ObsMetrics counters "
+            "inside its stats payload (so the obs layer rides the "
+            "existing single host sync and adds zero host callbacks)",
     # Layer 2: compiled-HLO cross-checks
     "H001": "optimized HLO contains more collective ops than the jaxpr "
             "(XLA introduced a collective, e.g. a hidden all-reduce)",

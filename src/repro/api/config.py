@@ -57,6 +57,18 @@ class TraceRow:
     approx_passes: int      # approximate passes this iteration (Fig. 6)
     host_syncs: int = 1     # device->host syncs in the control loop
     dispatches: int = 1     # program dispatches in the control loop
+    # Obs columns (repro.obs).  Accumulated on device inside the fused
+    # outer-iteration program and drained through the iteration's single
+    # host sync (ObsMetrics riding in ApproxBatchStats); engines without
+    # the multipass cache report the defaults.
+    cache_hit_rate: float = 0.0   # fraction of blocks with >= 1 cached
+    #                               plane (an approx visit to such a block
+    #                               is a cache hit; 0 planes falls back)
+    planes_evicted: int = 0       # TTL + LRU evictions this iteration
+    oracle_share: float = 1.0     # modeled share of iteration time spent
+    #                               in the exact max-oracle pass (the
+    #                               paper's costly-oracle regime has this
+    #                               near 1)
 
 
 @dataclass

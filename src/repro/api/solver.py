@@ -42,8 +42,8 @@ the uninterrupted one.
 from __future__ import annotations
 
 import time
-from contextlib import contextmanager
-from typing import Callable, Iterable, Iterator, List, Optional
+from contextlib import contextmanager, nullcontext
+from typing import Callable, Iterable, Iterator, List, Optional, TYPE_CHECKING
 
 import jax.numpy as jnp
 import numpy as np
@@ -51,6 +51,10 @@ import numpy as np
 from ..checkpoint.manager import CheckpointManager
 from ..core.selection import (CostModel, IterationTracker,
                               attribute_wall_time)
+from ..obs.metrics import MetricsRegistry
+
+if TYPE_CHECKING:  # annotation only
+    from ..obs.recorder import RunRecorder
 from ..core.ssvm import batched_oracle, dual_value, weights_of
 from ..core.averaging import extract as extract_average
 from ..core.types import SSVMProblem
@@ -199,7 +203,8 @@ class Solver:
                  stop: Iterable[StoppingCriterion] = (),
                  callbacks: Iterable[Callback] = (),
                  checkpoint: Optional[CheckpointManager] = None,
-                 checkpoint_every: int = 0):
+                 checkpoint_every: int = 0,
+                 recorder: Optional["RunRecorder"] = None):
         entry = engine_entry(cfg.algo)
         validate_config(entry, cfg)
         self.problem = problem
@@ -209,6 +214,19 @@ class Solver:
         self.callbacks = list(callbacks)
         self.checkpoint = checkpoint
         self.checkpoint_every = int(checkpoint_every)
+        # Observability: the recorder (when installed) runs as an ordinary
+        # row callback and owns the metrics registry; without one the
+        # Solver still keeps a registry so checkpoints always carry the
+        # metric series.  Neither path adds host syncs, dispatches, or
+        # host callbacks to the traced programs — the device-side
+        # counters ride the existing per-iteration stats sync.
+        self.recorder = recorder
+        if recorder is not None:
+            self.metrics: MetricsRegistry = recorder.registry
+            self.callbacks.append(recorder)
+            recorder.open_run(self)
+        else:
+            self.metrics = MetricsRegistry()
         self.stop_criteria: List[StoppingCriterion] = [
             MaxIters(cfg.max_iters)]
         if cfg.gap_tol is not None:
@@ -271,11 +289,25 @@ class Solver:
         self._clock.start()
         inner = (self._iterate_multipass() if self.caps.multipass
                  else self._iterate_simple())
+        ledger = getattr(self.engine, "ledger", None)
         while not self._should_stop():
-            row = next(inner)
+            ann = (self.recorder.step_annotation(self._it)
+                   if self.recorder is not None else nullcontext())
+            coll0 = getattr(ledger, "collectives", 0)
+            bytes0 = getattr(ledger, "collective_bytes", 0)
+            with ann:
+                row = next(inner)
             self.trace.append(row)
             self._last_row = row
             self._it += 1
+            if self.recorder is None:
+                # With a recorder the registry update happens in its row
+                # callback (it also diffs the ledger); avoid double counts.
+                self.metrics.observe_row(
+                    row,
+                    collectives=getattr(ledger, "collectives", 0) - coll0,
+                    collective_bytes=getattr(ledger, "collective_bytes",
+                                             0) - bytes0)
             for cb in self.callbacks:
                 cb(self, row)
             if (self.checkpoint is not None and self.checkpoint_every > 0
@@ -350,6 +382,12 @@ class Solver:
             mp, clock_dev, stats = engine.outer_iteration(
                 mp, perm, perms, clock_dev, ttl=cfg.ttl)
             st = engine.read_stats(stats)  # the iteration's single sync
+            # Device-accumulated obs counters arrive on the same sync.
+            # Capture them from the *outer* program's stats: overflow
+            # continuations never insert/evict, so their metrics carry
+            # zero evictions and the same occupancy.  Third-party stats
+            # payloads without the field report defaults.
+            met = getattr(st, "metrics", None)
             f_exact = float(st.f_entry)
             ws_total = int(st.ws_total)
             k = int(st.passes_run)
@@ -411,6 +449,20 @@ class Solver:
             # iteration sees the post-exact-pass sets and the per-pass
             # mean is exactly ws_total/n.
             ws_mean = ws_total / n
+            # Obs columns.  oracle_share uses the same modeled weights as
+            # the wall-time attribution above, so it is identical across
+            # engines given identical pass schedules (bitwise: floats
+            # from the same host arithmetic) and defined in both clock
+            # modes.
+            w_exact = self._est_exact
+            w_total = w_exact + sum(self._est_plane * max(p, 1)
+                                    for p in planes_all)
+            oracle_share = w_exact / w_total if w_total > 0 else 1.0
+            if met is not None:
+                hit_rate = int(met.nonempty_blocks) / n
+                evicted = int(met.ttl_evicted) + int(met.lru_evicted)
+            else:
+                hit_rate, evicted = 0.0, 0
             with clock.exclude():
                 primal, dual, primal_avg = engine.evaluate(mp)
             f_end = dual
@@ -419,7 +471,9 @@ class Solver:
                 it, int(mp.inner.n_exact), int(mp.inner.n_approx),
                 clock.now(), primal, dual, primal - dual, primal_avg,
                 ws_mean, n_approx_passes,
-                led1[0] - led0[0], led1[2] - led0[2])
+                led1[0] - led0[0], led1[2] - led0[2],
+                cache_hit_rate=hit_rate, planes_evicted=evicted,
+                oracle_share=oracle_share)
 
     # -- checkpoint / resume ------------------------------------------------
 
@@ -428,9 +482,10 @@ class Solver:
         """Checkpoint the optimizer state + host control-loop state.
 
         Returns the step saved under (default: the current iteration).
-        Under a CostModel the checkpoint is sufficient for bit-for-bit
-        resume; in wall-clock mode the calibrated cost estimates and the
-        virtual elapsed time are restored best-effort.
+        The manifest carries the CostModel/wall calibration constants
+        explicitly (``extra["calibration"]``) and the metrics-registry
+        snapshot (top-level ``metrics``), so a resumed run continues both
+        the device rule's cost estimates and its metric series exactly.
         """
         manager = manager or self.checkpoint
         if manager is None:
@@ -452,12 +507,27 @@ class Solver:
                          if self._last_row is not None else None),
             "rng_state": _rng_state_to_json(self._rng),
             "clock_now": self._clock.now(),
+            # The cost-calibration state, first-class: the slope rule's
+            # per-pass constants plus the wall-regression window that
+            # produced them.  (JSON round-trips Python floats exactly —
+            # repr-based — so resume is bit-for-bit in both clock modes.)
+            "calibration": {
+                "est_exact": self._est_exact,
+                "est_plane": self._est_plane,
+                "wall_x": list(self._wall_x),
+                "wall_y": list(self._wall_y),
+            },
+            # legacy flat spellings (one release, pre-obs checkpoints)
             "est_exact": self._est_exact,
             "est_plane": self._est_plane,
             "wall_x": self._wall_x,
             "wall_y": self._wall_y,
         }
-        manager.save(step, tree, extra=extra)
+        span = (self.recorder.span("checkpoint_save", step=step)
+                if self.recorder is not None else nullcontext())
+        with span:
+            manager.save(step, tree, extra=extra,
+                         metrics=self.metrics.snapshot())
         return step
 
     @classmethod
@@ -472,6 +542,15 @@ class Solver:
         have produced.
         """
         solver = cls(problem, cfg, **solver_kwargs)
+        span = (solver.recorder.span("checkpoint_restore")
+                if solver.recorder is not None else nullcontext())
+        with span:
+            return cls._restore_into(solver, cfg, manager, step)
+
+    @classmethod
+    def _restore_into(cls, solver: "Solver", cfg: RunConfig,
+                      manager: CheckpointManager,
+                      step: Optional[int]) -> "Solver":
         # Pin the step once up front: manifest and arrays must come from
         # the same checkpoint even if another process commits a newer
         # step mid-restore.
@@ -502,10 +581,19 @@ class Solver:
             solver._clock._wall0 = time.perf_counter() - now
             solver._clock._excluded = 0.0
             solver._clock._started = True
-        solver._est_exact = float(extra.get("est_exact",
-                                            solver._est_exact))
-        solver._est_plane = float(extra.get("est_plane",
-                                            solver._est_plane))
-        solver._wall_x = [float(x) for x in extra.get("wall_x", [])]
-        solver._wall_y = [float(y) for y in extra.get("wall_y", [])]
+        # Calibration constants: the explicit manifest entry is the
+        # source of truth; pre-obs checkpoints fall back to the legacy
+        # flat keys.  No casting games — JSON floats restore bit-for-bit.
+        cal = extra.get("calibration") or {
+            "est_exact": extra.get("est_exact", solver._est_exact),
+            "est_plane": extra.get("est_plane", solver._est_plane),
+            "wall_x": extra.get("wall_x", []),
+            "wall_y": extra.get("wall_y", []),
+        }
+        solver._est_exact = float(cal["est_exact"])
+        solver._est_plane = float(cal["est_plane"])
+        solver._wall_x = [float(x) for x in cal.get("wall_x", [])]
+        solver._wall_y = [float(y) for y in cal.get("wall_y", [])]
+        # Continue the metric series where the checkpointed run left off.
+        solver.metrics.load(manifest.get("metrics"))
         return solver

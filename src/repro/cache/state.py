@@ -49,6 +49,25 @@ class PlaneCache(NamedTuple):
     last_active: jnp.ndarray
     gram: Optional[jnp.ndarray] = None
 
+    # -- on-device obs counter sources (repro.obs) -------------------------
+    # Traced reductions over the occupancy mask; computed *inside* the
+    # fused programs so their values ride the existing single per-iteration
+    # host sync (see repro.core.types.ObsMetrics).  NOTE: these reduce over
+    # the block dimension — on a mesh-sharded cache call them only inside
+    # ``shard_map`` (per-shard) and fold across shards through an existing
+    # collective; a global reduction outside shard_map would make GSPMD
+    # insert an extra all-reduce and trip the repro.analysis HLO budgets.
+
+    @property
+    def occupancy(self) -> jnp.ndarray:
+        """() int32 — total valid cached planes."""
+        return jnp.sum(self.valid).astype(jnp.int32)
+
+    @property
+    def nonempty_blocks(self) -> jnp.ndarray:
+        """() int32 — blocks holding at least one valid plane."""
+        return jnp.sum(jnp.any(self.valid, axis=1)).astype(jnp.int32)
+
 
 @dataclass(frozen=True)
 class CacheLayout:

@@ -47,8 +47,14 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> pathlib.Path:
         return self.dir / f"step_{step:010d}"
 
-    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
-        """Atomic: write to tmp dir, fsync, rename into place."""
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             metrics: Optional[dict] = None):
+        """Atomic: write to tmp dir, fsync, rename into place.
+
+        ``metrics`` is an optional :meth:`repro.obs.MetricsRegistry.
+        snapshot` stored as a top-level manifest key, so a resumed run
+        continues its metric series instead of restarting them from zero.
+        """
         tmp = self.dir / f".tmp_step_{step:010d}_{os.getpid()}"
         if tmp.exists():
             shutil.rmtree(tmp)
@@ -66,6 +72,7 @@ class CheckpointManager:
             "step": step,
             "time": time.time(),
             "extra": extra or {},
+            "metrics": metrics or {},
             "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in arrays.items()},
         }

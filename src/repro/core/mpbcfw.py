@@ -45,8 +45,8 @@ from .averaging import update_average
 from .bcfw import block_update
 from .selection import slope_continue_jnp
 from .ssvm import dual_value, weights_of
-from .types import (ApproxBatchStats, AveragingState, BCFWState, SlopeClock,
-                    SSVMProblem)
+from .types import (ApproxBatchStats, AveragingState, BCFWState, ObsMetrics,
+                    SlopeClock, SSVMProblem)
 
 
 class MPState(NamedTuple):
@@ -263,7 +263,16 @@ def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
     mp, t, stats = slope_batched_loop(
         mp, perms, clock, step=step, f_entry=f_entry, cost=cost,
         planes_per_pass=total_planes, run_all=run_all)
-    return mp, clock._replace(t=t), stats
+    # Obs counters ride the stats payload through the existing single host
+    # sync.  A standalone multi-pass program (the driver's overflow
+    # continuation) never inserts or evicts, so both eviction counters are
+    # zero; :func:`outer_iteration` overwrites them with the fused
+    # iteration's true deltas.
+    zero = jnp.zeros((), jnp.int32)
+    metrics = ObsMetrics(ttl_evicted=zero, lru_evicted=zero,
+                         occupancy=total_planes,
+                         nonempty_blocks=mp.cache.nonempty_blocks)
+    return mp, clock._replace(t=t), stats._replace(metrics=metrics)
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "steps", "run_all"))
@@ -299,11 +308,21 @@ def outer_iteration(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
     supplies the cost constants ``clock.t`` (modeled exact-pass cost) and
     ``clock.plane_cost``.  Returns ``(mp, clock, stats)``.
     """
+    occ0 = mp.cache.occupancy                 # before TTL eviction
     mp = begin_iteration(mp, ttl)
+    occ1 = mp.cache.occupancy                 # after TTL eviction
     clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
     mp = exact_pass(problem, mp, perm, lam)
-    return multi_approx_pass(mp, perms, clock, lam=lam, steps=steps,
-                             run_all=run_all)
+    occ2 = mp.cache.occupancy                 # after the insert scan
+    mp, clock, stats = multi_approx_pass(mp, perms, clock, lam=lam,
+                                         steps=steps, run_all=run_all)
+    # Eviction accounting, still on device: TTL dropped occ0-occ1 planes;
+    # the exact pass inserted one plane per visited block, so the LRU
+    # overwrites are the inserts that did *not* grow the cache.
+    n_inserts = jnp.asarray(perm.shape[0], jnp.int32)
+    metrics = stats.metrics._replace(ttl_evicted=occ0 - occ1,
+                                     lru_evicted=occ1 + n_inserts - occ2)
+    return mp, clock, stats._replace(metrics=metrics)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1),

@@ -115,6 +115,10 @@ class SyncLedger:
     host_syncs: int = 0
     collectives: int = 0
     dispatches: int = 0
+    # Cross-device traffic in bytes (trace-time payload sizes x runtime
+    # pass counts, charged alongside ``collectives``).  Deliberately NOT
+    # part of :meth:`counts` — that 3-tuple is a stable assertion surface.
+    collective_bytes: int = 0
 
     def counts(self) -> tuple:
         """Snapshot ``(host_syncs, collectives, dispatches)``.
@@ -135,8 +139,9 @@ class SyncLedger:
     def dispatched(self, n: int = 1) -> None:
         self.dispatches += n
 
-    def collected(self, n: int = 1) -> None:
+    def collected(self, n: int = 1, nbytes: int = 0) -> None:
         self.collectives += n
+        self.collective_bytes += nbytes
 
 
 @dataclass

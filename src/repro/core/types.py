@@ -11,7 +11,7 @@ round-trips.  Conventions follow the paper:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -94,6 +94,23 @@ class SlopeClock(NamedTuple):
     plane_cost: jnp.ndarray  # cost charged per cached plane per pass
 
 
+class ObsMetrics(NamedTuple):
+    """On-device observability counters for one outer iteration.
+
+    All fields are () int32 scalars accumulated *inside* the fused
+    outer-iteration program and drained through the existing single
+    per-iteration host sync (they ride along in
+    :class:`ApproxBatchStats.metrics`), so reading them costs zero extra
+    host callbacks or device round-trips — the contract
+    ``repro.analysis`` re-proves statically (rule J006).
+    """
+
+    ttl_evicted: jnp.ndarray      # () i32 planes dropped by TTL eviction
+    lru_evicted: jnp.ndarray      # () i32 planes overwritten by LRU insert
+    occupancy: jnp.ndarray        # () i32 total cached planes (post exact)
+    nonempty_blocks: jnp.ndarray  # () i32 blocks with >=1 cached plane
+
+
 class ApproxBatchStats(NamedTuple):
     """Per-pass telemetry from one batched ``multi_approx_pass`` program.
 
@@ -115,3 +132,8 @@ class ApproxBatchStats(NamedTuple):
     #                          Fig.-5 statistic, present even when zero
     #                          approximate passes run, so the driver never
     #                          needs a second sync to report it
+    metrics: Optional["ObsMetrics"] = None
+    #                          on-device obs counters (None in legacy or
+    #                          third-party stats payloads; an absent leaf is
+    #                          an empty pytree node, so existing programs'
+    #                          shapes are unchanged)

@@ -30,7 +30,8 @@ from ..core.bcfw import line_search_gamma
 from ..core.mpbcfw import MPState
 from ..core.selection import SyncLedger
 from ..core.ssvm import dual_value, weights_of
-from ..core.types import ApproxBatchStats, SlopeClock, SSVMProblem
+from ..core.types import (ApproxBatchStats, ObsMetrics, SlopeClock,
+                          SSVMProblem)
 from . import layout
 from .telemetry import CollectiveTrace
 
@@ -104,10 +105,12 @@ class ShardEngine:
         """Fetch multi-pass telemetry (the iteration's single sync) and
         charge the program's runtime collectives to the ledger."""
         st = self.ledger.sync(stats)
+        passes = int(st.passes_run)
         self.ledger.collected(
             self.collectives.count("multi_approx", "setup")
-            + int(st.passes_run)
-            * self.collectives.count("multi_approx", "pass"))
+            + passes * self.collectives.count("multi_approx", "pass"),
+            nbytes=self.collectives.bytes_of("multi_approx", "setup")
+            + passes * self.collectives.bytes_of("multi_approx", "pass"))
         return st
 
     @property
@@ -128,15 +131,36 @@ class ShardEngine:
         use_gram, steps = self.use_gram, self.gram_steps
         trace = self.collectives
 
-        def local_prog(mp: MPState, perms, clock: SlopeClock):
+        def local_prog(mp: MPState, perms, clock: SlopeClock, blk_evt):
             # Runs per shard: mp leaves are the LOCAL slices of the layout
             # (phi_i (n_local, d+1), cache (n_local, cap, .)), O(d) state
             # is replicated.  Exactly one psum per pass, one for setup.
+            #
+            # ``blk_evt`` is this shard's (n_local, 2) i32 slice of the
+            # per-block [ttl_evicted, lru_evicted] counters the fused
+            # outer program computes around eviction + the exact epoch
+            # (all zeros for a standalone multi-pass program).  Its
+            # per-shard partial sums ride the *existing* setup psum as a
+            # packed i32 4-vector together with the occupancy counters —
+            # the obs drain adds zero collective sites and zero host
+            # callbacks (repro.analysis rule J006 + the H-layer budgets
+            # re-prove this statically).
             trace.begin("multi_approx")
             lo = jax.lax.axis_index(axis) * n_local
             f_entry = dual_value(mp.inner.phi, lam)
             local_planes = jnp.sum(mp.cache.valid).astype(jnp.int32)
-            total_planes = trace.psum(local_planes, axis, tag="setup")
+            local_nonempty = jnp.sum(
+                jnp.any(mp.cache.valid, axis=1)).astype(jnp.int32)
+            evt_local = jnp.sum(blk_evt, axis=0).astype(jnp.int32)
+            packed = trace.psum(
+                jnp.stack([local_planes, local_nonempty,
+                           evt_local[0], evt_local[1]]),
+                axis, tag="setup")
+            total_planes = packed[0]
+            metrics = ObsMetrics(ttl_evicted=packed[2],
+                                 lru_evicted=packed[3],
+                                 occupancy=packed[0],
+                                 nonempty_blocks=packed[1])
             cost = (clock.plane_cost
                     * jnp.maximum(total_planes, 1).astype(jnp.float32))
             # Approximate passes never insert/evict planes: the cache
@@ -243,16 +267,19 @@ class ShardEngine:
                                   k_approx=mp.avg.k_approx + done_blocks)
             cache = mp.cache._replace(last_active=last_active)
             return (mp._replace(inner=inner, cache=cache, avg=avg),
-                    clock._replace(t=t_end), stats)
+                    clock._replace(t=t_end),
+                    stats._replace(metrics=metrics))
 
         mp_specs = layout.mp_state_specs(self.axis, gram=self.use_gram)
         clock_specs = SlopeClock(t0=P(), f0=P(), t=P(), plane_cost=P())
         stats_specs = ApproxBatchStats(
             duals=P(None), times=P(None), planes=P(None), ran=P(None),
-            passes_run=P(), f_entry=P(), more=P(), ws_total=P())
+            passes_run=P(), f_entry=P(), more=P(), ws_total=P(),
+            metrics=ObsMetrics(ttl_evicted=P(), lru_evicted=P(),
+                               occupancy=P(), nonempty_blocks=P()))
         return shard_map(
             local_prog, mesh=mesh,
-            in_specs=(mp_specs, P(None, None), clock_specs),
+            in_specs=(mp_specs, P(None, None), clock_specs, P(axis, None)),
             out_specs=(mp_specs, clock_specs, stats_specs),
             check_rep=False)
 
@@ -272,7 +299,16 @@ class ShardEngine:
         iteration's single host sync.
         """
         if run_all not in self._multi:
-            self._multi[run_all] = jax.jit(self._multi_stage(run_all))
+            sm = self._multi_stage(run_all)
+            n = self.problem.n
+
+            def prog(mp, perms, clock):
+                # Standalone multi-pass programs never insert or evict:
+                # the per-block eviction counters are identically zero
+                # (the fused outer program supplies the real ones).
+                return sm(mp, perms, clock, jnp.zeros((n, 2), jnp.int32))
+
+            self._multi[run_all] = jax.jit(prog)
         self.ledger.dispatched()
         return self._multi[run_all](mp, perms, clock)
 
@@ -374,7 +410,14 @@ class ShardEngine:
 
         def prog(data, mp: MPState, chunk_ids, done, perms,
                  clock: SlopeClock):
+            # Per-block working-set sizes around eviction and the exact
+            # epoch feed the obs counters.  All three are axis=1
+            # reductions — elementwise in the (sharded) block dimension,
+            # so GSPMD keeps them shard-local; the only cross-shard
+            # reduction is the packed setup psum inside the multi stage.
+            sz0 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
             mp = mpbcfw.begin_iteration(mp, ttl)
+            sz1 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
             # Seed the slope rule from the on-device dual at iteration
             # entry (TTL eviction never changes phi, hence F).
             clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
@@ -384,7 +427,14 @@ class ShardEngine:
                 mp = mpbcfw.exact_pass(prob, mp, chunk_ids.reshape(-1), lam)
             else:
                 mp = epoch(data, mp, chunk_ids, done)
-            return multi(mp, perms, clock)
+            sz2 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
+            # One insert per visited block (every block appears once per
+            # epoch; straggler fallbacks — reachable only through direct
+            # tau_nice_pass calls, never this fused program — would count
+            # as LRU-neutral inserts).  Matches the single-device
+            # occ1 + n - occ2 accounting bit for bit.
+            blk_evt = jnp.stack([sz0 - sz1, sz1 + 1 - sz2], axis=1)
+            return multi(mp, perms, clock, blk_evt)
 
         return jax.jit(prog)
 

@@ -12,10 +12,15 @@ pass loop executes once per pass).  Runtime totals are then
 ``setup + passes_run * per_pass`` and are pushed into the host-side
 :class:`repro.core.selection.SyncLedger` together with the host-sync
 count.
+
+Each site also records the payload size in **bytes** (from the traced
+aval's shape/dtype, so it is exact for the compiled program), which is
+how the obs layer reports cross-device traffic budgets, not just
+collective counts (cf. distributed SSVM training, arXiv:1506.02620).
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 
@@ -25,22 +30,46 @@ class CollectiveTrace:
 
     def __init__(self) -> None:
         self.sites: Dict[str, Dict[str, int]] = {}
+        self.site_bytes: Dict[str, Dict[str, int]] = {}
         self._active: Dict[str, int] = {}
+        self._active_bytes: Dict[str, int] = {}
+        # No trace in flight until begin() — psum/commit outside a
+        # begin/commit window raise instead of AttributeError-ing.
+        self._program: Optional[str] = None
 
     def begin(self, program: str) -> None:
         """Start recording a fresh trace of ``program`` (called first in
         the traced body, so retraces overwrite instead of accumulate)."""
         self._active = {}
+        self._active_bytes = {}
         self._program = program
 
+    def _require_active(self, op: str) -> None:
+        if self._program is None:
+            raise RuntimeError(
+                f"CollectiveTrace.{op}() called outside a begin()/commit() "
+                "window: call begin(<program>) at the top of the traced "
+                "program body before routing collectives through the trace.")
+
     def psum(self, x, axis: str, *, tag: str):
-        """``lax.psum`` with a trace-time site count."""
+        """``lax.psum`` with a trace-time site count + payload bytes."""
+        self._require_active("psum")
         self._active[tag] = self._active.get(tag, 0) + 1
+        nbytes = sum(leaf.size * leaf.dtype.itemsize
+                     for leaf in jax.tree_util.tree_leaves(x))
+        self._active_bytes[tag] = self._active_bytes.get(tag, 0) + int(nbytes)
         return jax.lax.psum(x, axis)
 
     def commit(self) -> None:
         """Finish the trace started by :meth:`begin`."""
+        self._require_active("commit")
         self.sites[self._program] = dict(self._active)
+        self.site_bytes[self._program] = dict(self._active_bytes)
+        self._program = None
 
     def count(self, program: str, tag: str) -> int:
         return self.sites.get(program, {}).get(tag, 0)
+
+    def bytes_of(self, program: str, tag: str) -> int:
+        """Per-execution payload bytes of ``program``'s ``tag`` sites."""
+        return self.site_bytes.get(program, {}).get(tag, 0)
