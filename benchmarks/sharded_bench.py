@@ -17,9 +17,9 @@ data mesh and reports, per paper-style CSV row:
     iteration (1: the whole iteration is one fused program),
   * ``shard_dual_final``              end dual, sanity that it trains,
   * ``shard_driver_*``                the same contract through the public
-    entry point — ``repro.api.Solver`` with ``algo='mpbcfw-shard'`` (what
-    the deprecated ``driver.run`` shims to) — host syncs and dispatches
-    per outer iteration straight off the TraceRows,
+    entry point — ``repro.api.Solver`` with ``algo='mpbcfw-shard'`` —
+    host syncs and dispatches per outer iteration straight off the
+    TraceRows,
   * ``shard_gram_*``                  the sharded Sec-3.5 gram twin
     (``mpbcfw-shard-gram``: gram blocks inside the mesh-sharded
     PlaneCache) holding the same 1-dispatch/1-sync contract.

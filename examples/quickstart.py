@@ -33,12 +33,14 @@ Three layers, one seam each:
     mpbcfw-shard-tau   explicit tau-nice chunk size via ``RunConfig.tau``
     mpbcfw-shard-gram  the Sec-3.5 scheme on the mesh-sharded plane
                        cache; bit-for-bit ``mpbcfw-gram`` on 1 device
+    mpbcfw-gap         gap-proportional exact-pass sampling + gap-aware
+                       eviction (the ``repro.policy`` layer); with
+                       ``RunConfig.mesh`` it runs sharded
     ================== ======================================================
 
   * **The control loop** is :class:`repro.api.Solver`: streaming
     ``iterate()``, gap-tolerance / time-budget stopping, callbacks,
-    checkpoint/resume.  (``repro.core.driver.run`` remains as a
-    deprecated one-call shim over it.)
+    checkpoint/resume.
 
 Underneath every MP engine sits **the plane cache**
 (:mod:`repro.cache`): one :class:`~repro.cache.PlaneCache` pytree owns
@@ -130,6 +132,21 @@ def main():
     print(f"PlaneCache: planes {demo.planes.shape}  gram "
           f"{demo.gram.shape}  sizes {np.asarray(plane_cache.sizes(demo))}  "
           f"specs {plane_cache.partition_specs(layout).planes}")
+
+    # -- gap-proportional sampling: the repro.policy layer -----------------
+    # mpbcfw-gap swaps the exact pass's uniform epoch for gumbel-top-k
+    # sampling proportional to on-device per-block duality-gap estimates
+    # (Osokin et al.), spending the costly oracle where the gap still is.
+    # gap_frac sets the per-iteration oracle budget; the gap_total /
+    # gap_sampled TraceRow columns ride the same single host sync.
+    res = Solver(problem, RunConfig(lam=lam, algo="mpbcfw-gap",
+                                    max_iters=8, cap=32, gap_frac=0.25,
+                                    cost_model=cm())).run()
+    for row in res.trace:
+        print(f"  mpbcfw-gap iter {row.iteration:2d}  "
+              f"sampled {row.gap_sampled:3d}/{problem.n} blocks  "
+              f"gap_total {row.gap_total:.5f}  gap {row.gap:.5f}  "
+              f"exact calls {row.n_exact:4d}")
 
     # -- record a run: repro.obs (spans + metrics, zero extra syncs) -------
     # The recorder is a Solver callback: it streams JSONL (meta, rows,

@@ -10,16 +10,18 @@
 #   scripts/ci.sh --obs      # only the obs stage: two recorded smoke
 #                            #   runs, JSONL schema validation, Perfetto
 #                            #   export round-trip, and a run diff
+#   scripts/ci.sh --policy   # only the policy stage: the repro.policy
+#                            #   property tests + the gap-vs-uniform
+#                            #   oracle-call convergence smoke row
 #
-# The obs stage also runs as part of the default flow (after the test
-# suite, before the benchmark smoke) so a broken recorder/CLI fails CI.
+# The obs and policy stages also run as part of the default flow (after
+# the test suite, before/with the benchmark smoke) so a broken
+# recorder/CLI or a gap-sampling regression fails CI.
 #
-# pytest.ini keeps the deprecated driver.run shim's DeprecationWarning
-# filtered (its firing is itself asserted by tests/test_api.py), along
-# with the repro.core.workset / GramCache cache-shim warnings (asserted
-# by tests/test_cache.py); the smoke benchmarks exercise the public
-# Solver path end to end, including the fused score+select kernel vs the
-# two-step path and the sharded gram engine's dispatch contract.
+# The smoke benchmarks exercise the public Solver path end to end,
+# including the fused score+select kernel vs the two-step path, the
+# sharded gram engine's dispatch contract, and the policy layer's
+# gap-proportional sampler.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,11 +30,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 MESH=0
 ANALYZE=0
 OBS_ONLY=0
+POLICY_ONLY=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--mesh" ]]; then MESH=1
   elif [[ "$a" == "--analyze" ]]; then ANALYZE=1
   elif [[ "$a" == "--obs" ]]; then OBS_ONLY=1
+  elif [[ "$a" == "--policy" ]]; then POLICY_ONLY=1
   else ARGS+=("$a"); fi
 done
 
@@ -58,8 +62,23 @@ EOF
   python -m repro.obs --diff "$dir/a.jsonl" "$dir/b.jsonl"
 }
 
+policy_stage() {
+  # Policy-layer gate: the repro.policy property/parity tests, then the
+  # paper-scenario convergence smoke which must emit a
+  # gap_vs_uniform_oracle_calls_* row showing the gap-proportional
+  # sampler reaching the fixed gap target in fewer exact-oracle calls
+  # than uniform sampling on at least one scenario.
+  python -m pytest -x -q tests/test_policy.py
+  python -m benchmarks.paper_convergence --smoke
+}
+
 if [[ "$OBS_ONLY" == 1 ]]; then
   obs_stage
+  exit 0
+fi
+
+if [[ "$POLICY_ONLY" == 1 ]]; then
+  policy_stage
   exit 0
 fi
 
@@ -77,11 +96,13 @@ if [[ "$MESH" == 1 ]]; then
   # covers any in-process multi-device collection).
   python -m pytest -x -q -m "not mesh" ${ARGS[@]+"${ARGS[@]}"}
   obs_stage
+  policy_stage
   python -m benchmarks.run --smoke
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m mesh ${ARGS[@]+"${ARGS[@]}"}
 else
   python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
   obs_stage
+  policy_stage
   python -m benchmarks.run --smoke
 fi

@@ -208,10 +208,18 @@ def trace_engine(name: str, *, on_mesh: Optional[bool] = None,
         k = min(cfg.approx_batch, cfg.max_approx_passes)
         perms = jnp.tile(jnp.arange(n, dtype=jnp.int32), (k, 1))
         clock = mpbcfw.make_slope_clock(0.0, 0.0, 1.0, 1e-3)
-        add("outer",
-            lambda s, p, ps, c: engine.outer_iteration(s, p, ps, c,
-                                                       ttl=cfg.ttl),
-            (state, perm, perms, clock))
+        if caps.needs_key:
+            # Keyed sampling policies: the per-iteration PRNG key is a
+            # traced input of the fused outer program.
+            add("outer",
+                lambda s, p, ps, c, ky: engine.outer_iteration(
+                    s, p, ps, c, ttl=cfg.ttl, key=ky),
+                (state, perm, perms, clock, jax.random.PRNGKey(0)))
+        else:
+            add("outer",
+                lambda s, p, ps, c: engine.outer_iteration(s, p, ps, c,
+                                                           ttl=cfg.ttl),
+                (state, perm, perms, clock))
         add("continue",
             lambda s, ps, c: engine.continue_passes(s, ps, c),
             (state, perms, clock))
@@ -245,7 +253,7 @@ def trace_cases(engines: Optional[Iterable[str]] = None,
 
 
 # ---------------------------------------------------------------------------
-# The checks (rules J001-J005)
+# The checks (rules J001-J007)
 
 
 def _float_leaf_dtypes(tree) -> List[str]:
@@ -302,7 +310,73 @@ def check_trace(et: EngineTrace) -> Tuple[List[Finding],
                 f"(accum_dtype={caps.accum_dtype})"))
         findings.extend(_check_accum_dtype(et, prog))
         findings.extend(_check_obs_drain(et, prog))
+        findings.extend(_check_policy_contract(et, prog))
     return findings, facts
+
+
+def _check_policy_contract(et: EngineTrace,
+                           prog: ProgramTrace) -> List[Finding]:
+    """Rule J007: the policy layer must not loosen the program contract.
+
+    For engines that declare ``EngineCapabilities.policies``, the
+    declared names must resolve in the :mod:`repro.policy` registry to
+    exactly one sampling + one eviction + one oracle policy (the static
+    shape of a :class:`~repro.policy.PolicyBundle`).  Engines that also
+    declare ``needs_key`` run a keyed gap sampler, so their fused outer
+    program must drain the gap telemetry — ``stats.metrics.gap_total``
+    (() float32) and ``stats.metrics.gap_sampled`` (() int32) — through
+    the same stats payload as every other counter.  The budgets
+    themselves (1 dispatch, 1 host sync, declared collectives) are the
+    J001-J003 checks, which run unchanged on the policy-carrying
+    programs traced here.
+    """
+    caps = et.caps
+    if not getattr(caps, "policy_capable", False) or prog.name != "outer":
+        return []
+    where = f"{et.label}:{prog.name}"
+    out: List[Finding] = []
+    names = getattr(caps, "policies", None) or ()
+    if names:
+        from ..api.errors import UnsupportedConfigError
+        from ..policy import policy_kind
+
+        kinds: Dict[str, int] = {}
+        for nm in names:
+            try:
+                kind = policy_kind(nm)
+            except UnsupportedConfigError:
+                out.append(Finding(
+                    "J007", where,
+                    f"capability-declared policy {nm!r} is not "
+                    "registered in the repro.policy registry"))
+                continue
+            kinds[kind] = kinds.get(kind, 0) + 1
+        if not out and (sorted(kinds) != ["eviction", "oracle", "sampling"]
+                        or any(v != 1 for v in kinds.values())):
+            out.append(Finding(
+                "J007", where,
+                f"capability-declared policies {tuple(names)} resolve to "
+                f"kinds {kinds}; a bundle is exactly one sampling + one "
+                "eviction + one oracle policy"))
+    if getattr(caps, "needs_key", False):
+        stats_shape = prog.out_shape[2]
+        metrics = getattr(stats_shape, "metrics", None)
+        want = {"gap_total": "float32", "gap_sampled": "int32"}
+        for fld, dtype in want.items():
+            leaf = getattr(metrics, fld, None) if metrics is not None \
+                else None
+            if leaf is None:
+                out.append(Finding(
+                    "J007", where,
+                    f"keyed gap engine does not drain "
+                    f"stats.metrics.{fld} (gap telemetry must ride the "
+                    "existing single host sync)"))
+            elif leaf.shape != () or str(leaf.dtype) != dtype:
+                out.append(Finding(
+                    "J007", where,
+                    f"stats.metrics.{fld} is {leaf.dtype}"
+                    f"{list(leaf.shape)}, expected a () {dtype} scalar"))
+    return out
 
 
 def _check_obs_drain(et: EngineTrace, prog: ProgramTrace) -> List[Finding]:

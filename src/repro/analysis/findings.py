@@ -28,6 +28,13 @@ RULES: Dict[str, str] = {
             "program must return the on-device ObsMetrics counters "
             "inside its stats payload (so the obs layer rides the "
             "existing single host sync and adds zero host callbacks)",
+    "J007": "policy contract: capability-declared policy names must "
+            "resolve in the repro.policy registry (exactly one "
+            "sampling + one eviction + one oracle), and keyed "
+            "gap-sampling engines must drain gap_total (() float32) "
+            "and gap_sampled (() int32) through the same stats sync — "
+            "a policy-carrying program keeps 1 dispatch, 1 host sync, "
+            "and the declared collective budgets",
     # Layer 2: compiled-HLO cross-checks
     "H001": "optimized HLO contains more collective ops than the jaxpr "
             "(XLA introduced a collective, e.g. a hidden all-reduce)",
@@ -38,8 +45,8 @@ RULES: Dict[str, str] = {
     # Layer 3: AST source lint
     "R001": "raw +/-1e30 sentinel literal outside kernels/ops.py "
             "(use kernels.ops.INVALID_SCORE)",
-    "R002": "deprecated WorkSet/GramCache/driver.run outside the "
-            "compatibility shims",
+    "R002": "removed WorkSet/GramCache/driver.run spelled anywhere, or "
+            "a retired shim module still present in the tree",
     "R003": "direct lax.psum in repro.shard outside "
             "CollectiveTrace.psum (collectives must be trace-counted)",
     "R004": "implicit host sync (float()/np.asarray()/.item()/"

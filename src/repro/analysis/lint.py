@@ -8,8 +8,10 @@ that builds them):
 
   R001  raw ``+/-1e30`` sentinel literals outside ``kernels/ops.py`` —
         the masking sentinel has one home, ``kernels.ops.INVALID_SCORE``.
-  R002  deprecated ``WorkSet`` / ``GramCache`` / ``driver.run`` usage
-        outside the compatibility shims that define them.
+  R002  the removed ``WorkSet`` / ``GramCache`` / ``driver.run`` shims:
+        any use anywhere in the tree — and the mere existence of the
+        retired ``repro/core/workset.py`` shim module — is an error (the
+        one-release deprecation window is over).
   R003  direct ``lax.psum`` inside :mod:`repro.shard` outside
         ``CollectiveTrace.psum`` — collectives in the shard engine must
         go through the trace counter or the Layer-1 budgets lie.
@@ -40,15 +42,16 @@ from .findings import Finding
 _SENTINEL = float("1e30")
 
 #: rule -> path prefixes/files (relative, posix) the rule does NOT apply
-#: to: the sentinel's home, the deprecation shims, the trace counter.
+#: to: the sentinel's home, the trace counter.  R002 has no waivers
+#: anymore: the shims it used to exempt are deleted, so any spelling of
+#: the retired names is an error everywhere.
 ALLOWED: Dict[str, Tuple[str, ...]] = {
     "R001": ("repro/kernels/ops.py",),
-    "R002": ("repro/core/types.py", "repro/core/__init__.py",
-             "repro/core/workset.py", "repro/core/gram.py",
-             "repro/core/driver.py", "repro/cache/state.py",
-             "repro/cache/__init__.py"),
     "R003": ("repro/shard/telemetry.py",),
 }
+
+#: R002 existence check: shim modules that must not exist anymore.
+_RETIRED_MODULES = ("repro/core/workset.py",)
 
 #: R003 scope: the sharded engine package.
 _SHARD_SCOPE = ("repro/shard/",)
@@ -129,7 +132,7 @@ class _Linter(ast.NodeVisitor):
     def visit_Name(self, node: ast.Name) -> None:
         if node.id in ("WorkSet", "GramCache"):
             self._emit("R002", node,
-                       f"deprecated {node.id}; use repro.cache.PlaneCache"
+                       f"removed {node.id}; use repro.cache.PlaneCache"
                        + (" (gram blocks live inside the cache)"
                           if node.id == "GramCache" else ""))
         self.generic_visit(node)
@@ -139,11 +142,16 @@ class _Linter(ast.NodeVisitor):
         for alias in node.names:
             if alias.name in ("WorkSet", "GramCache"):
                 self._emit("R002", node,
-                           f"import of deprecated {alias.name} "
+                           f"import of removed {alias.name} "
                            f"from {mod!r}")
+            elif alias.asname in ("WorkSet", "GramCache"):
+                # rebinding the retired name (the old shims did exactly
+                # this) resurrects the spelling R002 retires
+                self._emit("R002", node,
+                           f"import aliased to removed {alias.asname}")
             if alias.name == "run" and mod.split(".")[-1] == "driver":
                 self._emit("R002", node,
-                           "deprecated driver.run; use repro.api.Solver")
+                           "removed driver.run; use repro.api.Solver")
         self.generic_visit(node)
 
     # -- attribute-shaped rules -------------------------------------------
@@ -153,7 +161,7 @@ class _Linter(ast.NodeVisitor):
         # R002: driver.run
         if node.attr == "run" and base == "driver":
             self._emit("R002", node,
-                       "deprecated driver.run; use repro.api.Solver")
+                       "removed driver.run; use repro.api.Solver")
         # R003: lax.psum outside CollectiveTrace in the shard package
         if (node.attr == "psum" and base in ("lax", "jax")
                 and _in_scope(self.rel, _SHARD_SCOPE)):
@@ -224,6 +232,14 @@ def run_lint_layer(root: Optional[Path] = None) -> List[Finding]:
     """Lint every ``*.py`` under ``root`` (default: the repo ``src/``)."""
     root = default_root() if root is None else Path(root)
     findings: List[Finding] = []
+    # R002 is an existence rule as well as a usage rule: the retired shim
+    # modules must be gone from the tree, not merely unimported.
+    for rel in _RETIRED_MODULES:
+        if (root / rel).exists():
+            findings.append(Finding(
+                "R002", f"{rel}:1",
+                "retired shim module still exists; its one-release "
+                "deprecation window is over — delete it"))
     for path in sorted(root.rglob("*.py")):
         rel = path.relative_to(root).as_posix()
         findings.extend(lint_source(rel, path.read_text()))

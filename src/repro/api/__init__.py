@@ -4,8 +4,8 @@ The stable seam between *tasks* (an :class:`OracleSpec` +
 :func:`build_problem`), *optimizers* (an :class:`Engine` registered
 under an algorithm name), and the *control loop* (:class:`Solver`, with
 streaming :meth:`Solver.iterate`, pluggable stopping criteria, callbacks
-and checkpoint/resume).  ``repro.core.driver.run`` is a thin deprecated
-shim over :class:`Solver`.
+and checkpoint/resume).  :class:`Solver` is the one entry point — the
+old ``repro.core.driver.run`` convenience shim is gone.
 
 Typical use::
 

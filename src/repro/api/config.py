@@ -11,7 +11,7 @@ declared capabilities.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, TYPE_CHECKING
+from typing import List, Optional, Tuple, TYPE_CHECKING
 
 import numpy as np
 from jax.sharding import Mesh
@@ -40,6 +40,13 @@ class RunConfig:
     #                                   (Osokin et al.-style gap stopping)
     time_budget: Optional[float] = None  # stop once clock.now() >= budget
     #                                      (seconds: wall or CostModel)
+    policies: Optional[Tuple[str, ...]] = None  # repro.policy bundle names
+    #                              (one sampling + one eviction + one
+    #                              oracle policy); None keeps the engine's
+    #                              own default bundle
+    gap_frac: float = 0.5   # gap-topk sampler: fraction of blocks whose
+    #                         exact oracle runs per iteration (resolved to
+    #                         a static k = max(1, round(gap_frac * n)))
 
 
 @dataclass
@@ -69,6 +76,12 @@ class TraceRow:
     #                               in the exact max-oracle pass (the
     #                               paper's costly-oracle regime has this
     #                               near 1)
+    # Gap-policy columns (engines tracking per-block duality gaps; the
+    # defaults are what non-gap engines report):
+    gap_total: Optional[float] = None  # sum of visited blocks' gap
+    #                               estimates after the exact pass
+    gap_sampled: int = 0          # blocks the sampling policy scheduled
+    #                               for the exact pass this iteration
 
 
 @dataclass

@@ -68,6 +68,19 @@ class EngineCapabilities:
                   ``RunConfig.mesh`` is None and to the mesh path when it
                   is set (``mpbcfw-gram``); the static analyzer traces
                   *both* configurations.
+      policy_capable: the factory accepts ``RunConfig.policies`` (a
+                  :mod:`repro.policy` bundle naming) and threads the
+                  bundle into its fused programs as a static argument.
+      needs_key:  the engine's policies consume a per-iteration PRNG key
+                  (keyed samplers); the solver draws one from its seeded
+                  stream and passes ``key=`` into ``outer_iteration``.
+      policies:   the default policy-bundle names this engine assembles
+                  when ``RunConfig.policies`` is None (``None`` for
+                  engines predating the policy layer — they run their
+                  baked-in uniform/ttl-lru/slope behaviour).  The static
+                  analyzer's J007 rule resolves these names against the
+                  policy registry and re-proves the dispatch/sync/
+                  collective budgets for the policy-carrying programs.
       note:       extra context appended to capability-mismatch errors
                   (e.g. *why* this engine cannot run on a mesh).
 
@@ -104,6 +117,9 @@ class EngineCapabilities:
     requires_tau: bool = False
     tau_requires_mesh: bool = False
     mesh_optional: bool = False
+    policy_capable: bool = False
+    needs_key: bool = False
+    policies: Optional[Tuple[str, ...]] = None
     collectives_per_pass: Optional[int] = None
     collectives_setup: Optional[int] = None
     host_callbacks: int = 0
@@ -124,7 +140,8 @@ class Engine(Protocol):
     def init_state(self, cap: int) -> Any: ...
 
     def outer_iteration(self, state: Any, perm, perms, clock, *,
-                        ttl: int) -> Tuple[Any, Any, Any]: ...
+                        ttl: int, key: Any = None
+                        ) -> Tuple[Any, Any, Any]: ...
 
     def continue_passes(self, state: Any, perms,
                         clock) -> Tuple[Any, Any, Any]: ...
@@ -214,9 +231,9 @@ def register_engine(name: str, factory: EngineFactory,
     """Bind ``name`` to an engine factory ``(problem, cfg) -> Engine``.
 
     This is the extension point: a registered name is immediately
-    accepted as ``RunConfig.algo`` by :class:`repro.api.Solver` (and the
-    ``driver.run`` shim), with capability validation and trace reporting
-    identical to the built-ins.
+    accepted as ``RunConfig.algo`` by :class:`repro.api.Solver`, with
+    capability validation and trace reporting identical to the
+    built-ins.
     """
     if not name or not isinstance(name, str):
         raise ValueError(f"engine name must be a non-empty str, got {name!r}")
@@ -302,3 +319,21 @@ def validate_config(entry: EngineEntry, cfg: RunConfig) -> None:
     if cfg.gap_tol is not None and cfg.gap_tol < 0.0:
         raise UnsupportedConfigError(
             f"gap_tol must be >= 0, got {cfg.gap_tol}")
+    if caps.multipass and cfg.ttl < 1:
+        # A non-positive TTL used to thread straight into evict_stale and
+        # silently evict every plane each iteration; reject it up front.
+        raise UnsupportedConfigError(
+            f"ttl must be >= 1 for {entry.name!r} (planes must survive "
+            f"at least the iteration that inserted them), got {cfg.ttl}")
+    if cfg.policies is not None:
+        if not caps.policy_capable:
+            policy_algos = _names_with(lambda c: c.policy_capable)
+            raise UnsupportedConfigError(
+                f"RunConfig.policies is only consumed by {policy_algos}; "
+                f"{entry.name!r} predates the policy layer.")
+        from ..policy import make_bundle
+        # Resolve names / kinds / parameter ranges now — the same typed
+        # error at Solver construction an unknown algo would raise (the
+        # factory re-builds the bundle with the real problem size; n=1
+        # here only affects fractional-budget rounding, not validity).
+        make_bundle(cfg.policies, cfg, 1)

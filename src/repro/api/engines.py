@@ -4,7 +4,9 @@ Importing this module registers the whole algorithm family —
 ``fw`` / ``ssg`` / ``bcfw`` / ``bcfw-avg`` (single-program engines),
 ``mpbcfw`` / ``mpbcfw-avg`` / ``mpbcfw-gram`` (:class:`FusedEngine`:
 each outer iteration is one fused device program; the gram variant is a
-``CacheLayout(gram=True)`` plane cache), and ``mpbcfw-shard`` /
+``CacheLayout(gram=True)`` plane cache), ``mpbcfw-gap`` (the
+:mod:`repro.policy` gap-proportional bundle on the fused engine, single
+device or mesh), and ``mpbcfw-shard`` /
 ``mpbcfw-shard-avg`` / ``mpbcfw-shard-tau`` / ``mpbcfw-shard-gram``
 (:class:`ShardDriverEngine` over :class:`repro.shard.ShardEngine` on a
 1-D data mesh; ``mpbcfw-gram`` + ``RunConfig.mesh`` resolves to the
@@ -35,6 +37,7 @@ from ..core.types import SSVMProblem
 from . import solver as solver_mod
 from .config import RunConfig
 from .engine import EngineCapabilities, register_engine
+from .errors import UnsupportedConfigError
 
 
 class IterStats(NamedTuple):
@@ -53,6 +56,24 @@ _SINGLE_DEVICE_BUDGET = dict(collectives_per_pass=0, collectives_setup=0,
                              host_callbacks=0)
 _SHARD_BUDGET = dict(collectives_per_pass=1, collectives_setup=1,
                      host_callbacks=0)
+
+
+def _policies(problem: SSVMProblem, cfg: RunConfig, *,
+              allow_key: bool = False, default=None):
+    """Resolve ``cfg.policies`` (or the engine's ``default`` names) into
+    a :class:`repro.policy.PolicyBundle`, or ``None`` for the baked-in
+    pre-policy behaviour."""
+    from ..policy import make_bundle
+    names = cfg.policies if cfg.policies is not None else default
+    if names is None:
+        return None
+    bundle = make_bundle(names, cfg, problem.n)
+    if bundle.needs_key and not allow_key:
+        raise UnsupportedConfigError(
+            f"policy bundle {tuple(names)} contains a keyed sampler "
+            f"({bundle.sampling.name!r}), but {cfg.algo!r} does not "
+            "thread per-iteration PRNG keys; use algo='mpbcfw-gap'.")
+    return bundle
 
 
 class _EngineBase:
@@ -90,25 +111,38 @@ class FusedEngine(_EngineBase):
 
     capabilities = EngineCapabilities(multipass=True,
                                       supports_averaging=True,
+                                      policy_capable=True,
+                                      policies=("uniform", "ttl-lru",
+                                                "slope"),
                                       **_SINGLE_DEVICE_BUDGET)
 
     def __init__(self, problem: SSVMProblem, lam: float, *,
                  use_gram: bool = False, gram_steps: int = 10,
-                 averaged: bool = False):
+                 averaged: bool = False, policies=None):
         super().__init__(problem, lam)
         self.use_gram, self.gram_steps = use_gram, gram_steps
         self.averaged = averaged
+        self.policies = policies
+        self.track_gap = policies is not None and policies.needs_gap
+        if self.track_gap and use_gram:
+            raise UnsupportedConfigError(
+                "gap-tracking policies are unsupported with the Sec-3.5 "
+                "gram scheme (the gram pass body exposes no per-visit "
+                "scores to fold into the gap vector)")
 
     def init_state(self, cap: int):
         return mpbcfw.init_mp_state(
-            self.problem, CacheLayout(cap=cap, gram=self.use_gram))
+            self.problem, CacheLayout(cap=cap, gram=self.use_gram,
+                                      track_gap=self.track_gap))
 
-    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
+    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int,
+                        key=None):
         """Dispatch one fused outer iteration (no blocking)."""
         self.ledger.dispatched()
         return mpbcfw.jit_outer_iteration(
             self.problem, mp, perm, perms, clock,
-            lam=self.lam, ttl=ttl, steps=self.gram_steps)
+            lam=self.lam, ttl=ttl, steps=self.gram_steps,
+            policies=self.policies, key=key)
 
     def continue_passes(self, mp, perms, clock):
         """Overflow batch of approximate passes (rare: only when an
@@ -116,7 +150,7 @@ class FusedEngine(_EngineBase):
         self.ledger.dispatched()
         return mpbcfw.jit_multi_approx_pass(
             self.problem, mp, perms, clock, lam=self.lam,
-            steps=self.gram_steps)
+            steps=self.gram_steps, policies=self.policies)
 
     def read_stats(self, stats):
         return self.ledger.sync(stats)
@@ -140,25 +174,31 @@ class ShardDriverEngine(FusedEngine):
 
     capabilities = EngineCapabilities(multipass=True, supports_mesh=True,
                                       supports_averaging=True,
-                                      uses_tau=True, **_SHARD_BUDGET)
+                                      uses_tau=True, policy_capable=True,
+                                      policies=("uniform", "ttl-lru",
+                                                "slope"),
+                                      **_SHARD_BUDGET)
 
     def __init__(self, problem: SSVMProblem, lam: float, mesh,
                  tau: Optional[int], *, averaged: bool = False,
-                 use_gram: bool = False, gram_steps: int = 10):
+                 use_gram: bool = False, gram_steps: int = 10,
+                 policies=None):
         from ..shard import ShardEngine  # lazy: keep core importable alone
         super().__init__(problem, lam, averaged=averaged,
-                         use_gram=use_gram, gram_steps=gram_steps)
+                         use_gram=use_gram, gram_steps=gram_steps,
+                         policies=policies)
         self.eng = ShardEngine(problem, mesh, lam=lam, use_gram=use_gram,
-                               gram_steps=gram_steps)
+                               gram_steps=gram_steps, policies=policies)
         self.tau = int(tau) if tau is not None else self.eng.n_shards
         self.ledger = self.eng.ledger
 
     def init_state(self, cap: int):
         return self.eng.init_state(cap)
 
-    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int):
+    def outer_iteration(self, mp, perm, perms, clock, *, ttl: int,
+                        key=None):
         return self.eng.outer_iteration(mp, perm, perms, clock,
-                                        tau=self.tau, ttl=ttl)
+                                        tau=self.tau, ttl=ttl, key=key)
 
     def continue_passes(self, mp, perms, clock):
         return self.eng.multi_approx_pass(mp, perms, clock)
@@ -312,7 +352,8 @@ def _shard_factory(problem: SSVMProblem, cfg: RunConfig,
     from ..launch.mesh import ensure_data_mesh
     return ShardDriverEngine(problem, cfg.lam, ensure_data_mesh(cfg.mesh),
                              cfg.tau, averaged=averaged, use_gram=use_gram,
-                             gram_steps=cfg.gram_steps)
+                             gram_steps=cfg.gram_steps,
+                             policies=_policies(problem, cfg))
 
 
 def _gram_factory(problem: SSVMProblem, cfg: RunConfig):
@@ -323,7 +364,26 @@ def _gram_factory(problem: SSVMProblem, cfg: RunConfig):
     if cfg.mesh is not None:
         return _shard_factory(problem, cfg, use_gram=True)
     return FusedEngine(problem, cfg.lam, use_gram=True,
-                       gram_steps=cfg.gram_steps)
+                       gram_steps=cfg.gram_steps,
+                       policies=_policies(problem, cfg))
+
+
+def _gap_factory(problem: SSVMProblem, cfg: RunConfig):
+    """``mpbcfw-gap``: gap-proportional gumbel-top-k sampling + gap-aware
+    eviction (default bundle ``GAP_POLICIES``; override via
+    ``RunConfig.policies``).  With a mesh the sampled schedule needs the
+    sequential exact path, so tau is pinned to 1 (``RunConfig.tau`` is
+    rejected by the capability check: ``uses_tau=False``)."""
+    from ..policy import GAP_POLICIES
+    bundle = _policies(problem, cfg, allow_key=True, default=GAP_POLICIES)
+    if cfg.mesh is not None:
+        from ..launch.mesh import ensure_data_mesh
+        return ShardDriverEngine(problem, cfg.lam,
+                                 ensure_data_mesh(cfg.mesh), 1,
+                                 gram_steps=cfg.gram_steps,
+                                 policies=bundle)
+    return FusedEngine(problem, cfg.lam, gram_steps=cfg.gram_steps,
+                       policies=bundle)
 
 
 _register(
@@ -337,17 +397,33 @@ _register(
     "bcfw-avg", lambda p, cfg: BCFWEngine(p, cfg.lam, averaged=True),
     BCFWEngine.capabilities)
 _register(
-    "mpbcfw", lambda p, cfg: FusedEngine(p, cfg.lam),
+    "mpbcfw",
+    lambda p, cfg: FusedEngine(p, cfg.lam, policies=_policies(p, cfg)),
     FusedEngine.capabilities)
 _register(
-    "mpbcfw-avg", lambda p, cfg: FusedEngine(p, cfg.lam, averaged=True),
+    "mpbcfw-avg",
+    lambda p, cfg: FusedEngine(p, cfg.lam, averaged=True,
+                               policies=_policies(p, cfg)),
     FusedEngine.capabilities)
+_register(
+    "mpbcfw-gap", _gap_factory,
+    EngineCapabilities(
+        multipass=True, supports_averaging=True, supports_mesh=True,
+        mesh_optional=True, policy_capable=True, needs_key=True,
+        policies=("gap-topk", "gap-ttl", "slope"), **_SHARD_BUDGET,
+        note="Gap-proportional sampling (gumbel-top-k over per-block "
+             "duality gaps) with gap-aware eviction; RunConfig.gap_frac "
+             "sets the exact-pass fraction.  With RunConfig.mesh the "
+             "sampled schedule runs the sequential (tau=1) exact path; "
+             "a 1-device mesh is bit-for-bit equal to the single-device "
+             "program."))
 _register(
     "mpbcfw-gram", _gram_factory,
     EngineCapabilities(
         multipass=True, supports_gram=True, supports_averaging=True,
         supports_mesh=True, uses_tau=True, tau_requires_mesh=True,
-        mesh_optional=True, **_SHARD_BUDGET,
+        mesh_optional=True, policy_capable=True,
+        policies=("uniform", "ttl-lru", "slope"), **_SHARD_BUDGET,
         note="mpbcfw-gram with RunConfig.mesh resolves to the sharded "
              "gram engine (the mpbcfw-shard-gram path: PlaneCache.gram "
              "shards with the blocks), which also consumes "

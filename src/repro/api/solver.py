@@ -45,6 +45,7 @@ import time
 from contextlib import contextmanager, nullcontext
 from typing import Callable, Iterable, Iterator, List, Optional, TYPE_CHECKING
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -193,8 +194,7 @@ class Solver:
       * :meth:`iterate` — a streaming generator of ``TraceRow``s (the
         control loop; stops when a stopping criterion fires);
       * :meth:`run` — drain :meth:`iterate` and return a
-        :class:`~repro.api.config.RunResult` (what ``driver.run`` now
-        shims to);
+        :class:`~repro.api.config.RunResult`;
       * :meth:`save` / :meth:`restore` — checkpoint & bit-for-bit resume
         through :class:`repro.checkpoint.manager.CheckpointManager`.
     """
@@ -379,8 +379,17 @@ class Solver:
             # loop's RNG stream exactly.
             perms = _draw_perms(rng, n, min(cfg.approx_batch,
                                             cfg.max_approx_passes))
+            # Keyed sampling policies (caps.needs_key) get one fresh PRNG
+            # key per iteration, drawn from the solver's seeded host RNG
+            # stream (checkpointed with it, so resume is bit-for-bit).
+            # PRNGKey construction is host-side bookkeeping: no device
+            # sync, and engines without the capability keep their exact
+            # pre-policy call signature and RNG stream.
+            key_kw = ({"key": jax.random.PRNGKey(
+                int(rng.randint(0, 2 ** 31 - 1)))}
+                if self.caps.needs_key else {})
             mp, clock_dev, stats = engine.outer_iteration(
-                mp, perm, perms, clock_dev, ttl=cfg.ttl)
+                mp, perm, perms, clock_dev, ttl=cfg.ttl, **key_kw)
             st = engine.read_stats(stats)  # the iteration's single sync
             # Device-accumulated obs counters arrive on the same sync.
             # Capture them from the *outer* program's stats: overflow
@@ -410,7 +419,13 @@ class Solver:
             # telemetry and validation; the continue decisions themselves
             # happened on device).
             if cm is not None:
-                tracker.record(clock.exact(n), f_exact)
+                # Sampled schedules run fewer exact-oracle calls than n;
+                # charge the virtual clock what the device actually did.
+                gs_met = (getattr(met, "gap_sampled", None)
+                          if met is not None else None)
+                tracker.record(
+                    clock.exact(n if gs_met is None else int(gs_met)),
+                    f_exact)
                 for dv, n_planes in zip(duals_all, planes_all):
                     tracker.record(clock.approx(n_planes), dv)
             else:
@@ -463,6 +478,14 @@ class Solver:
                 evicted = int(met.ttl_evicted) + int(met.lru_evicted)
             else:
                 hit_rate, evicted = 0.0, 0
+            # Gap-policy columns ride the same sync; engines without a
+            # gap vector report the TraceRow defaults.
+            gap_kw = {}
+            gt = getattr(met, "gap_total", None) if met is not None else None
+            if gt is not None:
+                gs = getattr(met, "gap_sampled", None)
+                gap_kw = dict(gap_total=float(gt),
+                              gap_sampled=int(gs) if gs is not None else 0)
             with clock.exclude():
                 primal, dual, primal_avg = engine.evaluate(mp)
             f_end = dual
@@ -473,7 +496,7 @@ class Solver:
                 ws_mean, n_approx_passes,
                 led1[0] - led0[0], led1[2] - led0[2],
                 cache_hit_rate=hit_rate, planes_evicted=evicted,
-                oracle_share=oracle_share)
+                oracle_share=oracle_share, **gap_kw)
 
     # -- checkpoint / resume ------------------------------------------------
 

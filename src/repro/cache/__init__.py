@@ -12,29 +12,30 @@ slot/TTL/LRU logic smeared across the optimizer layers:
     on/off, mesh axis), consumed by :func:`partition_specs` so the shard
     layout never hand-writes cache ``PartitionSpec``\\ s;
   * the canonical operation set — :func:`init`, :func:`insert`,
-    :func:`mark_active`, :func:`evict_stale`, :func:`gather`,
-    :func:`flat_view`, :func:`score_all`, :func:`approx_oracle_all`,
-    :func:`approx_oracle`, :func:`sizes` — every cache mutation and
-    scoring call site in ``repro.core`` and ``repro.shard`` goes through
-    these;
+    :func:`mark_active`, :func:`evict_stale`, :func:`evict_gap_stale`,
+    :func:`update_gap`, :func:`gather`, :func:`flat_view`,
+    :func:`score_all`, :func:`approx_oracle_all`, :func:`approx_oracle`,
+    :func:`sizes` — every cache mutation and scoring call site in
+    ``repro.core`` and ``repro.shard`` goes through these;
   * :data:`NEG_INF` — the one invalid-slot score sentinel (shared with
-    ``repro.kernels.ops.INVALID_SCORE``).
+    ``repro.kernels.ops.INVALID_SCORE``) — and :data:`GAP_UNSEEN`, the
+    never-visited value of the per-block gap vector.
 
 Scoring is backed by the Pallas kernels on TPU (the fused
 ``plane_select`` score-and-select launch on the batched hot path) and by
-bitwise-faithful jnp references elsewhere.  The legacy spellings
-``repro.core.workset`` / ``repro.core.gram.GramCache`` are thin
-deprecated aliases of this package for one release.
+bitwise-faithful jnp references elsewhere.
 """
 from .layout import partition_specs, shardings  # noqa: F401
-from .ops import (NEG_INF, approx_oracle, approx_oracle_all,  # noqa: F401
-                  evict_stale, flat_view, gather, init, insert, mark_active,
-                  mark_active_where, score_all, sizes)
+from .ops import (GAP_UNSEEN, NEG_INF, approx_oracle,  # noqa: F401
+                  approx_oracle_all, evict_gap_stale, evict_stale, flat_view,
+                  gather, init, insert, mark_active, mark_active_where,
+                  score_all, sizes, update_gap)
 from .state import CacheLayout, PlaneCache, layout_of  # noqa: F401
 
 __all__ = [
-    "PlaneCache", "CacheLayout", "layout_of", "NEG_INF",
+    "PlaneCache", "CacheLayout", "layout_of", "NEG_INF", "GAP_UNSEEN",
     "init", "insert", "mark_active", "mark_active_where", "evict_stale",
+    "evict_gap_stale", "update_gap",
     "gather", "flat_view", "score_all", "approx_oracle_all",
     "approx_oracle", "sizes",
     "partition_specs", "shardings",

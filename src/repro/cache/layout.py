@@ -29,7 +29,8 @@ def partition_specs(layout: CacheLayout) -> PlaneCache:
     a = layout.axis
     return PlaneCache(
         planes=P(a, None, None), valid=P(a, None), last_active=P(a, None),
-        gram=P(a, None, None) if layout.gram else None)
+        gram=P(a, None, None) if layout.gram else None,
+        gap=P(a) if layout.track_gap else None)
 
 
 def shardings(layout: CacheLayout, mesh: Mesh) -> PlaneCache:

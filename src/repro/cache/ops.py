@@ -33,6 +33,12 @@ from .state import CacheLayout, PlaneCache
 # independent copy of kernels.ops' ``neg=-1e30`` default).
 NEG_INF = jnp.float32(kops.INVALID_SCORE)
 
+# Gap assigned to blocks never visited by any oracle call.  Large enough
+# to dominate every real gap (so gap-proportional samplers schedule
+# unseen blocks first) while staying finite in float32 — it reuses the
+# kernel layer's score-sentinel magnitude rather than a second constant.
+GAP_UNSEEN = jnp.float32(-kops.INVALID_SCORE)
+
 
 def init(layout: Union[CacheLayout, int], n: int, d: int) -> PlaneCache:
     """Empty cache for ``n`` blocks of ``(d+1)``-planes under ``layout``.
@@ -48,6 +54,8 @@ def init(layout: Union[CacheLayout, int], n: int, d: int) -> PlaneCache:
         last_active=jnp.full((n, cap), -1, jnp.int32),
         gram=(jnp.zeros((n, cap, cap), layout.dtype)
               if layout.gram else None),
+        gap=(jnp.full((n,), GAP_UNSEEN, jnp.float32)
+             if layout.track_gap else None),
     )
 
 
@@ -79,6 +87,7 @@ def insert(cache: PlaneCache, i: jnp.ndarray, plane: jnp.ndarray,
         valid=cache.valid.at[i, slot].set(True),
         last_active=cache.last_active.at[i, slot].set(it),
         gram=gram,
+        gap=cache.gap,
     )
 
 
@@ -106,6 +115,39 @@ def evict_stale(cache: PlaneCache, it: jnp.ndarray, ttl: int) -> PlaneCache:
     return cache._replace(valid=keep)
 
 
+def update_gap(cache: PlaneCache, i: jnp.ndarray,
+               gap: jnp.ndarray) -> PlaneCache:
+    """Fold a fresh duality-gap estimate for block ``i`` into the cache.
+
+    Negative estimates (an approximate oracle scoring below the current
+    iterate, or float noise around an exact optimum) clamp to zero — the
+    gap vector only ever holds ``max(gap, 0)``.  No-op (returns ``cache``
+    unchanged, adding nothing to the traced program) when the layout does
+    not track gaps.
+    """
+    if cache.gap is None:
+        return cache
+    return cache._replace(gap=cache.gap.at[i].set(jnp.maximum(gap, 0.0)))
+
+
+def evict_gap_stale(cache: PlaneCache, it: jnp.ndarray, ttl: int,
+                    ttl_cold: int, gap_cold: float) -> PlaneCache:
+    """Gap-aware TTL: blocks whose gap estimate has fallen to
+    ``gap_cold`` or below keep planes only ``ttl_cold`` iterations.
+
+    A converged block's planes are dead weight — its approximate oracle
+    keeps returning the same vertex — so they age out faster, freeing
+    capacity (and per-pass score work) for blocks still making progress.
+    Unseen blocks hold :data:`GAP_UNSEEN` and therefore get the full
+    ``ttl``.  Purely elementwise, so it shards over the block axis with
+    no collective.
+    """
+    ttl_eff = jnp.where(cache.gap > gap_cold, jnp.int32(ttl),
+                        jnp.int32(ttl_cold))
+    keep = cache.valid & (it - cache.last_active <= ttl_eff[:, None])
+    return cache._replace(valid=keep)
+
+
 def gather(cache: PlaneCache, ids: jnp.ndarray) -> PlaneCache:
     """Sub-cache of the rows in ``ids`` (tau-nice chunks, shard views).
 
@@ -118,7 +160,8 @@ def gather(cache: PlaneCache, ids: jnp.ndarray) -> PlaneCache:
     return PlaneCache(
         planes=cache.planes[ids], valid=cache.valid[ids],
         last_active=cache.last_active[ids],
-        gram=None if cache.gram is None else cache.gram[ids])
+        gram=None if cache.gram is None else cache.gram[ids],
+        gap=None if cache.gap is None else cache.gap[ids])
 
 
 def flat_view(cache: PlaneCache

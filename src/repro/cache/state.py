@@ -15,9 +15,12 @@ block dimension is partitioned over.  :func:`repro.cache.partition_specs`
 turns a layout into the cache's ``PartitionSpec`` tree, which
 :mod:`repro.shard.layout` consumes instead of hand-writing specs.
 
+When the layout tracks per-block duality gaps (``track_gap=True``), the
+cache also carries a ``(n,)`` gap vector — the on-device state behind
+gap-proportional sampling and gap-aware eviction (:mod:`repro.policy`).
+
 This module holds only types (no kernels, no jax transforms) so it can
-be imported from anywhere — including :mod:`repro.core.types`, which
-keeps ``WorkSet`` as a deprecated alias of :class:`PlaneCache`.
+be imported from anywhere.
 """
 from __future__ import annotations
 
@@ -42,12 +45,20 @@ class PlaneCache(NamedTuple):
                    ``G[i, a, b] = <phi_a*, phi_b*>`` (paper Sec. 3.5),
                    or ``None`` when the layout does not materialize them.
                    Rows are refreshed only on insertion.
+      gap:         (n,) float32 per-block duality-gap estimates (Osokin
+                   et al., arXiv:1605.09346), or ``None`` when the layout
+                   does not track them.  Exact passes fold in the true
+                   block gap; approximate passes fold in the cache's
+                   underestimate.  Blocks never visited hold
+                   :data:`repro.cache.GAP_UNSEEN` so gap-proportional
+                   samplers visit them first.
     """
 
     planes: jnp.ndarray
     valid: jnp.ndarray
     last_active: jnp.ndarray
     gram: Optional[jnp.ndarray] = None
+    gap: Optional[jnp.ndarray] = None
 
     # -- on-device obs counter sources (repro.obs) -------------------------
     # Traced reductions over the occupancy mask; computed *inside* the
@@ -82,12 +93,16 @@ class CacheLayout:
       axis:  mesh axis name the block dimension is partitioned over, or
              ``None`` for single-device placement.  Consumed by
              :func:`repro.cache.partition_specs` / the shard layout.
+      track_gap: carry the ``(n,)`` per-block duality-gap vector that
+             gap-proportional sampling / gap-aware eviction policies
+             consume (:mod:`repro.policy`).
     """
 
     cap: int = 64
     dtype: Any = jnp.float32
     gram: bool = False
     axis: Optional[str] = None
+    track_gap: bool = False
 
 
 def layout_of(cache: PlaneCache, *, axis: Optional[str] = None
@@ -95,4 +110,5 @@ def layout_of(cache: PlaneCache, *, axis: Optional[str] = None
     """Recover the :class:`CacheLayout` describing an existing cache."""
     return CacheLayout(cap=int(cache.valid.shape[1]),
                        dtype=cache.planes.dtype,
-                       gram=cache.gram is not None, axis=axis)
+                       gram=cache.gram is not None, axis=axis,
+                       track_gap=cache.gap is not None)

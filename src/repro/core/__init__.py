@@ -1,21 +1,11 @@
 """MP-BCFW core: the paper's contribution as a composable JAX module."""
 from . import (averaging, bcfw, distributed, driver, gram, mpbcfw, oracles,
                selection, ssvm, subgradient, types)
-from .driver import RunConfig, RunResult, run
-from .types import BCFWState, SSVMProblem, WorkSet
+from .driver import RunConfig, RunResult
+from .types import BCFWState, SSVMProblem
 
 __all__ = [
     "averaging", "bcfw", "distributed", "driver", "gram", "mpbcfw",
-    "oracles", "selection", "ssvm", "subgradient", "types", "workset",
-    "RunConfig", "RunResult", "run", "BCFWState", "SSVMProblem", "WorkSet",
+    "oracles", "selection", "ssvm", "subgradient", "types",
+    "RunConfig", "RunResult", "BCFWState", "SSVMProblem",
 ]
-
-
-def __getattr__(name: str):
-    # The deprecated workset shim loads lazily so `import repro.core`
-    # itself never emits its DeprecationWarning.
-    if name == "workset":
-        import importlib
-
-        return importlib.import_module(".workset", __name__)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,4 +1,4 @@
-"""Deprecated shim over :class:`repro.api.Solver`.
+"""Compatibility re-exports for the pre-``repro.api`` module layout.
 
 The control loop, the engine implementations, and the config/trace types
 all moved to the public protocol layer:
@@ -15,17 +15,13 @@ all moved to the public protocol layer:
   * :mod:`repro.api.config`  — ``RunConfig`` / ``TraceRow`` /
     ``RunResult`` (re-exported here, so existing imports keep working).
 
-:func:`run` is kept as a one-call convenience for existing scripts and
-produces bit-for-bit the same ``RunResult`` as
-``Solver(problem, cfg).run()`` — it *is* that call, plus a
-``DeprecationWarning``.
+The one-release ``driver.run`` convenience shim is gone: call
+``Solver(problem, cfg).run()`` — the identical call, with streaming
+iteration, stopping criteria, callbacks, and checkpoint/resume on top.
 """
 from __future__ import annotations
 
-import warnings
-
 from ..api.config import RunConfig, RunResult, TraceRow  # noqa: F401
-from .types import SSVMProblem
 
 _MOVED = {
     # name -> (module, attribute); resolved lazily so importing
@@ -54,20 +50,3 @@ def __getattr__(name: str):
     if name == "ALGORITHMS":
         return value()  # the registry's registration-order name tuple
     return value
-
-
-def run(problem: SSVMProblem, cfg: RunConfig) -> RunResult:
-    """Deprecated: use :class:`repro.api.Solver`.
-
-    Equivalent to ``Solver(problem, cfg).run()`` (bit-for-bit identical
-    traces), without access to the Solver's streaming iteration,
-    stopping criteria, callbacks, or checkpoint/resume.
-    """
-    warnings.warn(
-        "driver.run is deprecated: use repro.api.Solver — "
-        "Solver(problem, cfg).run() is the identical call, and exposes "
-        "iterate()/stopping/callbacks/checkpointing on top",
-        DeprecationWarning, stacklevel=2)
-    from ..api.solver import Solver
-
-    return Solver(problem, cfg).run()

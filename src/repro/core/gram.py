@@ -22,15 +22,10 @@ with h the argmax plane.  The final phi_i is materialized from the tracked
 convex-combination coefficients with one (cap+1, d+1) matvec, and
 phi' - phi_i' = phi - phi_i is invariant, so phi is materialized for free.
 
-``GramCache`` / ``init_gram`` / ``add_plane_with_gram`` /
-``exact_pass_gram`` remain as thin deprecated aliases for one release;
-they wrap the gram-carrying cache.
 """
 from __future__ import annotations
 
 import functools
-import warnings
-from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +33,7 @@ import jax.numpy as jnp
 from .. import cache as plane_cache
 from ..cache import NEG_INF, PlaneCache
 from .averaging import update_average
-from .types import AveragingState, BCFWState, SSVMProblem
+from .types import AveragingState, BCFWState
 
 
 def multi_step_block_update(planes_i: jnp.ndarray, valid_i: jnp.ndarray,
@@ -125,60 +120,3 @@ def approx_pass_gram(inner: BCFWState, cache: PlaneCache,
 def jit_approx_pass_gram(inner, cache, avg, perm, outer_it,
                          *, lam: float, steps: int = 10):
     return approx_pass_gram(inner, cache, avg, perm, outer_it, lam, steps)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated aliases (one release): the separate GramCache is gone — gram
-# state lives inside the PlaneCache.  These wrappers attach/detach it.
-
-
-class GramCache(NamedTuple):
-    """Deprecated: per-block Gram matrices now ride in PlaneCache.gram."""
-
-    gram: jnp.ndarray  # (n, cap, cap) float32
-
-
-def _warn_gram(name: str) -> None:
-    warnings.warn(
-        f"repro.core.gram.{name} is deprecated: build the cache with "
-        "repro.cache.CacheLayout(gram=True) — insertions refresh the Gram "
-        "rows inside repro.cache.insert, and the passes read "
-        "PlaneCache.gram directly", DeprecationWarning, stacklevel=3)
-
-
-def init_gram(n: int, cap: int) -> GramCache:
-    _warn_gram("init_gram")
-    return GramCache(gram=jnp.zeros((n, cap, cap), jnp.float32))
-
-
-def add_plane_with_gram(ws: PlaneCache, gc: GramCache, i: jnp.ndarray,
-                        plane: jnp.ndarray, it: jnp.ndarray
-                        ) -> Tuple[PlaneCache, GramCache]:
-    """Deprecated: ``repro.cache.insert`` on a gram-carrying cache."""
-    _warn_gram("add_plane_with_gram")
-    out = plane_cache.insert(ws._replace(gram=gc.gram), i, plane, it)
-    return out._replace(gram=None), GramCache(gram=out.gram)
-
-
-def exact_pass_gram(problem: SSVMProblem, mp, gc: GramCache,
-                    perm: jnp.ndarray, lam: float):
-    """Deprecated: ``repro.core.mpbcfw.exact_pass`` is gram-aware once the
-    MPState's cache carries gram blocks."""
-    from . import mpbcfw
-
-    _warn_gram("exact_pass_gram")
-    mp = mp._replace(cache=mp.cache._replace(gram=gc.gram))
-    mp = mpbcfw.exact_pass(problem, mp, perm, lam)
-    gc = GramCache(gram=mp.cache.gram)
-    return mp._replace(cache=mp.cache._replace(gram=None)), gc
-
-
-def jit_exact_pass_gram(problem: SSVMProblem, mp, gc: GramCache,
-                        perm: jnp.ndarray, *, lam: float):
-    from . import mpbcfw
-
-    _warn_gram("jit_exact_pass_gram")
-    mp = mp._replace(cache=mp.cache._replace(gram=gc.gram))
-    mp = mpbcfw.jit_exact_pass(problem, mp, perm, lam=lam)
-    gc = GramCache(gram=mp.cache.gram)
-    return mp._replace(cache=mp.cache._replace(gram=None)), gc

@@ -57,12 +57,6 @@ class MPState(NamedTuple):
     avg: AveragingState
     outer_it: jnp.ndarray  # () int32, outer-iteration counter (for TTL)
 
-    @property
-    def ws(self) -> PlaneCache:
-        """Deprecated accessor (one release): the working set *is* the
-        plane cache now."""
-        return self.cache
-
 
 def _example(problem: SSVMProblem, i: jnp.ndarray):
     return jax.tree_util.tree_map(lambda a: a[i], problem.data)
@@ -77,13 +71,23 @@ def exact_pass(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
     the Sec-3.5 configurations.
     """
 
+    track_gap = mp.cache.gap is not None
+
     def body(carry, i):
         st, c, av = carry
         w = weights_of(st.phi, lam)
         phi_hat = problem.oracle(w, _example(problem, i))
+        if track_gap:
+            # True block duality gap at the pre-update iterate: the exact
+            # oracle's score minus the current convex combination's.
+            phi_old = st.phi_i[i]
+            g = ((phi_hat[:-1] @ w + phi_hat[-1])
+                 - (phi_old[:-1] @ w + phi_old[-1]))
         st, _ = block_update(st, i, phi_hat, lam)
         st = st._replace(n_exact=st.n_exact + 1)
         c = plane_cache.insert(c, i, phi_hat, mp.outer_it)
+        if track_gap:
+            c = plane_cache.update_gap(c, i, g)
         av = update_average(av, st.phi, exact=True)
         return (st, c, av), None
 
@@ -101,15 +105,23 @@ def approx_pass(problem: Optional[SSVMProblem], mp: MPState,
     below the convex combination phi_i (paper footnote 2).
     """
     del problem  # the approximate pass never touches the data
+    track_gap = mp.cache.gap is not None
 
     def body(carry, i):
         st, c, av = carry
         w = weights_of(st.phi, lam)
-        phi_hat, slot, _ = plane_cache.approx_oracle(c, i, w)
+        phi_hat, slot, score = plane_cache.approx_oracle(c, i, w)
+        if track_gap:
+            # The cache's gap *underestimate* (H~_i <= H_i): score of the
+            # best cached plane minus the current iterate's.
+            phi_old = st.phi_i[i]
+            g = score - (phi_old[:-1] @ w + phi_old[-1])
         st, gamma = block_update(st, i, phi_hat, lam)
         st = st._replace(n_approx=st.n_approx + 1)
         # A plane is "active" if the (approximate) oracle returned it.
         c = plane_cache.mark_active(c, i, slot, mp.outer_it)
+        if track_gap:
+            c = plane_cache.update_gap(c, i, g)
         av = update_average(av, st.phi, exact=False)
         return (st, c, av), None
 
@@ -118,11 +130,16 @@ def approx_pass(problem: Optional[SSVMProblem], mp: MPState,
     return MPState(inner=inner, cache=cache, avg=avg, outer_it=mp.outer_it)
 
 
-def begin_iteration(mp: MPState, ttl: int) -> MPState:
-    """TTL eviction + outer-iteration increment (paper Sec. 3.4, param N/T)."""
+def begin_iteration(mp: MPState, ttl: int, eviction=None) -> MPState:
+    """Eviction + outer-iteration increment (paper Sec. 3.4, param N/T).
+
+    ``eviction`` is an optional :class:`repro.policy.EvictionPolicy`;
+    ``None`` keeps the paper's TTL rule with the explicit ``ttl``.
+    """
     it = mp.outer_it + 1
-    return mp._replace(cache=plane_cache.evict_stale(mp.cache, it, ttl),
-                       outer_it=it)
+    cache = (plane_cache.evict_stale(mp.cache, it, ttl)
+             if eviction is None else eviction.evict(mp.cache, it))
+    return mp._replace(cache=cache, outer_it=it)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("lam",))
@@ -160,7 +177,8 @@ def make_slope_clock(t0, f0, t, plane_cost) -> SlopeClock:
 
 def slope_batched_loop(carry, perms: jnp.ndarray, clock: SlopeClock, *,
                        step, f_entry: jnp.ndarray, cost: jnp.ndarray,
-                       planes_per_pass: jnp.ndarray, run_all: bool = False):
+                       planes_per_pass: jnp.ndarray, run_all: bool = False,
+                       continue_fn=None):
     """Generic batched pass loop governed by the on-device slope rule.
 
     ``step(carry, perm) -> (carry, f_new)`` runs one pass and reports the
@@ -169,11 +187,14 @@ def slope_batched_loop(carry, perms: jnp.ndarray, clock: SlopeClock, *,
     early exit, zero-filled telemetry tail — is shared between the
     single-device :func:`multi_approx_pass` and the mesh-sharded twin
     (:mod:`repro.shard.engine`), so both make bit-identical stopping
-    decisions given bit-identical duals.
+    decisions given bit-identical duals.  ``continue_fn`` swaps the
+    stopping rule (an :class:`repro.policy.OraclePolicy`'s traced
+    decision); ``None`` keeps the paper's slope rule.
 
     Returns ``(carry, t_end, stats)`` with ``stats`` an
     :class:`~repro.core.types.ApproxBatchStats`.
     """
+    cont_fn = slope_continue_jnp if continue_fn is None else continue_fn
     n_batch = perms.shape[0]
     if n_batch == 0:
         # Zero-pass budget (the driver's max_approx_passes=0 path): no
@@ -197,7 +218,7 @@ def slope_batched_loop(carry, perms: jnp.ndarray, clock: SlopeClock, *,
         carry, k, t, f, _, duals, times, planes = state
         carry, f_new = step(carry, perms[k])
         t_new = t + cost
-        cont = slope_continue_jnp(clock.f0, clock.t0, f, t, f_new, t_new)
+        cont = cont_fn(clock.f0, clock.t0, f, t, f_new, t_new)
         if run_all:
             cont = jnp.asarray(True)
         duals = duals.at[k].set(f_new)
@@ -221,7 +242,7 @@ def slope_batched_loop(carry, perms: jnp.ndarray, clock: SlopeClock, *,
 
 def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
                       *, lam: float, steps: int = 10,
-                      run_all: bool = False
+                      run_all: bool = False, policies=None
                       ) -> Tuple[MPState, SlopeClock, ApproxBatchStats]:
     """Up to ``B = perms.shape[0]`` approximate passes in one device program.
 
@@ -262,7 +283,8 @@ def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
 
     mp, t, stats = slope_batched_loop(
         mp, perms, clock, step=step, f_entry=f_entry, cost=cost,
-        planes_per_pass=total_planes, run_all=run_all)
+        planes_per_pass=total_planes, run_all=run_all,
+        continue_fn=None if policies is None else policies.oracle.continue_fn)
     # Obs counters ride the stats payload through the existing single host
     # sync.  A standalone multi-pass program (the driver's overflow
     # continuation) never inserts or evicts, so both eviction counters are
@@ -275,24 +297,27 @@ def multi_approx_pass(mp: MPState, perms: jnp.ndarray, clock: SlopeClock,
     return mp, clock._replace(t=t), stats._replace(metrics=metrics)
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "steps", "run_all"))
-def _jit_multi_approx_pass(mp, perms, clock, *, lam, steps, run_all):
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "steps", "run_all", "policies"))
+def _jit_multi_approx_pass(mp, perms, clock, *, lam, steps, run_all,
+                           policies=None):
     return multi_approx_pass(mp, perms, clock, lam=lam, steps=steps,
-                             run_all=run_all)
+                             run_all=run_all, policies=policies)
 
 
 def jit_multi_approx_pass(problem: Optional[SSVMProblem], mp: MPState,
                           perms: jnp.ndarray, clock: SlopeClock, *,
                           lam: float, steps: int = 10,
-                          run_all: bool = False):
+                          run_all: bool = False, policies=None):
     del problem  # approximate passes never touch the data
     return _jit_multi_approx_pass(mp, perms, clock, lam=lam, steps=steps,
-                                  run_all=run_all)
+                                  run_all=run_all, policies=policies)
 
 
 def outer_iteration(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
                     perms: jnp.ndarray, clock: SlopeClock, *, lam: float,
-                    ttl: int, steps: int = 10, run_all: bool = False):
+                    ttl: int, steps: int = 10, run_all: bool = False,
+                    policies=None, key: Optional[jnp.ndarray] = None):
     """One *fused* MP-BCFW outer iteration (paper Alg. 3, one device program).
 
     TTL eviction, the exact pass (oracle scan + plane insertion +
@@ -307,42 +332,73 @@ def outer_iteration(problem: SSVMProblem, mp: MPState, perm: jnp.ndarray,
     this is the paper's F at the start of the iteration) — the host only
     supplies the cost constants ``clock.t`` (modeled exact-pass cost) and
     ``clock.plane_cost``.  Returns ``(mp, clock, stats)``.
+
+    ``policies`` is an optional (jit-static) :class:`repro.policy
+    .PolicyBundle` replacing the baked-in decisions: its eviction policy
+    runs instead of the plain TTL rule, its sampler rewrites ``perm``
+    into the exact pass's visit schedule (``key`` is the per-iteration
+    PRNG key samplers that declared ``needs_key`` receive), and its
+    oracle policy replaces the slope rule.  ``None`` — and the default
+    uniform/ttl-lru/slope bundle — trace exactly the pre-policy program.
     """
-    occ0 = mp.cache.occupancy                 # before TTL eviction
-    mp = begin_iteration(mp, ttl)
-    occ1 = mp.cache.occupancy                 # after TTL eviction
+    eviction = None if policies is None else policies.eviction
+    occ0 = mp.cache.occupancy                 # before eviction
+    mp = begin_iteration(mp, ttl, eviction=eviction)
+    occ1 = mp.cache.occupancy                 # after eviction
     clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
+    if policies is not None:
+        perm = policies.sampling.schedule(mp.cache, perm, key)
     mp = exact_pass(problem, mp, perm, lam)
     occ2 = mp.cache.occupancy                 # after the insert scan
+    gap_fields = {}
+    if mp.cache.gap is not None:
+        # Post-exact-pass gap mass over visited blocks (unseen blocks
+        # hold the GAP_UNSEEN sentinel and are excluded).  Computed here
+        # — not after the approximate phase — to match the shard engine,
+        # which folds the per-shard partial into its setup collective.
+        seen = mp.cache.gap < plane_cache.GAP_UNSEEN
+        gap_fields = dict(
+            gap_total=jnp.sum(jnp.where(seen, mp.cache.gap, 0.0)),
+            gap_sampled=jnp.asarray(perm.shape[0], jnp.int32))
     mp, clock, stats = multi_approx_pass(mp, perms, clock, lam=lam,
-                                         steps=steps, run_all=run_all)
+                                         steps=steps, run_all=run_all,
+                                         policies=policies)
     # Eviction accounting, still on device: TTL dropped occ0-occ1 planes;
     # the exact pass inserted one plane per visited block, so the LRU
     # overwrites are the inserts that did *not* grow the cache.
     n_inserts = jnp.asarray(perm.shape[0], jnp.int32)
     metrics = stats.metrics._replace(ttl_evicted=occ0 - occ1,
-                                     lru_evicted=occ1 + n_inserts - occ2)
+                                     lru_evicted=occ1 + n_inserts - occ2,
+                                     **gap_fields)
     return mp, clock, stats._replace(metrics=metrics)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1),
-                   static_argnames=("lam", "ttl", "steps", "run_all"))
-def _jit_outer_iteration(oracle, n, data, mp, perm, perms, clock,
-                         *, lam, ttl, steps, run_all):
+                   static_argnames=("lam", "ttl", "steps", "run_all",
+                                    "policies"))
+def _jit_outer_iteration(oracle, n, data, mp, perm, perms, clock, key,
+                         *, lam, ttl, steps, run_all, policies=None):
     prob = SSVMProblem(n=n, d=mp.inner.phi.shape[0] - 1, data=data,
                        oracle=oracle)
     return outer_iteration(prob, mp, perm, perms, clock, lam=lam,
-                           ttl=ttl, steps=steps, run_all=run_all)
+                           ttl=ttl, steps=steps, run_all=run_all,
+                           policies=policies, key=key)
 
 
 def jit_outer_iteration(problem: SSVMProblem, mp: MPState,
                         perm: jnp.ndarray, perms: jnp.ndarray,
                         clock: SlopeClock, *, lam: float, ttl: int,
-                        steps: int = 10, run_all: bool = False):
-    """Jitted :func:`outer_iteration` (cached per oracle/shape/flags)."""
+                        steps: int = 10, run_all: bool = False,
+                        policies=None, key: Optional[jnp.ndarray] = None):
+    """Jitted :func:`outer_iteration` (cached per oracle/shape/flags).
+
+    ``policies`` is jit-static (frozen bundle); ``key`` is a traced PRNG
+    key (or ``None`` — an empty pytree — when no policy needs one).
+    """
     return _jit_outer_iteration(problem.oracle, problem.n, problem.data,
-                                mp, perm, perms, clock, lam=lam,
-                                ttl=ttl, steps=steps, run_all=run_all)
+                                mp, perm, perms, clock, key, lam=lam,
+                                ttl=ttl, steps=steps, run_all=run_all,
+                                policies=policies)
 
 
 def init_mp_state(problem: SSVMProblem,

@@ -46,13 +46,6 @@ class AveragingState(NamedTuple):
     k_approx: jnp.ndarray    # () int32
 
 
-# Deprecated alias (one release): the working set is now the first-class
-# repro.cache.PlaneCache pytree (planes + valid + last_active + optional
-# per-block Gram matrices).  Constructing WorkSet(planes, valid,
-# last_active) still works — the gram leaf defaults to None.
-from ..cache.state import PlaneCache as WorkSet  # noqa: E402,F401
-
-
 class SSVMProblem(NamedTuple):
     """A structural SVM training problem in plane form.
 
@@ -109,6 +102,13 @@ class ObsMetrics(NamedTuple):
     lru_evicted: jnp.ndarray      # () i32 planes overwritten by LRU insert
     occupancy: jnp.ndarray        # () i32 total cached planes (post exact)
     nonempty_blocks: jnp.ndarray  # () i32 blocks with >=1 cached plane
+    # Gap-policy extras (None unless the engine tracks per-block duality
+    # gaps; absent leaves keep default engines' pytrees unchanged):
+    gap_total: Optional[jnp.ndarray] = None    # () f32 sum of visited
+    #                                blocks' gap estimates after the
+    #                                exact pass
+    gap_sampled: Optional[jnp.ndarray] = None  # () i32 blocks the
+    #                                sampler scheduled this iteration
 
 
 class ApproxBatchStats(NamedTuple):

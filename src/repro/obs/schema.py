@@ -43,6 +43,7 @@ _REQUIRED = {
             "host_syncs": (int,), "dispatches": (int,),
             "cache_hit_rate": _NUM, "planes_evicted": (int,),
             "oracle_share": _NUM,
+            "gap_total": _NUM + (type(None),), "gap_sampled": (int,),
             "collectives": (int,), "collective_bytes": (int,)},
     "span": {"name": (str,), "t0": _NUM, "t1": _NUM, "timebase": (str,)},
     "event": {"name": (str,), "t": _NUM},

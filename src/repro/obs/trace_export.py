@@ -64,7 +64,8 @@ def to_chrome_trace(records: List[dict]) -> dict:
             })
         elif rtype == "row":
             ts = float(r["time"]) * _US
-            for key in ("dual", "gap", "cache_hit_rate", "ws_mean"):
+            for key in ("dual", "gap", "cache_hit_rate", "ws_mean",
+                        "gap_total"):
                 val = r.get(key)
                 if val is None:
                     continue

@@ -1,0 +1,41 @@
+"""repro.policy — the pluggable on-device policy layer.
+
+The three decisions that govern how the optimizer spends exact-oracle
+calls — which blocks to visit (*sampling*), which cached planes to evict
+(*eviction*), and when to trust the cache over the oracle (*oracle*) —
+used to be hard-coded across ``core/mpbcfw.py``, ``cache/ops.py`` and
+``shard/engine.py``.  This package extracts them into three small
+protocols plus a :class:`PolicyBundle` that the fused outer-iteration
+programs take as a **static jit argument**: policies are frozen
+dataclasses of parameters with pure jittable step methods, so swapping a
+bundle re-traces the program but never adds a dispatch, host sync, or
+collective (``repro.analysis`` rule J007 proves the budgets per engine).
+
+Shipped policies::
+
+    sampling   uniform    the driver's uniform permutation (BCFW baseline)
+               gap-topk   gap-proportional gumbel-top-k (arXiv:1605.09346)
+    eviction   ttl-lru    paper Sec-3.4 TTL (+ LRU overwrite on insert)
+               gap-ttl    shorter TTL for gap-converged blocks
+    oracle     slope      paper Sec-3.4 geometric slope rule
+
+:data:`DEFAULT_POLICIES` reproduces the pre-policy engines bit for bit;
+:data:`GAP_POLICIES` is the ``mpbcfw-gap`` bundle.  Register new
+policies with :func:`register_policy` and name them in
+``RunConfig.policies``.
+"""
+from .base import (DEFAULT_POLICIES, GAP_POLICIES,  # noqa: F401
+                   EvictionPolicy, OraclePolicy, PolicyBundle,
+                   SamplingPolicy, make_bundle, policy_kind, policy_names,
+                   register_policy)
+from .eviction import GapTTL, TTLEviction  # noqa: F401
+from .oracle import SlopeOracle  # noqa: F401
+from .sampling import GapSampling, UniformSampling  # noqa: F401
+
+__all__ = [
+    "SamplingPolicy", "EvictionPolicy", "OraclePolicy", "PolicyBundle",
+    "register_policy", "policy_kind", "policy_names", "make_bundle",
+    "DEFAULT_POLICIES", "GAP_POLICIES",
+    "UniformSampling", "GapSampling", "TTLEviction", "GapTTL",
+    "SlopeOracle",
+]

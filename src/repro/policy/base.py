@@ -1,0 +1,187 @@
+"""Policy protocols, the bundle, and the named-policy registry.
+
+A policy is a **frozen, hashable dataclass** whose fields are the policy
+parameters and whose methods are pure jittable functions over cache /
+clock state.  Bundles are passed into the fused outer-iteration programs
+as *static* jit arguments, so policy dispatch resolves at trace time —
+composing a bundle adds zero device dispatches and zero host syncs to
+the programs it configures (the program-contract checker proves this,
+rule J007).
+
+Three decision points, three protocols:
+
+  * :class:`SamplingPolicy` — which blocks the exact pass visits (and in
+    what order): ``schedule(cache, perm, key) -> (k,) int32`` block ids.
+  * :class:`EvictionPolicy` — which cached planes survive the start of an
+    outer iteration: ``evict(cache, it) -> cache``.
+  * :class:`OraclePolicy` — when to keep trusting the cache over the
+    exact oracle: ``continue_fn(f0, t0, f, t, f_new, t_new) -> bool()``,
+    evaluated on device inside the batched approximate-pass loop.
+
+Policies declare what they need from the engine: ``needs_gap`` (the
+cache must carry the per-block duality-gap vector,
+``CacheLayout(track_gap=True)``) and ``needs_key`` (the engine must
+thread a fresh PRNG key into every outer iteration).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Protocol, Sequence, Tuple
+from typing import runtime_checkable
+
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class SamplingPolicy(Protocol):
+    """Chooses the exact pass's block visit schedule."""
+
+    name: str
+    needs_gap: bool
+    needs_key: bool
+
+    def schedule(self, cache, perm: jnp.ndarray,
+                 key: Optional[jnp.ndarray]) -> jnp.ndarray:
+        """Return the (k,) int32 block ids the exact pass visits, in
+        order.  ``perm`` is the driver's uniform permutation (the
+        fallback schedule); ``key`` is a fresh PRNG key or ``None`` when
+        the policy declared ``needs_key=False``."""
+        ...
+
+
+@runtime_checkable
+class EvictionPolicy(Protocol):
+    """Decides which cached planes survive the start of an iteration."""
+
+    name: str
+    needs_gap: bool
+
+    def evict(self, cache, it: jnp.ndarray):
+        """Return ``cache`` with stale planes' validity cleared."""
+        ...
+
+
+@runtime_checkable
+class OraclePolicy(Protocol):
+    """Decides when to stop approximate passes and recall the oracle."""
+
+    name: str
+
+    def continue_fn(self, f0, t0, f, t, f_new, t_new) -> jnp.ndarray:
+        """Traced stopping rule: ``True()`` to run another approximate
+        pass.  Same signature as
+        :func:`repro.core.selection.slope_continue_jnp`."""
+        ...
+
+
+@dataclass(frozen=True)
+class PolicyBundle:
+    """One sampling + one eviction + one oracle policy, jit-static.
+
+    Frozen and hashable (all member policies are frozen dataclasses), so
+    a bundle can sit in ``static_argnames`` of the fused programs: two
+    equal bundles share a compiled program, two different bundles trace
+    two programs — never a device-side branch.
+    """
+
+    sampling: Any
+    eviction: Any
+    oracle: Any
+
+    @property
+    def names(self) -> Tuple[str, str, str]:
+        return (self.sampling.name, self.eviction.name, self.oracle.name)
+
+    @property
+    def needs_gap(self) -> bool:
+        """Does any member policy require the cache's gap vector?"""
+        return bool(self.sampling.needs_gap or self.eviction.needs_gap)
+
+    @property
+    def needs_key(self) -> bool:
+        """Does the sampler require a per-iteration PRNG key?"""
+        return bool(self.sampling.needs_key)
+
+
+# --------------------------------------------------------------------------
+# Named-policy registry.  Factories build a policy instance from the run
+# configuration plus the problem size (samplers need ``n`` to resolve
+# fractional budgets to static shapes at trace time).
+
+_KINDS = ("sampling", "eviction", "oracle")
+_REGISTRY: Dict[str, Tuple[str, Callable[[Any, int], Any]]] = {}
+
+
+def _unsupported(msg: str) -> Exception:
+    from ..api.errors import UnsupportedConfigError
+    return UnsupportedConfigError(msg)
+
+
+def register_policy(name: str, kind: str,
+                    factory: Callable[[Any, int], Any], *,
+                    overwrite: bool = False) -> None:
+    """Register ``factory(cfg, n) -> policy`` under ``name``.
+
+    ``kind`` is one of ``sampling`` / ``eviction`` / ``oracle``; a bundle
+    is assembled from exactly one name of each kind.
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"unknown policy kind {kind!r}; expected one of "
+                         f"{_KINDS}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"policy {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[name] = (kind, factory)
+
+
+def policy_kind(name: str) -> str:
+    """The registered kind of ``name`` (raises ``UnsupportedConfigError``
+    on unknown names)."""
+    if name not in _REGISTRY:
+        raise _unsupported(
+            f"unknown policy {name!r}; registered: {policy_names()}")
+    return _REGISTRY[name][0]
+
+
+def policy_names(kind: Optional[str] = None) -> Tuple[str, ...]:
+    """All registered policy names (optionally of one ``kind``)."""
+    return tuple(sorted(n for n, (k, _) in _REGISTRY.items()
+                        if kind is None or k == kind))
+
+
+def make_bundle(names: Sequence[str], cfg, n: int) -> PolicyBundle:
+    """Assemble a :class:`PolicyBundle` from registry ``names``.
+
+    ``names`` must contain exactly one sampling, one eviction, and one
+    oracle policy (any order).  Parameter validation lives in the
+    factories, so an out-of-range ``cfg`` raises the same typed
+    ``UnsupportedConfigError`` as an unknown name — at Solver
+    construction, never mid-run.
+    """
+    by_kind: Dict[str, Any] = {}
+    for name in names:
+        kind = policy_kind(name)
+        if kind in by_kind:
+            raise _unsupported(
+                f"policy bundle {tuple(names)!r} names two {kind} "
+                "policies; exactly one of each kind is required")
+        by_kind[kind] = _REGISTRY[name][1](cfg, n)
+    missing = [k for k in _KINDS if k not in by_kind]
+    if missing:
+        raise _unsupported(
+            f"policy bundle {tuple(names)!r} is missing a "
+            f"{'/'.join(missing)} policy; registered: "
+            f"{ {k: policy_names(k) for k in missing} }")
+    return PolicyBundle(sampling=by_kind["sampling"],
+                        eviction=by_kind["eviction"],
+                        oracle=by_kind["oracle"])
+
+
+#: The bundle equivalent to the pre-policy engines: uniform visit order,
+#: TTL+LRU eviction, the paper's slope rule.  Engines configured with it
+#: trace bit-for-bit the same programs as with no bundle at all.
+DEFAULT_POLICIES: Tuple[str, ...] = ("uniform", "ttl-lru", "slope")
+
+#: The ``mpbcfw-gap`` bundle: gumbel-top-k gap-proportional sampling,
+#: gap-aware TTL eviction, slope rule.
+GAP_POLICIES: Tuple[str, ...] = ("gap-topk", "gap-ttl", "slope")

@@ -63,13 +63,23 @@ class ShardEngine:
 
     def __init__(self, problem: SSVMProblem, mesh: Mesh, *, lam: float,
                  axis: str = "data", use_gram: bool = False,
-                 gram_steps: int = 10):
+                 gram_steps: int = 10, policies=None):
         self.problem = problem
         self.mesh = mesh
         self.lam = float(lam)
         self.axis = axis
         self.use_gram = bool(use_gram)
         self.gram_steps = int(gram_steps)
+        # Optional repro.policy.PolicyBundle (jit-static): swaps the
+        # eviction rule, the exact pass's visit schedule, and the
+        # approximate-phase stopping rule inside the fused programs.
+        self.policies = policies
+        self.track_gap = policies is not None and policies.needs_gap
+        if self.track_gap and self.use_gram:
+            raise ValueError(
+                "gap-tracking policies are not supported with the gram "
+                "(Sec-3.5) pass body: the multi-step scheme does not "
+                "expose per-visit scores to fold into the gap vector")
         self.n_shards = layout.validate_layout(problem.n, mesh, axis)
         self.n_local = problem.n // self.n_shards
         self.ledger = SyncLedger()
@@ -86,7 +96,8 @@ class ShardEngine:
     def init_state(self, cap: int) -> MPState:
         return self.place(mpbcfw.init_mp_state(
             self.problem,
-            CacheLayout(cap=cap, gram=self.use_gram, axis=self.axis)))
+            CacheLayout(cap=cap, gram=self.use_gram, axis=self.axis,
+                        track_gap=self.track_gap)))
 
     def place(self, mp: MPState) -> MPState:
         return layout.place_mp_state(mp, self.mesh, self.axis)
@@ -129,6 +140,7 @@ class ShardEngine:
         S, n_local = self.n_shards, self.n_local
         n = self.problem.n
         use_gram, steps = self.use_gram, self.gram_steps
+        track_gap, policies = self.track_gap, self.policies
         trace = self.collectives
 
         def local_prog(mp: MPState, perms, clock: SlopeClock, blk_evt):
@@ -152,15 +164,38 @@ class ShardEngine:
             local_nonempty = jnp.sum(
                 jnp.any(mp.cache.valid, axis=1)).astype(jnp.int32)
             evt_local = jnp.sum(blk_evt, axis=0).astype(jnp.int32)
-            packed = trace.psum(
-                jnp.stack([local_planes, local_nonempty,
-                           evt_local[0], evt_local[1]]),
-                axis, tag="setup")
-            total_planes = packed[0]
-            metrics = ObsMetrics(ttl_evicted=packed[2],
-                                 lru_evicted=packed[3],
-                                 occupancy=packed[0],
-                                 nonempty_blocks=packed[1])
+            if track_gap:
+                # Gap engines widen the packed setup reduction to a float32
+                # 5-vector so the per-shard gap partial rides the same one
+                # collective (i32 counts stay exact in f32 far below 2^24);
+                # the default engines keep their i32 4-vector bit for bit.
+                gap_local = jnp.sum(jnp.where(
+                    mp.cache.gap < plane_cache.GAP_UNSEEN,
+                    mp.cache.gap, 0.0))
+                packed = trace.psum(
+                    jnp.stack([local_planes.astype(jnp.float32),
+                               local_nonempty.astype(jnp.float32),
+                               evt_local[0].astype(jnp.float32),
+                               evt_local[1].astype(jnp.float32),
+                               gap_local]),
+                    axis, tag="setup")
+                counts = packed[:4].astype(jnp.int32)
+                total_planes = counts[0]
+                metrics = ObsMetrics(ttl_evicted=counts[2],
+                                     lru_evicted=counts[3],
+                                     occupancy=counts[0],
+                                     nonempty_blocks=counts[1],
+                                     gap_total=packed[4])
+            else:
+                packed = trace.psum(
+                    jnp.stack([local_planes, local_nonempty,
+                               evt_local[0], evt_local[1]]),
+                    axis, tag="setup")
+                total_planes = packed[0]
+                metrics = ObsMetrics(ttl_evicted=packed[2],
+                                     lru_evicted=packed[3],
+                                     occupancy=packed[0],
+                                     nonempty_blocks=packed[1])
             cost = (clock.plane_cost
                     * jnp.maximum(total_planes, 1).astype(jnp.float32))
             # Approximate passes never insert/evict planes: the cache
@@ -172,12 +207,12 @@ class ShardEngine:
             gram_c = mp.cache.gram
 
             def step(carry, perm):
-                phi, phi_i, last_active, bar, k = carry
+                phi, phi_i, last_active, bar, k, gap = carry
                 phi_i0 = phi_i  # pass-entry blocks, for damped recombine
                 sched = _local_schedule(perm, lo, n_local)
 
                 def body(c, i):
-                    phi_run, phi_i, last_active, bar, k = c
+                    phi_run, phi_i, last_active, bar, k, gap = c
                     phi_i_old = phi_i[i]
                     # Local view over the loop-constant cache tensors:
                     # every mutation goes through the repro.cache API,
@@ -196,8 +231,14 @@ class ShardEngine:
                             view, i, won, mp.outer_it).last_active
                     else:
                         w = weights_of(phi_run, lam)
-                        plane, slot, _ = plane_cache.approx_oracle(view, i,
-                                                                   w)
+                        plane, slot, score = plane_cache.approx_oracle(
+                            view, i, w)
+                        if track_gap:
+                            # Same fold-in expression as the single-device
+                            # approx_pass body (bitwise on a 1-shard mesh).
+                            g = score - (phi_i_old[:-1] @ w
+                                         + phi_i_old[-1])
+                            gap = gap.at[i].set(jnp.maximum(g, 0.0))
                         gamma = line_search_gamma(phi_run, phi_i_old,
                                                   plane, lam)
                         phi_i_new = (1.0 - gamma) * phi_i_old + gamma * plane
@@ -212,10 +253,11 @@ class ShardEngine:
                     # a pass k has moved by n, matching the stored
                     # k_approx += n below (and the sequential schedule on
                     # one shard).
-                    return (phi_run, phi_i, last_active, bar, k + S), None
+                    return (phi_run, phi_i, last_active, bar, k + S,
+                            gap), None
 
-                (phi_run, phi_i, last_active, bar, k), _ = jax.lax.scan(
-                    body, (phi, phi_i, last_active, bar, k), sched)
+                (phi_run, phi_i, last_active, bar, k, gap), _ = jax.lax.scan(
+                    body, (phi, phi_i, last_active, bar, k, gap), sched)
                 delta = phi_run - phi
                 # THE per-pass collective: dual delta + pmean'd averaging
                 # track ride one reduction.
@@ -243,16 +285,18 @@ class ShardEngine:
                     phi_new = phi + red[0] / S
                     phi_i = phi_i0 + (phi_i - phi_i0) / S
                 bar_new = red[1]
-                return ((phi_new, phi_i, last_active, bar_new, k),
+                return ((phi_new, phi_i, last_active, bar_new, k, gap),
                         dual_value(phi_new, lam))
 
             carry0 = (mp.inner.phi, mp.inner.phi_i, mp.cache.last_active,
-                      mp.avg.bar_approx, mp.avg.k_approx)
+                      mp.avg.bar_approx, mp.avg.k_approx, mp.cache.gap)
             carry, t_end, stats = mpbcfw.slope_batched_loop(
                 carry0, perms, clock, step=step, f_entry=f_entry,
-                cost=cost, planes_per_pass=total_planes, run_all=run_all)
+                cost=cost, planes_per_pass=total_planes, run_all=run_all,
+                continue_fn=(None if policies is None
+                             else policies.oracle.continue_fn))
             trace.commit()
-            phi, phi_i, last_active, bar_a, _ = carry
+            phi, phi_i, last_active, bar_a, _, gap = carry
             # Block visits per executed pass is n in both configurations;
             # each visit is `steps` approximate oracle calls under the
             # gram scheme, 1 otherwise (matching the single-device
@@ -265,18 +309,20 @@ class ShardEngine:
                 + done_blocks * (steps if use_gram else 1))
             avg = mp.avg._replace(bar_approx=bar_a,
                                   k_approx=mp.avg.k_approx + done_blocks)
-            cache = mp.cache._replace(last_active=last_active)
+            cache = mp.cache._replace(last_active=last_active, gap=gap)
             return (mp._replace(inner=inner, cache=cache, avg=avg),
                     clock._replace(t=t_end),
                     stats._replace(metrics=metrics))
 
-        mp_specs = layout.mp_state_specs(self.axis, gram=self.use_gram)
+        mp_specs = layout.mp_state_specs(self.axis, gram=self.use_gram,
+                                         track_gap=track_gap)
         clock_specs = SlopeClock(t0=P(), f0=P(), t=P(), plane_cost=P())
         stats_specs = ApproxBatchStats(
             duals=P(None), times=P(None), planes=P(None), ran=P(None),
             passes_run=P(), f_entry=P(), more=P(), ws_total=P(),
             metrics=ObsMetrics(ttl_evicted=P(), lru_evicted=P(),
-                               occupancy=P(), nonempty_blocks=P()))
+                               occupancy=P(), nonempty_blocks=P(),
+                               gap_total=P() if track_gap else None))
         return shard_map(
             local_prog, mesh=mesh,
             in_specs=(mp_specs, P(None, None), clock_specs, P(axis, None)),
@@ -407,24 +453,41 @@ class ShardEngine:
         multi = self._multi_stage(run_all)
         epoch = self._epoch()
         problem, lam = self.problem, self.lam
+        policies = self.policies
+        sampled = policies is not None and policies.sampling.needs_key
+        if sampled and not sequential:
+            raise ValueError(
+                "sampling policies need the sequential (tau=1, no "
+                "straggler) exact pass: the sampled schedule replaces "
+                "the uniform chunk permutation")
 
         def prog(data, mp: MPState, chunk_ids, done, perms,
-                 clock: SlopeClock):
+                 clock: SlopeClock, key):
             # Per-block working-set sizes around eviction and the exact
             # epoch feed the obs counters.  All three are axis=1
             # reductions — elementwise in the (sharded) block dimension,
             # so GSPMD keeps them shard-local; the only cross-shard
             # reduction is the packed setup psum inside the multi stage.
             sz0 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
-            mp = mpbcfw.begin_iteration(mp, ttl)
+            mp = mpbcfw.begin_iteration(
+                mp, ttl,
+                eviction=None if policies is None else policies.eviction)
             sz1 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
             # Seed the slope rule from the on-device dual at iteration
-            # entry (TTL eviction never changes phi, hence F).
+            # entry (eviction never changes phi, hence F).
             clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
+            if sampled:
+                # Gap-proportional (or any keyed) schedule: k sampled
+                # block ids replace the uniform permutation; the exact
+                # pass stays the sequential scan body.
+                ids = policies.sampling.schedule(
+                    mp.cache, chunk_ids.reshape(-1), key)
+            else:
+                ids = chunk_ids.reshape(-1)
             if sequential:
                 prob = SSVMProblem(n=problem.n, d=problem.d, data=data,
                                    oracle=problem.oracle)
-                mp = mpbcfw.exact_pass(prob, mp, chunk_ids.reshape(-1), lam)
+                mp = mpbcfw.exact_pass(prob, mp, ids, lam)
             else:
                 mp = epoch(data, mp, chunk_ids, done)
             sz2 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
@@ -432,9 +495,24 @@ class ShardEngine:
             # epoch; straggler fallbacks — reachable only through direct
             # tau_nice_pass calls, never this fused program — would count
             # as LRU-neutral inserts).  Matches the single-device
-            # occ1 + n - occ2 accounting bit for bit.
-            blk_evt = jnp.stack([sz0 - sz1, sz1 + 1 - sz2], axis=1)
-            return multi(mp, perms, clock, blk_evt)
+            # occ1 + n - occ2 accounting bit for bit.  A sampled schedule
+            # visits only its k (distinct) ids, so the per-block insert
+            # count is their scatter instead of the all-ones vector.
+            if sampled:
+                inserted = jnp.zeros((problem.n,), jnp.int32).at[ids].add(1)
+                blk_evt = jnp.stack([sz0 - sz1, sz1 + inserted - sz2],
+                                    axis=1)
+            else:
+                blk_evt = jnp.stack([sz0 - sz1, sz1 + 1 - sz2], axis=1)
+            out = multi(mp, perms, clock, blk_evt)
+            if sampled:
+                # gap_sampled is a static property of the schedule shape;
+                # stamping it outside shard_map adds no collective.
+                mp2, clock2, stats = out
+                metrics = stats.metrics._replace(
+                    gap_sampled=jnp.asarray(ids.shape[0], jnp.int32))
+                out = (mp2, clock2, stats._replace(metrics=metrics))
+            return out
 
         return jax.jit(prog)
 
@@ -442,21 +520,24 @@ class ShardEngine:
                         approx_perms: jnp.ndarray, clock: SlopeClock, *,
                         tau: int, ttl: int,
                         done: Optional[jnp.ndarray] = None,
-                        run_all: bool = False):
-        """TTL eviction + tau-nice exact epoch + slope-ruled approximate
+                        run_all: bool = False,
+                        key: Optional[jnp.ndarray] = None):
+        """Eviction + tau-nice exact epoch + slope-ruled approximate
         batch as **one** fused device program (a single dispatch).
         ``clock.f0`` is re-seeded on device from the dual at iteration
         entry; the caller reads the returned stats with
         :meth:`read_stats` — that is the iteration's one and only host
-        sync."""
+        sync.  ``key`` is the per-iteration PRNG key consumed by keyed
+        sampling policies (``None`` otherwise)."""
         chunk_ids, done_arr = self._chunk_args(perm, tau, done)
         sequential = (tau == 1 and done is None)
-        key = (bool(run_all), int(ttl), sequential)
-        if key not in self._outer:
-            self._outer[key] = self._build_outer(run_all, ttl, sequential)
+        cache_key = (bool(run_all), int(ttl), sequential)
+        if cache_key not in self._outer:
+            self._outer[cache_key] = self._build_outer(run_all, ttl,
+                                                       sequential)
         self.ledger.dispatched()
-        return self._outer[key](self.problem.data, mp, chunk_ids, done_arr,
-                                approx_perms, clock)
+        return self._outer[cache_key](self.problem.data, mp, chunk_ids,
+                                      done_arr, approx_perms, clock, key)
 
 
 # -- module-level API (engine cache) ----------------------------------------

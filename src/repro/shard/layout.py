@@ -42,17 +42,19 @@ def validate_layout(n: int, mesh: Mesh, axis: str = "data") -> int:
     return n_shards
 
 
-def mp_state_specs(axis: str = "data", *, gram: bool = False) -> MPState:
+def mp_state_specs(axis: str = "data", *, gram: bool = False,
+                   track_gap: bool = False) -> MPState:
     """PartitionSpec pytree for an :class:`~repro.core.mpbcfw.MPState`.
 
-    ``gram`` selects the cache tree shape (Sec-3.5 Gram blocks present or
-    not) so the specs zip against a matching state.
+    ``gram`` / ``track_gap`` select the cache tree shape (Sec-3.5 Gram
+    blocks and the per-block gap vector present or not) so the specs zip
+    against a matching state.
     """
     return MPState(
         inner=BCFWState(phi_i=P(axis, None), phi=P(None),
                         n_exact=P(), n_approx=P()),
         cache=plane_cache.partition_specs(
-            CacheLayout(gram=gram, axis=axis)),
+            CacheLayout(gram=gram, axis=axis, track_gap=track_gap)),
         avg=AveragingState(bar_exact=P(None), bar_approx=P(None),
                            k_exact=P(), k_approx=P()),
         outer_it=P(),
@@ -60,17 +62,21 @@ def mp_state_specs(axis: str = "data", *, gram: bool = False) -> MPState:
 
 
 def mp_state_shardings(mesh: Mesh, axis: str = "data", *,
-                       gram: bool = False) -> MPState:
-    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
-                                  mp_state_specs(axis, gram=gram))
+                       gram: bool = False,
+                       track_gap: bool = False) -> MPState:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        mp_state_specs(axis, gram=gram, track_gap=track_gap))
 
 
 def place_mp_state(mp: MPState, mesh: Mesh, axis: str = "data") -> MPState:
     """Commit an MPState to the mesh layout (blocks sharded, rest repl.).
 
-    The cache spec tree (gram present or not) is derived from the state
-    itself, so gram-carrying and plain states both place correctly.
+    The cache spec tree (gram / gap leaves present or not) is derived
+    from the state itself, so every cache configuration places correctly.
     """
     validate_layout(mp.inner.phi_i.shape[0], mesh, axis)
     return jax.device_put(
-        mp, mp_state_shardings(mesh, axis, gram=mp.cache.gram is not None))
+        mp, mp_state_shardings(mesh, axis,
+                               gram=mp.cache.gram is not None,
+                               track_gap=mp.cache.gap is not None))

@@ -158,7 +158,7 @@ def test_r001_allows_ops_and_invalid_score():
     assert lint_source("repro/kernels/viterbi.py", src) == []
 
 
-def test_r002_flags_deprecated_names():
+def test_r002_flags_removed_names():
     src = ("from repro.core.types import WorkSet\n"
            "from repro.core.driver import run\n"
            "ws = WorkSet\n"
@@ -168,9 +168,21 @@ def test_r002_flags_deprecated_names():
     assert rules.count("R002") == 5
 
 
-def test_r002_allows_shims():
+def test_r002_has_no_shim_waivers_anymore():
+    """The one-release shims are deleted, so the former waiver files are
+    held to R002 like everything else — and the retired shim module's
+    mere existence in a tree is a finding."""
     src = "from ..cache.state import PlaneCache as WorkSet\n"
-    assert lint_source("repro/core/types.py", src) == []
+    assert _rules(lint_source("repro/core/types.py", src)) == ["R002"]
+
+
+def test_r002_flags_resurrected_workset_module(tmp_path):
+    shim = tmp_path / "repro" / "core"
+    shim.mkdir(parents=True)
+    (shim / "workset.py").write_text("# back from the dead\n")
+    findings = run_lint_layer(tmp_path)
+    assert [f.rule for f in findings] == ["R002"]
+    assert "repro/core/workset.py" in findings[0].where
 
 
 def test_r003_flags_direct_psum_in_shard():
@@ -243,7 +255,7 @@ def test_syntax_error_is_reported_not_raised():
 
 
 def test_rule_table_covers_all_rules():
-    for rid in ("J001", "J002", "J003", "J004", "J005",
+    for rid in ("J001", "J002", "J003", "J004", "J005", "J006", "J007",
                 "H001", "H002", "H003", "H004",
                 "R001", "R002", "R003", "R004", "R005"):
         assert rid in RULES

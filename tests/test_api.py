@@ -1,11 +1,12 @@
 """The public Solver/Engine/Oracle protocol layer (repro.api).
 
-Covers the PR-4 acceptance criteria: the `driver.run` shim is bit-for-bit
-`Solver.run()` for every registered algorithm under CostModel; third-party
-engines and oracles registered from test code (no edits to repro.core) run
-end-to-end through `Solver.iterate()`; invalid configs raise the typed
-`UnsupportedConfigError`; gap-tolerance stopping; checkpoint/resume
-determinism; and the on-device slope rule vs the host IterationTracker.
+Covers: `Solver.run()` is deterministic for every registered algorithm
+under CostModel (and the removed `driver.run` shim stays removed);
+third-party engines and oracles registered from test code (no edits to
+repro.core) run end-to-end through `Solver.iterate()`; invalid configs
+raise the typed `UnsupportedConfigError`; gap-tolerance stopping;
+checkpoint/resume determinism; and the on-device slope rule vs the host
+IterationTracker.
 """
 import dataclasses
 import math
@@ -30,6 +31,11 @@ def _cm():
     return CostModel(oracle_cost=0.02, plane_cost=1e-4)
 
 
+def _solver_run(problem, cfg):
+    """The one-call convenience the removed driver.run shim provided."""
+    return Solver(problem, cfg).run()
+
+
 def _rows_equal(ra, rb):
     """TraceRow equality with NaN == NaN (ssg's dual/gap)."""
     da, db = dataclasses.asdict(ra), dataclasses.asdict(rb)
@@ -43,12 +49,13 @@ def _rows_equal(ra, rb):
 
 
 # ---------------------------------------------------------------------------
-# The driver.run shim == Solver, bit for bit, for every registered algorithm
+# Solver.run is deterministic for every registered algorithm; the
+# one-release driver.run shim is gone (R002 polices any respelling)
 
 
 @pytest.mark.parametrize("algo", algorithms())
-def test_driver_shim_bitwise_matches_solver(multiclass_problem, data_mesh,
-                                            algo):
+def test_solver_run_deterministic_per_algorithm(multiclass_problem,
+                                                data_mesh, algo):
     prob = multiclass_problem
     lam = 1.0 / prob.n
 
@@ -61,17 +68,23 @@ def test_driver_shim_bitwise_matches_solver(multiclass_problem, data_mesh,
             kw["tau"] = 8
         return RunConfig(**kw)
 
-    with pytest.deprecated_call(match="driver.run is deprecated"):
-        res_shim = driver.run(prob, cfg())
+    res_a = _solver_run(prob, cfg())
     res_api = Solver(prob, cfg()).run()
-    assert len(res_shim.trace) == len(res_api.trace) == 3
-    for ra, rb in zip(res_shim.trace, res_api.trace):
+    assert len(res_a.trace) == len(res_api.trace) == 3
+    for ra, rb in zip(res_a.trace, res_api.trace):
         _rows_equal(ra, rb)
-    np.testing.assert_array_equal(res_shim.w, res_api.w)
-    if res_shim.w_avg is None:
+    np.testing.assert_array_equal(res_a.w, res_api.w)
+    if res_a.w_avg is None:
         assert res_api.w_avg is None
     else:
-        np.testing.assert_array_equal(res_shim.w_avg, res_api.w_avg)
+        np.testing.assert_array_equal(res_a.w_avg, res_api.w_avg)
+
+
+def test_driver_run_shim_is_gone():
+    """The deprecation window closed: repro.core.driver no longer has a
+    ``run`` attribute (and the analysis lint flags any new spelling)."""
+    with pytest.raises(AttributeError):
+        driver.run  # noqa: B018  # repro: allow[R002] asserting removal
 
 
 def test_solver_iterate_streams_rows_and_callbacks(multiclass_problem):
@@ -138,7 +151,7 @@ def test_tau_without_mesh_rejected_by_capabilities(multiclass_problem):
         Solver(multiclass_problem,
                RunConfig(lam=0.1, algo="mpbcfw", tau=4, cost_model=_cm()))
     with pytest.raises(UnsupportedConfigError, match="tau"):
-        driver.run(multiclass_problem,
+        _solver_run(multiclass_problem,
                    RunConfig(lam=0.1, algo="bcfw", tau=4,
                              cost_model=_cm()))
 
@@ -178,7 +191,7 @@ def test_gap_tol_stops_early_on_multiclass(multiclass_problem):
     assert res.trace[-1].gap <= tol         # ... to the requested gap
     assert all(r.gap > tol for r in res.trace[:-1])  # stopped ASAP
     # the shim takes the same early exit
-    res2 = driver.run(prob, RunConfig(lam=lam, algo="mpbcfw", max_iters=40,
+    res2 = _solver_run(prob, RunConfig(lam=lam, algo="mpbcfw", max_iters=40,
                                       cap=16, gap_tol=tol,
                                       cost_model=_cm()))
     assert len(res2.trace) == len(res.trace)
@@ -428,7 +441,7 @@ def test_third_party_engine_end_to_end(multiclass_problem):
         res = solver.result()
         assert res.w is not None and res.w_avg is None
         # the shim drives the registered engine too
-        res2 = driver.run(prob, RunConfig(lam=lam, algo="cyclic-bcfw",
+        res2 = _solver_run(prob, RunConfig(lam=lam, algo="cyclic-bcfw",
                                           max_iters=4, cost_model=_cm()))
         for ra, rb in zip(rows, res2.trace):
             _rows_equal(ra, rb)

@@ -24,13 +24,18 @@ class HostCache:
     """Pure-Python reference: per-block slot lists with the documented
     policy — insert prefers the first empty slot, else evicts the valid
     slot with the smallest last_active (lowest index on ties); TTL
-    invalidates without clearing the plane payload."""
+    invalidates without clearing the plane payload.  With
+    ``track_gap=True`` it also mirrors the per-block duality-gap vector
+    (init at the GAP_UNSEEN sentinel, fold-in clamps at zero, gap-aware
+    TTL shortens the leash of low-gap blocks)."""
 
-    def __init__(self, n, cap, d):
+    def __init__(self, n, cap, d, track_gap=False):
         self.n, self.cap, self.d = n, cap, d
         self.planes = np.zeros((n, cap, d + 1), np.float32)
         self.valid = np.zeros((n, cap), bool)
         self.last_active = np.full((n, cap), -1, np.int64)
+        self.gap = (np.full((n,), float(pcache.GAP_UNSEEN), np.float32)
+                    if track_gap else None)
 
     def _slot(self, i):
         empties = np.flatnonzero(~self.valid[i])
@@ -50,6 +55,13 @@ class HostCache:
 
     def evict_stale(self, it, ttl):
         self.valid &= (it - self.last_active) <= ttl
+
+    def update_gap(self, i, g):
+        self.gap[i] = np.float32(max(np.float32(g), np.float32(0.0)))
+
+    def evict_gap_stale(self, it, ttl, ttl_cold, gap_cold):
+        ttl_eff = np.where(self.gap > np.float32(gap_cold), ttl, ttl_cold)
+        self.valid &= (it - self.last_active) <= ttl_eff[:, None]
 
     def scores(self, w):
         s = self.planes[:, :, :-1] @ w + self.planes[:, :, -1]
@@ -246,46 +258,104 @@ def test_cache_layout_partition_specs():
     assert lo.cap == 7 and lo.gram and lo.axis == "data"
 
 
-def test_deprecated_workset_shim_warns_and_aliases():
-    """repro.core.workset stays importable for one release: it warns on
-    load and every name is a thin alias of the repro.cache API."""
+def test_retired_shims_are_gone():
+    """The one-release workset / GramCache shims are deleted: the module
+    does not import and the gram aliases are gone (R002 enforces this at
+    the source level too)."""
     import importlib
-    import warnings
 
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        ws = importlib.reload(importlib.import_module("repro.core.workset"))
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    assert ws.add_plane is pcache.insert
-    assert ws.gather_blocks is pcache.gather
-    assert ws.approx_oracle_all is pcache.approx_oracle_all
-    assert ws.score_all is pcache.score_all
-    assert ws.WorkSet is PlaneCache
-    assert float(ws.NEG_INF) == float(pcache.NEG_INF)
-    legacy = ws.init_workset(2, 3, 4)
-    assert isinstance(legacy, PlaneCache) and legacy.gram is None
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.workset")
+    from repro.core import gram
+
+    for name in ("GramCache", "init_gram", "add_plane_with_gram",
+                 "exact_pass_gram", "jit_exact_pass_gram"):
+        assert not hasattr(gram, name)
 
 
-def test_deprecated_gram_cache_shim(multiclass_problem):
-    """The legacy GramCache entry points still work (warning included)
-    and agree with the cache-resident gram path."""
-    from repro.core import gram, mpbcfw
+# ---------------------------------------------------------------------------
+# The per-block duality-gap vector (repro.policy's cache extension)
 
-    prob = multiclass_problem
-    lam = 1.0 / prob.n
-    rng = np.random.RandomState(2)
-    perm = jnp.asarray(rng.permutation(prob.n))
-    with pytest.deprecated_call():
-        gc = gram.init_gram(prob.n, 8)
-    mp = mpbcfw.init_mp_state(prob, cap=8)
-    with pytest.deprecated_call():
-        mp_l, gc = gram.jit_exact_pass_gram(prob, mp, gc, perm, lam=lam)
-    mp_c = mpbcfw.init_mp_state(prob, CacheLayout(cap=8, gram=True))
-    mp_c = mpbcfw.jit_exact_pass(prob, mp_c, perm, lam=lam)
-    np.testing.assert_array_equal(np.asarray(gc.gram),
-                                  np.asarray(mp_c.cache.gram))
-    np.testing.assert_array_equal(np.asarray(mp_l.inner.phi),
-                                  np.asarray(mp_c.inner.phi))
+
+def test_gap_vector_layout_and_init():
+    """track_gap adds a (n,) float32 leaf initialized to GAP_UNSEEN; the
+    layout round-trips and shards the vector with the blocks; gap-less
+    caches keep gap=None and update_gap is the identity on them."""
+    dev = pcache.init(CacheLayout(cap=3, track_gap=True), 4, 5)
+    assert dev.gap.shape == (4,) and dev.gap.dtype == jnp.float32
+    assert bool((dev.gap == pcache.GAP_UNSEEN).all())
+    assert layout_of(dev).track_gap
+    specs = partition_specs(CacheLayout(cap=3, track_gap=True,
+                                        axis="data"))
+    assert specs.gap == P("data")
+    assert partition_specs(CacheLayout(cap=3, axis="data")).gap is None
+    plain = pcache.init(CacheLayout(cap=3), 4, 5)
+    assert plain.gap is None
+    assert pcache.update_gap(plain, jnp.asarray(1),
+                             jnp.asarray(2.0)) is plain
+
+
+@pytest.mark.parametrize("seed", PROPERTY_SEEDS)
+def test_gap_ops_match_host_reference(seed):
+    """Random insert / gap fold-in / gap-aware-evict sequences: device
+    and host reference agree on validity, payloads, and the gap vector
+    (fold-in clamps at zero; inserts never touch the gap; unseen blocks
+    keep the sentinel and therefore the full TTL leash)."""
+    r = np.random.RandomState(seed)
+    n, cap, d = 5, 3, 6
+    dev = pcache.init(CacheLayout(cap=cap, track_gap=True), n, d)
+    host = HostCache(n, cap, d, track_gap=True)
+    for t in range(40):
+        op = r.rand()
+        i = int(r.randint(n))
+        if op < 0.45:
+            plane = r.randn(d + 1).astype(np.float32)
+            dev = pcache.insert(dev, jnp.asarray(i), jnp.asarray(plane),
+                                jnp.asarray(t))
+            host.insert(i, plane, t)
+        elif op < 0.75:
+            g = np.float32(r.randn())
+            dev = pcache.update_gap(dev, jnp.asarray(i), jnp.asarray(g))
+            host.update_gap(i, g)
+        else:
+            ttl = int(r.randint(2, 12))
+            ttl_cold = int(r.randint(1, ttl + 1))
+            gap_cold = float(np.float32(abs(r.randn()) * 0.5))
+            dev = pcache.evict_gap_stale(dev, jnp.asarray(t), ttl,
+                                         ttl_cold, gap_cold)
+            host.evict_gap_stale(t, ttl, ttl_cold, gap_cold)
+    np.testing.assert_array_equal(np.asarray(dev.valid), host.valid)
+    np.testing.assert_array_equal(np.asarray(dev.gap), host.gap)
+    np.testing.assert_array_equal(
+        np.asarray(dev.planes)[host.valid], host.planes[host.valid])
+    # gather carries the gap rows for the gathered blocks
+    ids = jnp.asarray([0, 2, 2], jnp.int32)
+    sub = pcache.gather(dev, ids)
+    np.testing.assert_array_equal(np.asarray(sub.gap),
+                                  host.gap[np.asarray(ids)])
+
+
+def test_evict_gap_stale_shortens_cold_blocks_leash():
+    """A block whose gap fell below gap_cold lives ttl_cold iterations;
+    a hot block (or a never-visited one, which holds the huge GAP_UNSEEN
+    sentinel) lives the full ttl."""
+    dev = pcache.init(CacheLayout(cap=2, track_gap=True), 3, 4)
+    p = np.ones(5, np.float32)
+    for i in range(3):
+        dev = pcache.insert(dev, jnp.asarray(i), jnp.asarray(p),
+                            jnp.asarray(0))
+    dev = pcache.update_gap(dev, jnp.asarray(0), jnp.asarray(1.0))  # hot
+    dev = pcache.update_gap(dev, jnp.asarray(1), jnp.asarray(0.0))  # cold
+    # block 2 stays unseen (sentinel gap)
+    out = pcache.evict_gap_stale(dev, jnp.asarray(5), ttl=10, ttl_cold=2,
+                                 gap_cold=0.5)
+    assert bool(out.valid[0].any()) and bool(out.valid[2].any())
+    assert not bool(out.valid[1].any())
+    # within the cold leash nothing is dropped
+    out2 = pcache.evict_gap_stale(dev, jnp.asarray(2), ttl=10, ttl_cold=2,
+                                  gap_cold=0.5)
+    np.testing.assert_array_equal(np.asarray(out2.valid),
+                                  np.asarray(dev.valid))
 
 
 def test_invalid_score_sentinel_single_source():

@@ -18,6 +18,13 @@ from repro.core.selection import CostModel, IterationTracker
 from repro.core.ssvm import (batched_oracle, dual_value, duality_gap,
                              init_state, primal_value, weights_of)
 
+
+def _solver_run(problem, cfg):
+    """The one-call convenience the removed driver.run shim provided."""
+    from repro.api import Solver
+
+    return Solver(problem, cfg).run()
+
 LAM = 0.05
 
 # Deterministic stand-in for hypothesis' integer strategy.
@@ -182,9 +189,9 @@ def test_mpbcfw_beats_bcfw_per_oracle_call(multiclass_problem):
     prob = multiclass_problem
     lam = 1.0 / prob.n
     cm = lambda: CostModel(oracle_cost=1.0, plane_cost=1e-4)
-    res_b = driver.run(prob, driver.RunConfig(
+    res_b = _solver_run(prob, driver.RunConfig(
         lam=lam, algo="bcfw", max_iters=6, cost_model=cm()))
-    res_m = driver.run(prob, driver.RunConfig(
+    res_m = _solver_run(prob, driver.RunConfig(
         lam=lam, algo="mpbcfw", max_iters=6, cap=16, cost_model=cm()))
     assert res_m.trace[-1].n_exact == res_b.trace[-1].n_exact
     assert res_m.trace[-1].gap < res_b.trace[-1].gap
@@ -342,7 +349,7 @@ def test_driver_one_dispatch_one_sync_per_iteration(multiclass_problem,
     two dispatches: exact pass, then multi_approx_pass)."""
     prob = multiclass_problem
     lam = 1.0 / prob.n
-    res = driver.run(prob, driver.RunConfig(
+    res = _solver_run(prob, driver.RunConfig(
         lam=lam, algo=algo, max_iters=5, cap=16,
         cost_model=CostModel()))
     for row in res.trace:
@@ -429,7 +436,7 @@ def test_outer_iteration_zero_approx_budget(multiclass_problem):
     and reports f_entry/ws_total in one sync (no fallback dual fetch)."""
     prob = multiclass_problem
     lam = 1.0 / prob.n
-    res = driver.run(prob, driver.RunConfig(
+    res = _solver_run(prob, driver.RunConfig(
         lam=lam, algo="mpbcfw", max_iters=3, cap=16, max_approx_passes=0,
         cost_model=CostModel()))
     for row in res.trace:
@@ -449,9 +456,9 @@ def test_ws_mean_one_statistic_in_both_branches(multiclass_problem):
     prob = multiclass_problem
     lam = 1.0 / prob.n
     kw = dict(lam=lam, algo="mpbcfw", max_iters=1, cap=16, seed=5)
-    res_no = driver.run(prob, driver.RunConfig(
+    res_no = _solver_run(prob, driver.RunConfig(
         max_approx_passes=0, cost_model=CostModel(), **kw))
-    res_yes = driver.run(prob, driver.RunConfig(
+    res_yes = _solver_run(prob, driver.RunConfig(
         cost_model=CostModel(), **kw))
     assert res_yes.trace[0].approx_passes > 0
     assert res_no.trace[0].ws_mean == res_yes.trace[0].ws_mean
@@ -476,7 +483,7 @@ def test_wall_clock_excludes_evaluation_time(multiclass_problem,
     monkeypatch.setattr(api_solver, "batched_oracle", slow_eval_oracle)
     iters = 3
     wall0 = time.perf_counter()
-    res = driver.run(prob, driver.RunConfig(
+    res = _solver_run(prob, driver.RunConfig(
         lam=lam, algo="mpbcfw", max_iters=iters, cap=16,
         max_approx_passes=4, cost_model=None))   # wall-clock mode
     wall = time.perf_counter() - wall0
@@ -568,7 +575,7 @@ def test_cost_model_clock():
 def test_algorithms_converge(multiclass_problem, algo):
     prob = multiclass_problem
     lam = 1.0 / prob.n
-    res = driver.run(prob, driver.RunConfig(
+    res = _solver_run(prob, driver.RunConfig(
         lam=lam, algo=algo, max_iters=8, cap=16,
         cost_model=CostModel()))
     # MP variants converge much faster per pass (the paper's claim); plain
@@ -583,11 +590,11 @@ def test_algorithms_converge(multiclass_problem, algo):
 def test_fw_and_ssg_run(multiclass_problem):
     prob = multiclass_problem
     lam = 1.0 / prob.n
-    res = driver.run(prob, driver.RunConfig(lam=lam, algo="fw",
+    res = _solver_run(prob, driver.RunConfig(lam=lam, algo="fw",
                                             max_iters=5,
                                             cost_model=CostModel()))
     assert res.trace[-1].dual >= res.trace[0].dual - 1e-6
-    res2 = driver.run(prob, driver.RunConfig(lam=lam, algo="ssg",
+    res2 = _solver_run(prob, driver.RunConfig(lam=lam, algo="ssg",
                                              max_iters=5,
                                              cost_model=CostModel()))
     assert np.isfinite(res2.trace[-1].primal)

@@ -1,0 +1,279 @@
+"""The pluggable on-device policy layer (repro.policy).
+
+Covers: registry/bundle assembly raises the typed
+`UnsupportedConfigError` at Solver construction (unknown names,
+duplicate/missing kinds, out-of-range parameters, keyed bundles on
+unkeyed algos, non-positive ttl); the default uniform/ttl-lru/slope
+bundle reproduces every pre-policy multipass engine bit for bit;
+`mpbcfw-gap` on a single device equals the 1-device data mesh; the
+gap TraceRow columns; gumbel-top-k schedule properties; and
+checkpoint/resume determinism of the keyed sampler (the PRNG stream
+rides the checkpointed host RNG).
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (RunConfig, Solver, UnsupportedConfigError,
+                       capabilities_of)
+from repro.cache import CacheLayout, init as cache_init
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.selection import CostModel
+from repro.policy import (DEFAULT_POLICIES, GAP_POLICIES, PolicyBundle,
+                          make_bundle, policy_kind, policy_names)
+
+MULTIPASS = ("mpbcfw", "mpbcfw-avg", "mpbcfw-gram", "mpbcfw-shard")
+
+
+def _cm():
+    # fresh CostModel per run: its virtual clock is mutable state, and a
+    # shared instance shifts every later trace's `time` column
+    return CostModel(oracle_cost=0.02, plane_cost=1e-4)
+
+
+def _rows_equal(ra, rb):
+    da, db = dataclasses.asdict(ra), dataclasses.asdict(rb)
+    assert da.keys() == db.keys()
+    for k in da:
+        va, vb = da[k], db[k]
+        if isinstance(va, float) and math.isnan(va):
+            assert isinstance(vb, float) and math.isnan(vb), k
+        else:
+            assert va == vb, (k, va, vb)
+
+
+# ---------------------------------------------------------------------------
+# Registry and bundle assembly
+
+
+def test_registry_kinds_and_names():
+    assert policy_kind("uniform") == "sampling"
+    assert policy_kind("gap-topk") == "sampling"
+    assert policy_kind("ttl-lru") == "eviction"
+    assert policy_kind("gap-ttl") == "eviction"
+    assert policy_kind("slope") == "oracle"
+    assert "uniform" in policy_names("sampling")
+    assert "slope" not in policy_names("sampling")
+
+
+def test_default_and_gap_bundles_assemble(multiclass_problem):
+    cfg = RunConfig(lam=0.1)
+    b = make_bundle(DEFAULT_POLICIES, cfg, multiclass_problem.n)
+    assert isinstance(b, PolicyBundle)
+    assert b.names == DEFAULT_POLICIES
+    assert not b.needs_gap and not b.needs_key
+    g = make_bundle(GAP_POLICIES, cfg, multiclass_problem.n)
+    assert g.needs_gap and g.needs_key
+    assert g.sampling.k == max(1, round(cfg.gap_frac * multiclass_problem.n))
+
+
+def test_unknown_policy_name_raises():
+    with pytest.raises(UnsupportedConfigError, match="unknown policy"):
+        policy_kind("nope")
+    with pytest.raises(UnsupportedConfigError, match="unknown policy"):
+        make_bundle(("nope", "ttl-lru", "slope"), RunConfig(lam=0.1), 8)
+
+
+def test_bundle_duplicate_kind_raises():
+    with pytest.raises(UnsupportedConfigError, match="two sampling"):
+        make_bundle(("uniform", "gap-topk", "slope"), RunConfig(lam=0.1), 8)
+
+
+def test_bundle_missing_kind_raises():
+    with pytest.raises(UnsupportedConfigError, match="missing a"):
+        make_bundle(("uniform", "ttl-lru"), RunConfig(lam=0.1), 8)
+
+
+# ---------------------------------------------------------------------------
+# Typed validation at Solver construction, never mid-run
+
+
+def test_unknown_policy_rejected_at_solver_construction(multiclass_problem):
+    cfg = RunConfig(lam=1.0 / multiclass_problem.n, algo="mpbcfw",
+                    policies=("nope", "ttl-lru", "slope"), cost_model=_cm())
+    with pytest.raises(UnsupportedConfigError, match="unknown policy"):
+        Solver(multiclass_problem, cfg)
+
+
+@pytest.mark.parametrize("frac", [0.0, -0.5, 1.5])
+def test_bad_gap_frac_rejected_at_solver_construction(multiclass_problem,
+                                                      frac):
+    cfg = RunConfig(lam=1.0 / multiclass_problem.n, algo="mpbcfw-gap",
+                    gap_frac=frac, cost_model=_cm())
+    with pytest.raises(UnsupportedConfigError, match="gap_frac"):
+        Solver(multiclass_problem, cfg)
+
+
+@pytest.mark.parametrize("ttl", [0, -3])
+def test_nonpositive_ttl_rejected(multiclass_problem, ttl):
+    cfg = RunConfig(lam=1.0 / multiclass_problem.n, algo="mpbcfw",
+                    ttl=ttl, cost_model=_cm())
+    with pytest.raises(UnsupportedConfigError, match="ttl"):
+        Solver(multiclass_problem, cfg)
+
+
+def test_keyed_bundle_rejected_on_unkeyed_algo(multiclass_problem):
+    """The gap bundle needs a per-iteration PRNG key, which only
+    `mpbcfw-gap` threads — asking `mpbcfw` for it is a config error
+    pointing at the right algo, not a silent fall-back."""
+    cfg = RunConfig(lam=1.0 / multiclass_problem.n, algo="mpbcfw",
+                    policies=GAP_POLICIES, cost_model=_cm())
+    with pytest.raises(UnsupportedConfigError, match="mpbcfw-gap"):
+        Solver(multiclass_problem, cfg)
+
+
+# ---------------------------------------------------------------------------
+# The default bundle is the pre-policy behaviour, bit for bit
+
+
+@pytest.mark.parametrize("algo", MULTIPASS)
+def test_default_bundle_reproduces_engine_bitwise(multiclass_problem,
+                                                  data_mesh, algo):
+    """`policies=None` (the engine's baked-in default) and an explicit
+    uniform/ttl-lru/slope bundle must produce identical traces and
+    weights — the refactor moved the decisions, not the program."""
+    prob = multiclass_problem
+    caps = capabilities_of(algo)
+
+    def cfg(policies):
+        kw = dict(lam=1.0 / prob.n, algo=algo, max_iters=4, cap=8,
+                  seed=11, cost_model=_cm(), policies=policies)
+        if caps.supports_mesh:
+            kw["mesh"] = data_mesh
+        if caps.requires_tau:
+            kw["tau"] = 8
+        return RunConfig(**kw)
+
+    base = Solver(prob, cfg(None)).run()
+    bundled = Solver(prob, cfg(DEFAULT_POLICIES)).run()
+    assert len(base.trace) == len(bundled.trace) == 4
+    for ra, rb in zip(base.trace, bundled.trace):
+        _rows_equal(ra, rb)
+    np.testing.assert_array_equal(base.w, bundled.w)
+
+
+# ---------------------------------------------------------------------------
+# mpbcfw-gap: single device == 1-device mesh, gap columns, convergence
+
+
+def _gap_cfg(prob, mesh=None, **kw):
+    kw.setdefault("max_iters", 4)
+    kw.setdefault("seed", 5)
+    return RunConfig(lam=1.0 / prob.n, algo="mpbcfw-gap", cap=8,
+                     gap_frac=0.5, cost_model=_cm(), mesh=mesh, **kw)
+
+
+def test_gap_engine_single_vs_mesh_parity(multiclass_problem, data_mesh):
+    prob = multiclass_problem
+    single = Solver(prob, _gap_cfg(prob)).run()
+    meshed = Solver(prob, _gap_cfg(prob, mesh=data_mesh)).run()
+    assert len(single.trace) == len(meshed.trace)
+    for ra, rb in zip(single.trace, meshed.trace):
+        _rows_equal(ra, rb)
+    np.testing.assert_array_equal(single.w, meshed.w)
+
+
+def test_gap_trace_columns_populated(multiclass_problem):
+    prob = multiclass_problem
+    res = Solver(prob, _gap_cfg(prob)).run()
+    k = max(1, round(0.5 * prob.n))
+    for row in res.trace:
+        assert row.gap_sampled == k
+        assert row.gap_total is not None
+        assert math.isfinite(row.gap_total) and row.gap_total >= 0.0
+    # per-call oracle accounting: each iteration charges k exact calls
+    assert res.trace[-1].n_exact == k * len(res.trace)
+    # the summed per-block gap estimates shrink as the blocks converge
+    assert res.trace[-1].gap_total < res.trace[0].gap_total
+
+
+def test_unkeyed_engines_report_gap_defaults(multiclass_problem):
+    prob = multiclass_problem
+    res = Solver(prob, RunConfig(lam=1.0 / prob.n, algo="mpbcfw",
+                                 max_iters=2, cap=8,
+                                 cost_model=_cm())).run()
+    for row in res.trace:
+        assert row.gap_total is None
+        assert row.gap_sampled == 0
+
+
+def test_gap_run_is_seed_deterministic(multiclass_problem):
+    prob = multiclass_problem
+    a = Solver(prob, _gap_cfg(prob)).run()
+    b = Solver(prob, _gap_cfg(prob)).run()
+    for ra, rb in zip(a.trace, b.trace):
+        _rows_equal(ra, rb)
+    np.testing.assert_array_equal(a.w, b.w)
+    c = Solver(prob, _gap_cfg(prob, seed=6)).run()
+    assert any(ra.gap_total != rc.gap_total
+               for ra, rc in zip(a.trace, c.trace)) or not np.array_equal(
+                   np.asarray(a.w), np.asarray(c.w))
+
+
+# ---------------------------------------------------------------------------
+# The gumbel-top-k schedule itself
+
+
+def test_gap_schedule_is_valid_sample_without_replacement():
+    n, k = 32, 8
+    bundle = make_bundle(GAP_POLICIES, RunConfig(lam=0.1, gap_frac=k / n),
+                         n)
+    cache = cache_init(CacheLayout(cap=4, track_gap=True), n, 3)
+    ids = np.asarray(bundle.sampling.schedule(
+        cache, jnp.arange(n, dtype=jnp.int32), jax.random.PRNGKey(0)))
+    assert ids.shape == (k,)
+    assert len(set(ids.tolist())) == k
+    assert ((ids >= 0) & (ids < n)).all()
+
+
+def test_gap_schedule_prefers_unseen_then_large_gaps():
+    n, k = 16, 4
+    bundle = make_bundle(GAP_POLICIES, RunConfig(lam=0.1, gap_frac=k / n),
+                         n)
+    cache = cache_init(CacheLayout(cap=4, track_gap=True), n, 3)
+    # mark all but blocks {2, 9} as seen with tiny gaps: the two unseen
+    # blocks hold GAP_UNSEEN and must always be scheduled first
+    seen = jnp.full((n,), 1e-4, jnp.float32)
+    gap = cache.gap.at[jnp.arange(n)].set(
+        jnp.where((jnp.arange(n) == 2) | (jnp.arange(n) == 9),
+                  cache.gap, seen))
+    cache = cache._replace(gap=gap)
+    for s in range(20):
+        ids = set(np.asarray(bundle.sampling.schedule(
+            cache, jnp.arange(n, dtype=jnp.int32),
+            jax.random.PRNGKey(s))).tolist())
+        assert {2, 9} <= ids
+    # all seen, one dominant gap: it should be scheduled almost always
+    gap = seen.at[7].set(1e3)
+    cache = cache._replace(gap=gap)
+    hits = sum(7 in np.asarray(bundle.sampling.schedule(
+        cache, jnp.arange(n, dtype=jnp.int32),
+        jax.random.PRNGKey(s))).tolist() for s in range(20))
+    assert hits >= 18
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume: the sampler's PRNG stream rides the host RNG
+
+
+def test_gap_checkpoint_resume_trace_bitwise(tmp_path, multiclass_problem):
+    prob = multiclass_problem
+
+    full = Solver(prob, _gap_cfg(prob, max_iters=6)).run()
+
+    mgr = CheckpointManager(str(tmp_path / "gap-ckpt"))
+    s1 = Solver(prob, _gap_cfg(prob, max_iters=6))
+    it = s1.iterate()
+    rows_head = [next(it) for _ in range(3)]
+    assert s1.save(mgr) == 3
+
+    s2 = Solver.restore(prob, _gap_cfg(prob, max_iters=6), mgr)
+    rows_tail = list(s2.iterate())
+    assert [r.iteration for r in rows_tail] == [3, 4, 5]
+    for ra, rb in zip(rows_head + rows_tail, full.trace):
+        _rows_equal(ra, rb)
+    np.testing.assert_array_equal(s2.result().w, full.w)

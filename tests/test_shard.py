@@ -20,6 +20,13 @@ from repro.ft import fallback_planes
 from repro.launch import mesh as mesh_mod
 from repro.shard import ShardEngine, sharded_approx_pass
 
+
+def _solver_run(problem, cfg):
+    """The one-call convenience the removed driver.run shim provided."""
+    from repro.api import Solver
+
+    return Solver(problem, cfg).run()
+
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
@@ -195,9 +202,9 @@ def test_shard_driver_trace_bitwise_matches_mpbcfw(multiclass_problem,
     prob = multiclass_problem
     lam = 1.0 / prob.n
     kw = dict(lam=lam, max_iters=4, cap=8, seed=3)
-    res_a = driver.run(prob, driver.RunConfig(
+    res_a = _solver_run(prob, driver.RunConfig(
         algo="mpbcfw", cost_model=CostModel(plane_cost=1e-3), **kw))
-    res_b = driver.run(prob, driver.RunConfig(
+    res_b = _solver_run(prob, driver.RunConfig(
         algo="mpbcfw-shard", mesh=data_mesh,
         cost_model=CostModel(plane_cost=1e-3), **kw))
     assert len(res_a.trace) == len(res_b.trace)
@@ -216,7 +223,7 @@ def test_shard_driver_tau_variant(multiclass_problem, data_mesh):
 
     prob = multiclass_problem
     lam = 1.0 / prob.n
-    res = driver.run(prob, driver.RunConfig(
+    res = _solver_run(prob, driver.RunConfig(
         lam=lam, algo="mpbcfw-shard-tau", tau=8, mesh=data_mesh,
         max_iters=3, cap=8, cost_model=CostModel()))
     duals = [t.dual for t in res.trace]
@@ -225,7 +232,7 @@ def test_shard_driver_tau_variant(multiclass_problem, data_mesh):
     for row in res.trace:
         assert row.host_syncs == 1 and row.dispatches == 1
     with pytest.raises(ValueError, match="requires RunConfig.tau"):
-        driver.run(prob, driver.RunConfig(
+        _solver_run(prob, driver.RunConfig(
             lam=lam, algo="mpbcfw-shard-tau", mesh=data_mesh,
             max_iters=1, cost_model=CostModel()))
 
@@ -272,7 +279,7 @@ def test_mesh_on_single_device_engine_still_refused(multiclass_problem,
     from repro.core.selection import CostModel
 
     with pytest.raises(ValueError, match="only consumed by"):
-        driver.run(multiclass_problem, driver.RunConfig(
+        _solver_run(multiclass_problem, driver.RunConfig(
             lam=0.1, algo="bcfw", mesh=data_mesh, max_iters=1,
             cost_model=CostModel()))
 
@@ -436,7 +443,7 @@ _MULTIDEV_DRIVER_SCRIPT = textwrap.dedent("""
     assert force_host_platform_device_count(8)
     import jax
     import jax.numpy as jnp
-    from repro.core import driver
+    from repro.api import RunConfig, Solver
     from repro.core.selection import CostModel
     from repro.data import synthetic
     from repro.core.oracles import multiclass
@@ -447,9 +454,10 @@ _MULTIDEV_DRIVER_SCRIPT = textwrap.dedent("""
     lam = 1.0 / prob.n
     # max_approx_passes <= approx_batch so every iteration fits one fused
     # program (otherwise overflow batches legitimately add syncs).
-    res = driver.run(prob, driver.RunConfig(
+    res = Solver(prob, RunConfig(
         lam=lam, algo="mpbcfw-shard", mesh=make_data_mesh(8),
-        max_iters=3, cap=8, max_approx_passes=32, cost_model=CostModel()))
+        max_iters=3, cap=8, max_approx_passes=32,
+        cost_model=CostModel())).run()
     for row in res.trace:
         assert row.host_syncs == 1, row
         assert row.dispatches == 1, row
@@ -462,7 +470,7 @@ _MULTIDEV_DRIVER_SCRIPT = textwrap.dedent("""
 
 @pytest.mark.mesh
 def test_driver_shard_algo_on_eight_forced_devices():
-    """`driver.run(algo='mpbcfw-shard')` end-to-end on a real 8-shard
+    """`_solver_run(algo='mpbcfw-shard')` end-to-end on a real 8-shard
     mesh: monotone duals, one dispatch and one host sync per outer
     iteration.  Fresh subprocess (device count forced before jax init)."""
     env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
