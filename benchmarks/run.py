@@ -15,6 +15,9 @@ Prints ``name,value,derived`` CSV rows:
              collectives (the budgets ``repro.analysis`` proves)
   * obs_overhead_* host wall time per iteration with and without a
              ``repro.obs.RunRecorder`` installed (recorder cost)
+  * serve_*  batched structured-prediction serving: closed/open-loop
+             p50/p99 latency (us), labels/sec throughput, and the
+             batched-vs-one-at-a-time speedup per bundled spec
   * dryrun_/roofline_ summary of the (arch x shape) grid
 
 ``--smoke``: a fast CI-friendly subset — 4-iteration convergence runs and
@@ -31,7 +34,8 @@ def main() -> None:
     quick = "--quick" in sys.argv
     smoke = "--smoke" in sys.argv
     from . import (analysis_bench, kernel_bench, obs_bench,
-                   paper_convergence, sharded_bench, workset_stats)
+                   paper_convergence, serving_bench, sharded_bench,
+                   workset_stats)
     rows = []
     rows += paper_convergence.main(quick=quick or smoke)
     rows += workset_stats.main()
@@ -39,6 +43,7 @@ def main() -> None:
     rows += kernel_bench.main(smoke=smoke)
     rows += analysis_bench.main(smoke=smoke)
     rows += obs_bench.main(smoke=smoke)
+    rows += serving_bench.main(smoke=smoke)
     if not smoke:
         from . import roofline_report
         rows += roofline_report.main()

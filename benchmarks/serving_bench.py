@@ -1,0 +1,208 @@
+"""Serving benchmark rows (``serve_*``): latency + throughput at load.
+
+Drives :class:`repro.serve.StructuredServer` over the three bundled
+specs with two load generators:
+
+  * **closed loop** — the full request set is admitted up front and the
+    server drains it at maximum rate: throughput under backlog
+    (``serve_throughput_<kind>`` labels/sec) and the in-system latency
+    distribution (``serve_p50_us_<kind>`` / ``serve_p99_us_<kind>``);
+  * **open loop** — arrivals on a fixed-rate schedule over a virtual
+    clock that advances by the *measured* wall time of each serving
+    round, so queueing delay at the offered load is simulated with real
+    service times (``serve_p50_us_<kind>_open`` / ``_p99_``,
+    ``serve_throughput_<kind>_open``).
+
+A one-at-a-time baseline (per-example ``spec.decode``, jit-cached per
+shape, no batching) is timed on the same request stream
+(``serve_throughput_<kind>_single``); ``serve_batched_speedup_<kind>``
+is the batched/single throughput ratio the bucketed path must keep > 1.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class _VirtualClock:
+    """Open-loop clock: runs in real time while the server works, jumps
+    forward over idle gaps to the next scheduled arrival — so measured
+    latencies are real service + simulated queueing, without sleeping
+    through the arrival schedule."""
+
+    def __init__(self) -> None:
+        self._offset = -time.perf_counter()
+
+    def __call__(self) -> float:
+        return self._offset + time.perf_counter()
+
+    def advance_to(self, t: float) -> None:
+        now = self()
+        if t > now:
+            self._offset += t - now
+
+
+def _trim(ex, L):
+    return {k: np.asarray(v)[:L] for k, v in ex.items()}
+
+
+def _workloads(smoke: bool):
+    """(kind, spec, w, requests) per bundled spec, sized for the mode."""
+    from repro.core.oracles.chain import ChainSpec
+    from repro.core.oracles.graph import GraphSpec
+    from repro.core.oracles.multiclass import MulticlassSpec
+    from repro.data import synthetic
+
+    rng = np.random.RandomState(7)
+    n_chain, n_mc, n_graph = (24, 48, 12) if smoke else (96, 192, 48)
+
+    chain = ChainSpec(num_labels=8)
+    X, Y, M = synthetic.ocr_like(n=n_chain, f=16, num_labels=8,
+                                 mean_len=9, max_len=14, seed=1)
+    chain_reqs = [_trim({"x": X[i], "y": Y[i], "mask": M[i]},
+                        int(M[i].sum())) for i in range(n_chain)]
+    chain_w = rng.randn(chain.dim({"x": X})).astype(np.float32)
+
+    mc = MulticlassSpec(num_classes=10)
+    x, y = synthetic.usps_like(n=n_mc, f=32, num_classes=10, seed=2)
+    mc_reqs = [{"x": x[i], "y": y[i]} for i in range(n_mc)]
+    mc_w = rng.randn(mc.dim({"x": x})).astype(np.float32)
+
+    graph = GraphSpec(num_sweeps=4)
+    Xg, Yg, Mg, Eg, EMg, Cg = synthetic.horseseg_like(
+        n=n_graph, grid=(4, 5), f=12, seed=3)
+    graph_reqs = [{"x": Xg[i], "y": Yg[i], "mask": Mg[i], "edges": Eg[i],
+                   "edge_mask": EMg[i], "color": Cg[i]}
+                  for i in range(n_graph)]
+    graph_w = rng.randn(graph.dim({"x": Xg})).astype(np.float32)
+
+    return [("chain", chain, chain_w, chain_reqs),
+            ("multiclass", mc, mc_w, mc_reqs),
+            ("graph", graph, graph_w, graph_reqs)]
+
+
+def _server(model, engine, batch_size: int, clock=time.perf_counter):
+    from repro.serve import StructuredServer
+
+    # The shared engine carries the jit cache: every server reuses the
+    # already-compiled per-bucket executables (a fresh engine per server
+    # would recompile every bucket inside the timed region).
+    return StructuredServer(model, batch_size=batch_size,
+                            bucket_granularity=4, engine=engine,
+                            clock=clock)
+
+
+def _warm(model, engine, batch_size: int, requests) -> None:
+    """Compile every padding-bucket program outside the timed region."""
+    _server(model, engine, batch_size).serve(requests)
+
+
+def _closed_loop(model, engine, batch_size: int, requests):
+    server = _server(model, engine, batch_size)
+    t0 = time.perf_counter()
+    for r in requests:
+        server.submit(r)
+    done = server.drain()
+    wall = time.perf_counter() - t0
+    lat = np.array([r.latency for r in done])
+    labels = sum(r.labels.size for r in done)
+    return lat, labels / wall, labels / len(done)
+
+
+def _open_loop(model, engine, batch_size: int, requests,
+               rate_rps: float):
+    """Fixed-rate arrival schedule on the jumpable clock."""
+    clock = _VirtualClock()
+    server = _server(model, engine, batch_size, clock=clock)
+    arrivals = [(i / rate_rps, r) for i, r in enumerate(requests)]
+    done, i = [], 0
+    while i < len(arrivals) or server.pending:
+        if not server.pending and i < len(arrivals):
+            clock.advance_to(arrivals[i][0])
+        while i < len(arrivals) and arrivals[i][0] <= clock():
+            server.submit(arrivals[i][1], t=arrivals[i][0])
+            i += 1
+        done += server.step()
+    lat = np.array([r.latency for r in done])
+    labels = sum(r.labels.size for r in done)
+    return lat, labels / max(clock(), 1e-9)
+
+
+def _single_loop(model, requests):
+    """One-at-a-time baseline: per-example decode, no batching.  Each
+    distinct request shape jit-caches its own program (warmed before the
+    timed region); the timed loop does what a naive serving loop does
+    per request — host example in, device decode, labels back out."""
+    decode = jax.jit(model.spec.decode)
+    for r in requests:                                # warm per shape
+        jax.block_until_ready(decode(
+            model.w, {k: jnp.asarray(v) for k, v in r.items()}))
+    t0 = time.perf_counter()
+    labels = 0
+    for r in requests:
+        dev = {k: jnp.asarray(v) for k, v in r.items()}
+        labels += np.asarray(decode(model.w, dev)).size
+    wall = time.perf_counter() - t0
+    return labels / wall
+
+
+def main(smoke: bool = False) -> List[Tuple]:
+    from repro.serve import ServableModel
+
+    from repro.serve import decode_engine_for
+
+    rows: List[Tuple] = []
+    batch_size = 8
+    for kind, spec, w, requests in _workloads(smoke):
+        model = ServableModel(spec, jnp.asarray(w))
+        engine = decode_engine_for(model)
+        _warm(model, engine, batch_size, requests)
+
+        lat, thr, labels_per_req = _closed_loop(model, engine,
+                                                batch_size, requests)
+        rows += [
+            (f"serve_p50_us_{kind}",
+             round(float(np.percentile(lat, 50)) * 1e6, 1),
+             f"closed-loop in-system p50, batch={batch_size}"),
+            (f"serve_p99_us_{kind}",
+             round(float(np.percentile(lat, 99)) * 1e6, 1),
+             "closed-loop in-system p99"),
+            (f"serve_throughput_{kind}", round(thr, 1),
+             "labels/sec draining the backlog"),
+        ]
+
+        # Offer ~half the drain rate so the open-loop queue stays short.
+        rate = max(0.5 * thr / max(labels_per_req, 1e-9), 1.0)
+        lat_o, thr_o = _open_loop(model, engine, batch_size, requests,
+                                  rate)
+        rows += [
+            (f"serve_p50_us_{kind}_open",
+             round(float(np.percentile(lat_o, 50)) * 1e6, 1),
+             f"open-loop p50 at {rate:.0f} req/s offered"),
+            (f"serve_p99_us_{kind}_open",
+             round(float(np.percentile(lat_o, 99)) * 1e6, 1),
+             "open-loop p99 (queueing + service)"),
+            (f"serve_throughput_{kind}_open", round(thr_o, 1),
+             "labels/sec at the offered load"),
+        ]
+
+        thr_single = _single_loop(model, requests)
+        rows += [
+            (f"serve_throughput_{kind}_single", round(thr_single, 1),
+             "one-at-a-time per-example decode baseline"),
+            (f"serve_batched_speedup_{kind}",
+             round(thr / max(thr_single, 1e-9), 2),
+             "batched bucketed / single-request throughput"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for r in main(smoke="--smoke" in sys.argv):
+        print(",".join(str(x) for x in r))

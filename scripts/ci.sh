@@ -13,10 +13,17 @@
 #   scripts/ci.sh --policy   # only the policy stage: the repro.policy
 #                            #   property tests + the gap-vs-uniform
 #                            #   oracle-call convergence smoke row
+#   scripts/ci.sh --serve    # only the serve stage: the repro.serve +
+#                            #   viterbi tests, then the serving bench
+#                            #   which must emit serve_p50_us_* /
+#                            #   serve_p99_us_* / serve_throughput_*
+#                            #   rows with the batched path beating the
+#                            #   one-at-a-time baseline
 #
-# The obs and policy stages also run as part of the default flow (after
-# the test suite, before/with the benchmark smoke) so a broken
-# recorder/CLI or a gap-sampling regression fails CI.
+# The obs, policy, and serve stages also run as part of the default flow
+# (after the test suite, before/with the benchmark smoke) so a broken
+# recorder/CLI, a gap-sampling regression, or a serving regression
+# fails CI.
 #
 # The smoke benchmarks exercise the public Solver path end to end,
 # including the fused score+select kernel vs the two-step path, the
@@ -31,12 +38,14 @@ MESH=0
 ANALYZE=0
 OBS_ONLY=0
 POLICY_ONLY=0
+SERVE_ONLY=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--mesh" ]]; then MESH=1
   elif [[ "$a" == "--analyze" ]]; then ANALYZE=1
   elif [[ "$a" == "--obs" ]]; then OBS_ONLY=1
   elif [[ "$a" == "--policy" ]]; then POLICY_ONLY=1
+  elif [[ "$a" == "--serve" ]]; then SERVE_ONLY=1
   else ARGS+=("$a"); fi
 done
 
@@ -72,8 +81,42 @@ policy_stage() {
   python -m benchmarks.paper_convergence --smoke
 }
 
+serve_stage() {
+  # Serving gate: the serve/viterbi test suites (export round-trip,
+  # batcher contracts, kernel-vs-NumPy properties), then the serving
+  # bench, which must emit latency/throughput rows for every bundled
+  # spec and show the batched bucketed path beating one-at-a-time
+  # decode on throughput.
+  python -m pytest -x -q tests/test_serve.py tests/test_viterbi.py
+  local out
+  out="$(mktemp)"
+  python -m benchmarks.serving_bench --smoke | tee "$out"
+  python - "$out" <<'EOF'
+import sys
+rows = {}
+for line in open(sys.argv[1]):
+    line = line.strip()
+    if line:
+        name, value = line.split(",")[:2]
+        rows[name] = float(value)
+for kind in ("chain", "multiclass", "graph"):
+    for prefix in ("serve_p50_us_", "serve_p99_us_", "serve_throughput_"):
+        assert prefix + kind in rows, f"missing {prefix + kind} row"
+    speedup = rows[f"serve_batched_speedup_{kind}"]
+    assert speedup > 1.0, \
+        f"batched serving lost to one-at-a-time on {kind}: {speedup}x"
+print("serve stage OK: batched path beats single-request decode")
+EOF
+  rm -f "$out"
+}
+
 if [[ "$OBS_ONLY" == 1 ]]; then
   obs_stage
+  exit 0
+fi
+
+if [[ "$SERVE_ONLY" == 1 ]]; then
+  serve_stage
   exit 0
 fi
 
@@ -97,6 +140,7 @@ if [[ "$MESH" == 1 ]]; then
   python -m pytest -x -q -m "not mesh" ${ARGS[@]+"${ARGS[@]}"}
   obs_stage
   policy_stage
+  serve_stage
   python -m benchmarks.run --smoke
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m mesh ${ARGS[@]+"${ARGS[@]}"}
@@ -104,5 +148,6 @@ else
   python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
   obs_stage
   policy_stage
+  serve_stage
   python -m benchmarks.run --smoke
 fi

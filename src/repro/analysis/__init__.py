@@ -9,7 +9,9 @@ executing anything, in three layers:
      fused program(s) with ``jax.make_jaxpr`` and check the statically
      counted collectives / host callbacks / dtypes against the budgets
      declared on :class:`repro.api.engine.EngineCapabilities`
-     (rules J001-J005);
+     (rules J001-J007), and prove each registered serving
+     :class:`repro.serve.engine.DecodeEngine`'s per-round program is one
+     clean dispatch — no callbacks, collectives, or f64 (rule J008);
   2. :mod:`~repro.analysis.hlo` — lower the same programs to optimized
      HLO and cross-check what XLA actually emitted, plus the Pallas
      (8, 128) tile-alignment policies (rules H001-H004);
@@ -26,9 +28,9 @@ from __future__ import annotations
 
 from typing import Iterable, Optional
 
-from .contracts import (EngineTrace, ProgramFacts, count_program,
-                        install_registration_guard, run_jaxpr_layer,
-                        trace_cases, trace_engine)
+from .contracts import (EngineTrace, ProgramFacts, check_serve_engines,
+                        count_program, install_registration_guard,
+                        run_jaxpr_layer, trace_cases, trace_engine)
 from .findings import RULES, Finding, Report, rule_table
 from .hlo import check_tiles, run_hlo_layer
 from .lint import lint_source, run_lint_layer
@@ -69,7 +71,8 @@ def run_all(layers: Iterable[str] = LAYERS,
 
 __all__ = [
     "LAYERS", "RULES", "EngineTrace", "Finding", "ProgramFacts", "Report",
-    "check_tiles", "count_program", "install_registration_guard",
+    "check_serve_engines", "check_tiles", "count_program",
+    "install_registration_guard",
     "lint_source", "rule_table", "run_all", "run_hlo_layer",
     "run_jaxpr_layer", "run_lint_layer", "trace_cases", "trace_engine",
 ]

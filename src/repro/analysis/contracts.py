@@ -455,11 +455,58 @@ def _check_accum_dtype(et: EngineTrace,
     return out
 
 
+def check_serve_engines() -> Tuple[List[Finding],
+                                   Dict[str, Dict[str, object]]]:
+    """Rule J008: the serving round programs are clean single dispatches.
+
+    Every :class:`repro.serve.engine.DecodeEngine` registered with a
+    canonical trace case has its per-round batched decode traced (via
+    ``engine.program`` — ``jax.make_jaxpr``, nothing runs) and walked
+    with the same :func:`count_program` the training engines use.
+    Serving is single-device and the batcher performs exactly one
+    dispatch + one sync per round, so the program must contain zero
+    host-callback primitives, zero collectives, and zero float64 avals —
+    otherwise a round would hide extra host traffic the
+    :class:`~repro.serve.metrics.ServeLedger` cannot see.
+    """
+    from ..serve.engine import serve_trace_cases
+
+    findings: List[Finding] = []
+    facts: Dict[str, Dict[str, object]] = {}
+    for label, engine, batch in serve_trace_cases():
+        where = f"serve:{label}"
+        jaxpr, _ = engine.program(batch)
+        f = count_program(jaxpr)
+        facts[where] = {"collectives": f.total_collectives,
+                        "callbacks": f.callbacks,
+                        "f64_avals": f.f64_avals}
+        if f.callbacks:
+            findings.append(Finding(
+                "J008", where,
+                f"{f.callbacks} host-callback primitive(s) in the "
+                f"per-round decode program (detail: {f.detail}); a "
+                "serving round must be one clean dispatch"))
+        if f.total_collectives:
+            findings.append(Finding(
+                "J008", where,
+                f"{f.total_collectives} collective(s) in the per-round "
+                f"decode program (detail: {f.detail}); serving is "
+                "single-device"))
+        if f.f64_avals:
+            findings.append(Finding(
+                "J008", where,
+                f"{f.f64_avals} float64 aval(s) in the per-round decode "
+                "program (fp32 serving discipline)"))
+    return findings, facts
+
+
 def run_jaxpr_layer(engines: Optional[Iterable[str]] = None
                     ) -> Tuple[List[Finding], Dict[str, Dict[str, object]],
                                List[EngineTrace]]:
-    """Trace + check all requested engines.  Returns the traces too so
-    the HLO layer can lower the same programs without re-tracing."""
+    """Trace + check all requested engines (training engines against
+    their declared budgets, serving decode engines against J008).
+    Returns the training traces too so the HLO layer can lower the same
+    programs without re-tracing."""
     findings: List[Finding] = []
     facts: Dict[str, Dict[str, object]] = {}
     traces = trace_cases(engines)
@@ -467,6 +514,9 @@ def run_jaxpr_layer(engines: Optional[Iterable[str]] = None
         fs, fx = check_trace(et)
         findings.extend(fs)
         facts[et.label] = fx
+    serve_findings, serve_facts = check_serve_engines()
+    findings.extend(serve_findings)
+    facts.update(serve_facts)
     return findings, facts, traces
 
 

@@ -35,6 +35,12 @@ RULES: Dict[str, str] = {
             "and gap_sampled (() int32) through the same stats sync — "
             "a policy-carrying program keeps 1 dispatch, 1 host sync, "
             "and the declared collective budgets",
+    "J008": "serving contract: a registered DecodeEngine's per-round "
+            "batched decode program must stay one clean dispatch — "
+            "zero host-callback primitives, zero collectives, zero "
+            "float64 avals (serving is single-device; the batcher's "
+            "ServeLedger asserts the same 1-dispatch/1-sync round at "
+            "runtime)",
     # Layer 2: compiled-HLO cross-checks
     "H001": "optimized HLO contains more collective ops than the jaxpr "
             "(XLA introduced a collective, e.g. a hidden all-reduce)",

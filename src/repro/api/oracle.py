@@ -145,4 +145,5 @@ def build_problem(spec: OracleSpec, data: Any,
         return plane
 
     return SSVMProblem(n=n, d=d, data=data, oracle=oracle,
-                       meta=meta if meta is not None else spec.meta(data))
+                       meta=meta if meta is not None else spec.meta(data),
+                       spec=spec)

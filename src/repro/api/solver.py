@@ -498,6 +498,20 @@ class Solver:
                 cache_hit_rate=hit_rate, planes_evicted=evicted,
                 oracle_share=oracle_share, **gap_kw)
 
+    # -- serving export -----------------------------------------------------
+
+    def servable(self, *, averaged: bool = False,
+                 meta: Optional[dict] = None):
+        """Export the current weights as a
+        :class:`repro.serve.ServableModel` (requires the problem to have
+        been built from an :class:`~repro.api.oracle.OracleSpec`).  Lazy
+        import keeps training-only processes free of the serving layer.
+        """
+        from ..serve.export import ServableModel
+
+        return ServableModel.from_solver(self, averaged=averaged,
+                                         meta=meta)
+
     # -- checkpoint / resume ------------------------------------------------
 
     def save(self, manager: Optional[CheckpointManager] = None,

@@ -62,6 +62,11 @@ class SSVMProblem(NamedTuple):
     oracle: Callable[[jnp.ndarray, Any], jnp.ndarray]
     # Optional metadata (e.g. number of classes); opaque to the optimizer.
     meta: Any = None
+    # The declarative OracleSpec the problem was assembled from (None for
+    # hand-rolled oracles).  Opaque to the optimizer; the serving layer
+    # (repro.serve) uses it to export a trained w as a ServableModel whose
+    # decode is the *same* spec.decode that defined training.
+    spec: Any = None
 
 
 class PassStats(NamedTuple):

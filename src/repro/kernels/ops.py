@@ -75,6 +75,29 @@ def plane_select(planes, w, offsets, valid, *, neg=INVALID_SCORE, **kw):
     return ref.plane_select_ref(planes, w, offsets, valid, neg)
 
 
+def viterbi_step(m, trans, **kw):
+    if use_pallas():
+        return _vit.viterbi_step(m, trans, **kw)
+    return ref.viterbi_step_ref(m, trans)
+
+
+def viterbi_decode_batch(unary, trans, mask, **kw):
+    """Batched masked Viterbi decode (serving hot path).
+
+    ``unary (B, L, C)``, ``trans (C, C)``, ``mask (B, L)``; returns
+    ``(B, L)`` int32 labels, each row bit-for-bit
+    ``chain.viterbi_decode`` on that example.  On TPU the inner max-plus
+    step is the Pallas :func:`repro.kernels.viterbi.viterbi_step` kernel;
+    elsewhere the jnp reference step runs inside the same fixed-shape
+    scan, so the decode stays one compiled program per padding bucket on
+    every backend.
+    """
+    if use_pallas():
+        return _vit.viterbi_decode_batch(unary, trans, mask, **kw)
+    return _vit.viterbi_decode_batch(unary, trans, mask,
+                                     step_fn=ref.viterbi_step_ref, **kw)
+
+
 def gram(planes, **kw):
     if use_pallas():
         return _gram.gram(planes, **kw)

@@ -64,3 +64,52 @@ def viterbi_step(m: jnp.ndarray, trans: jnp.ndarray, *, block_b: int = 8,
         interpret=interpret,
     )(mp, tp)
     return out[:B, :C], back[:B, :C]
+
+
+def viterbi_decode_batch(unary: jnp.ndarray, trans: jnp.ndarray,
+                         mask: jnp.ndarray, *, step_fn=None,
+                         block_b: int = 8, interpret: bool = False):
+    """Batched masked Viterbi decode — the serving-side entry point.
+
+    ``unary (B, L, C)``, ``trans (C, C)``, ``mask (B, L)`` bool with
+    ``mask[:, 0]`` all True.  Returns ``(B, L)`` int32 labelings, each row
+    bit-for-bit equal to :func:`repro.core.oracles.chain.viterbi_decode`
+    on that example: valid DP steps run through ``step_fn`` (the Pallas
+    :func:`viterbi_step` by default; the jnp reference elsewhere — see
+    :func:`repro.kernels.ops.viterbi_decode_batch`), and padded steps take
+    the score-neutral masked branch (transitions zeroed, so the candidate
+    matrix collapses to ``m_prev`` broadcast — exactly what the masked
+    per-example scan computes).  The whole decode (forward DP + batched
+    backtrace) is one fixed-shape program per ``(B, L, C)`` bucket.
+    """
+    if step_fn is None:
+        step_fn = functools.partial(viterbi_step, block_b=block_b,
+                                    interpret=interpret)
+    B, L, C = unary.shape
+    u = jnp.where(mask[:, :, None], unary, 0.0)
+
+    def step(m_prev, inputs):
+        u_l, valid = inputs                     # (B, C), (B,)
+        # Valid steps: max-plus through the shared (C, C) transition tile.
+        m_k, back_k = step_fn(m_prev, trans)
+        # Padded steps zero the transitions, so cand[c', c] = m_prev[c'];
+        # the max/argmax collapse to the per-example max over m_prev.
+        m_p = jnp.max(m_prev, axis=1, keepdims=True)
+        back_p = jnp.argmax(m_prev, axis=1).astype(jnp.int32)[:, None]
+        v = valid[:, None]
+        m = jnp.where(v, m_k, m_p) + u_l
+        back = jnp.where(v, back_k, jnp.broadcast_to(back_p, back_k.shape))
+        return m, back
+
+    m_final, backs = jax.lax.scan(
+        step, u[:, 0],
+        (jnp.swapaxes(u[:, 1:], 0, 1), jnp.swapaxes(mask[:, 1:], 0, 1)))
+    y_last = jnp.argmax(m_final, axis=1).astype(jnp.int32)
+
+    def back_step(y_next, back_l):              # back_l: (B, C)
+        y = jnp.take_along_axis(back_l, y_next[:, None], axis=1)[:, 0]
+        return y, y
+
+    _, ys_rev = jax.lax.scan(back_step, y_last, backs, reverse=True)
+    ys = jnp.concatenate([ys_rev, y_last[None]], axis=0)   # (L, B)
+    return jnp.swapaxes(ys, 0, 1).astype(jnp.int32)

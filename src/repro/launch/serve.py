@@ -30,6 +30,9 @@ class Request:
     max_new: int
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # prompt tokens scheduled into the slot so far (chunked prefill
+    # cursor); generation starts once the whole prompt is consumed.
+    fed: int = 0
 
 
 class Server:
@@ -56,27 +59,44 @@ class Server:
         for s in range(self.slots):
             if self.active[s] is None:
                 self.active[s] = req
-                # prefill: feed prompt tokens one at a time (tiny models;
-                # a production server uses the chunked prefill path)
-                for t in req.prompt:
-                    self.tokens[s, 0] = t
+                # Chunked prefill inside the lock-step loop: schedule the
+                # first prompt token now; decode_round feeds the rest one
+                # per round (every prompt token must pass through the
+                # model so the KV cache sees the whole prompt — writing
+                # only the last one would condition generation on a
+                # single token).
+                self.tokens[s, 0] = int(req.prompt[0])
+                req.fed = 1
                 return True
         return False
 
-    def decode_round(self):
+    def decode_round(self) -> List[Request]:
+        """One lock-step decode over all slots; returns the requests
+        that finished this round (their slots free immediately)."""
         nxt, self.cache = self._step(
             self.params, self.cache, jnp.asarray(self.tokens),
             jnp.asarray(self.pos, jnp.int32))
         self.pos += 1
         nxt = np.asarray(nxt)
+        finished: List[Request] = []
         for s, req in enumerate(self.active):
             if req is None:
                 continue
+            if req.fed < len(req.prompt):
+                # Still prefilling: the model just consumed prompt token
+                # fed-1; schedule the next one and discard the logits.
+                self.tokens[s, 0] = int(req.prompt[req.fed])
+                req.fed += 1
+                continue
+            # Prompt fully consumed — nxt[s] is a generated token (the
+            # first one is conditioned on the entire prompt).
             req.out.append(int(nxt[s]))
             self.tokens[s, 0] = int(nxt[s])
             if len(req.out) >= req.max_new:
                 req.done = True
+                finished.append(req)
                 self.active[s] = None
+        return finished
 
 
 def main():
@@ -99,11 +119,12 @@ def main():
     while pending or any(server.active):
         while pending and server.add(pending[0]):
             pending.pop(0)
-        server.decode_round()
-        completed += [r for r in [*server.active] if r and r.done]
+        completed += server.decode_round()
     dt = time.time() - t0
-    total_tokens = args.requests * args.max_new
-    print(f"served {args.requests} requests, {total_tokens} tokens "
+    total_tokens = sum(len(r.out) for r in completed)
+    assert len(completed) == args.requests, \
+        f"served {len(completed)} of {args.requests} requests"
+    print(f"served {len(completed)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
 
 

@@ -85,6 +85,22 @@ class RunRecorder:
             "engine_budgets": budgets,
         })
 
+    def open_custom(self, *, algo: str, n: int, d: int,
+                    time_mode: str = "wall",
+                    engine_budgets: Optional[dict] = None,
+                    **extra) -> None:
+        """Write a schema-valid meta record for a non-Solver run.
+
+        Other subsystems that reuse the run-trace format (e.g. the
+        serving loop in :mod:`repro.serve.batcher`) open their file with
+        this instead of :meth:`open_run` — same required fields, caller
+        supplies the values (``algo`` names the workload, e.g.
+        ``"serve:chain"``)."""
+        self._write(dict(extra, type="meta", schema=SCHEMA_VERSION,
+                         algo=algo, n=int(n), d=int(d),
+                         time_mode=time_mode,
+                         engine_budgets=dict(engine_budgets or {})))
+
     def close(self) -> None:
         """Write the summary record (final metrics snapshot) and close."""
         if self._closed:

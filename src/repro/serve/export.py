@@ -1,0 +1,184 @@
+"""Train -> serve export: :class:`ServableModel` and spec serialization.
+
+A deployed structural SVM is nothing but a weight vector ``w`` plus the
+task's :class:`~repro.api.oracle.OracleSpec`: the decoder a request runs
+at test time is the *same* ``spec.decode(w, example)`` the max-oracle ran
+during training (graph cut / Viterbi / argmax — the paper's costly
+oracle IS the serving workload).  :class:`ServableModel` packages the
+pair with provenance metadata, and its :meth:`save` / :meth:`load` ride
+the existing :class:`repro.checkpoint.manager.CheckpointManager`
+manifest format: ``w`` goes into the npz, the spec's kind + constructor
+parameters into ``extra["servable"]``, so a serving host restores a
+model with the same atomic-commit / keep-N machinery training uses.
+
+Spec (de)serialization goes through a tiny registry: the three shipped
+specs are registered under ``"chain"`` / ``"multiclass"`` / ``"graph"``;
+a third-party spec becomes servable with one
+:func:`register_servable_spec` call (the spec must be a dataclass whose
+fields round-trip through JSON, which is what the frozen-dataclass spec
+convention already gives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from ..api.oracle import OracleSpec
+from ..checkpoint.manager import CheckpointManager
+
+#: kind -> spec class (load side); class -> kind is the reverse lookup.
+_SPEC_KINDS: Dict[str, Type[OracleSpec]] = {}
+
+
+def register_servable_spec(kind: str, spec_cls: Type[OracleSpec]) -> None:
+    """Make ``spec_cls`` exportable/loadable under the name ``kind``.
+
+    The class must be constructible from its ``dataclasses.asdict``
+    parameters (the frozen-dataclass spec convention).  Re-registering a
+    kind replaces it (latest wins, mirroring the engine registry).
+    """
+    _SPEC_KINDS[kind] = spec_cls
+
+
+def unregister_servable_spec(kind: str) -> None:
+    _SPEC_KINDS.pop(kind, None)
+
+
+def servable_spec_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_SPEC_KINDS))
+
+
+def spec_kind(spec: OracleSpec) -> str:
+    """The registered kind of ``spec`` (exact class match)."""
+    for kind, cls in _SPEC_KINDS.items():
+        if type(spec) is cls:
+            return kind
+    raise KeyError(
+        f"{type(spec).__name__} is not a registered servable spec; call "
+        "repro.serve.register_servable_spec(kind, cls) to export it")
+
+
+def _spec_params(spec: OracleSpec) -> dict:
+    if dataclasses.is_dataclass(spec):
+        return dataclasses.asdict(spec)
+    return {}
+
+
+def _load_spec(kind: str, params: dict) -> OracleSpec:
+    cls = _SPEC_KINDS.get(kind)
+    if cls is None:
+        raise KeyError(
+            f"servable spec kind {kind!r} is not registered in this "
+            f"process (known: {list(servable_spec_kinds())}); import or "
+            "register_servable_spec the task module before loading")
+    return cls(**params)
+
+
+def _register_builtin_specs() -> None:
+    from ..core.oracles.chain import ChainSpec
+    from ..core.oracles.graph import GraphSpec
+    from ..core.oracles.multiclass import MulticlassSpec
+
+    register_servable_spec("chain", ChainSpec)
+    register_servable_spec("multiclass", MulticlassSpec)
+    register_servable_spec("graph", GraphSpec)
+
+
+_register_builtin_specs()
+
+
+@dataclass
+class ServableModel:
+    """A trained SSVM ready to serve: ``(spec, w, meta)``.
+
+    ``decode`` is the train-time oracle decode itself — serving and
+    training cannot disagree because they are the same function.  The
+    batched serving path (:class:`repro.serve.engine.DecodeEngine` +
+    :class:`repro.serve.batcher.StructuredServer`) is proven bit-for-bit
+    against this per-example form by the round-trip tests.
+    """
+
+    spec: OracleSpec
+    w: jnp.ndarray
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def d(self) -> int:
+        return int(self.w.shape[0])
+
+    def decode(self, example: Any):
+        """Per-example structured decode — the train-time oracle."""
+        return self.spec.decode(self.w, example)
+
+    # -- provenance ---------------------------------------------------------
+
+    @classmethod
+    def from_solver(cls, solver, *, averaged: bool = False,
+                    meta: Optional[dict] = None) -> "ServableModel":
+        """Export the solver's current weights (see also the
+        :meth:`repro.api.Solver.servable` convenience)."""
+        spec = getattr(solver.problem, "spec", None)
+        if spec is None:
+            raise ValueError(
+                "the solver's problem was not built from an OracleSpec "
+                "(problem.spec is None); construct the problem via "
+                "repro.api.build_problem to make it servable")
+        w, w_avg = solver.engine.extract(solver.state)
+        if averaged and w_avg is None:
+            raise ValueError(f"algo {solver.cfg.algo!r} keeps no averaged "
+                             "iterate; export with averaged=False")
+        base = {
+            "algo": solver.cfg.algo,
+            "iteration": int(solver.iteration),
+            "n": int(solver.problem.n),
+            "averaged": bool(averaged),
+        }
+        row = getattr(solver, "_last_row", None)
+        if row is not None:
+            base["train_gap"] = float(row.gap)
+        base.update(meta or {})
+        return cls(spec=spec, w=jnp.asarray(w_avg if averaged else w),
+                   meta=base)
+
+    # -- persistence (rides the checkpoint.manager manifest) ---------------
+
+    def save(self, manager: CheckpointManager, step: int = 0) -> int:
+        """Write ``w`` + the serialized spec as one atomic checkpoint."""
+        extra = {
+            "servable": {
+                "kind": spec_kind(self.spec),
+                "params": _spec_params(self.spec),
+                "meta": dict(self.meta),
+                "d": self.d,
+            },
+        }
+        manager.save(step, {"w": self.w}, extra=extra)
+        return step
+
+    @classmethod
+    def load(cls, manager: CheckpointManager,
+             step: Optional[int] = None) -> "ServableModel":
+        """Rebuild spec + weights from a servable checkpoint.
+
+        The manifest is validated before the npz is touched (same cheap
+        pre-restore pattern as :meth:`repro.api.Solver.restore`).
+        """
+        if step is None:
+            step = manager.latest_step()
+        manifest = manager.load_manifest(step)
+        sv = manifest.get("extra", {}).get("servable")
+        if sv is None:
+            raise ValueError(
+                f"checkpoint step {step} in {manager.dir} is not a "
+                "servable export (no extra['servable'] manifest entry); "
+                "save one with ServableModel.save")
+        spec = _load_spec(sv["kind"], sv.get("params", {}))
+        leaf = manifest["leaves"]["w"]
+        template = {"w": jax.ShapeDtypeStruct(tuple(leaf["shape"]),
+                                              leaf["dtype"])}
+        tree, _ = manager.restore(template, step)
+        return cls(spec=spec, w=tree["w"], meta=dict(sv.get("meta", {})))

@@ -112,6 +112,61 @@ def test_jaxpr_layer_all_engines_clean():
 
 
 # ---------------------------------------------------------------------------
+# Rule J008: serving decode engines
+
+
+def test_j008_builtin_serve_engines_clean():
+    """The three shipped DecodeEngines' per-round programs are proven
+    callback-, collective-, and f64-free."""
+    from repro.analysis import check_serve_engines
+
+    findings, facts = check_serve_engines()
+    assert findings == [], [str(f) for f in findings]
+    for label in ("serve:chain", "serve:multiclass", "serve:graph"):
+        assert facts[label] == {"collectives": 0, "callbacks": 0,
+                                "f64_avals": 0}
+
+
+def test_j008_flags_callback_in_decode_program():
+    """A decode engine that smuggles a host callback into its round
+    program is caught statically."""
+    import jax.numpy as jnp
+    from repro import serve
+    from repro.analysis import check_serve_engines
+    from repro.core.oracles.multiclass import MulticlassSpec
+
+    class LeakySpec(MulticlassSpec):
+        pass
+
+    class LeakyEngine(serve.MulticlassDecodeEngine):
+        def _decode_batch(self, w, batch):
+            jax.debug.callback(lambda: None)
+            return super()._decode_batch(w, batch)
+
+    def leaky_case():
+        spec = LeakySpec(num_classes=2)
+        model = serve.ServableModel(spec, jnp.zeros((10,), jnp.float32))
+        engine = LeakyEngine(model)
+        batch = engine.stack([
+            engine.pad({"x": jnp.zeros(5), "y": jnp.int32(0)}, ())])
+        return model, batch
+
+    serve.register_decode_engine(LeakySpec, LeakyEngine,
+                                 trace_case=leaky_case,
+                                 trace_label="leaky")
+    try:
+        findings, facts = check_serve_engines()
+        j8 = [f for f in findings if f.rule == "J008"
+              and f.where == "serve:leaky"]
+        assert len(j8) == 1 and "host-callback" in j8[0].message
+        assert facts["serve:leaky"]["callbacks"] == 1
+    finally:
+        serve.unregister_decode_engine(LeakySpec, trace_label="leaky")
+    findings, _ = check_serve_engines()
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
 # Layer 2: HLO cross-check + tiles
 
 
@@ -256,6 +311,7 @@ def test_syntax_error_is_reported_not_raised():
 
 def test_rule_table_covers_all_rules():
     for rid in ("J001", "J002", "J003", "J004", "J005", "J006", "J007",
+                "J008",
                 "H001", "H002", "H003", "H004",
                 "R001", "R002", "R003", "R004", "R005"):
         assert rid in RULES

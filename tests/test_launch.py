@@ -107,6 +107,86 @@ def test_roofline_terms_math():
     assert abs(t["collective_s"] - 1.0) < 1e-6
 
 
+def _tiny_lm():
+    import jax
+    from repro import configs
+    from repro.models import common, registry
+
+    cfg = configs.reduced_config("qwen2-0.5b")
+    params = common.init_params(registry.param_specs(cfg),
+                                jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_serve_prefill_conditions_on_full_prompt():
+    """The first generated token must depend on the WHOLE prompt: the
+    server's output equals a hand-rolled loop that feeds every prompt
+    token through decode_step before sampling (regression: prefill used
+    to overwrite the slot with each prompt token without stepping, so
+    only the last one ever reached the model)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.launch.serve import Request, Server
+    from repro.models import registry
+
+    cfg, params = _tiny_lm()
+    prompt = np.array([5, 17, 3, 42], np.int32)
+    max_new = 6
+
+    # Reference: explicit prefill-then-generate on a fresh 1-slot cache.
+    cache = registry.init_cache(cfg, 1, 64)
+    tok = int(prompt[0])
+    expected, pos = [], 0
+    for _ in range(len(prompt) - 1 + max_new):
+        logits, cache = registry.decode_step(
+            params, cfg, cache, jnp.asarray([[tok]], jnp.int32),
+            jnp.asarray(pos, jnp.int32))
+        nxt = int(jnp.argmax(logits[:, -1, :], axis=-1)[0])
+        pos += 1
+        if pos < len(prompt):
+            tok = int(prompt[pos])       # still consuming the prompt
+        else:
+            expected.append(nxt)         # generated token
+            tok = nxt
+
+    server = Server(cfg, params, slots=1, max_seq=64)
+    req = Request(0, prompt, max_new)
+    assert server.add(req)
+    finished = []
+    while not req.done:
+        finished += server.decode_round()
+    assert req.out == expected
+    assert [r.rid for r in finished] == [0]
+
+
+def test_serve_completion_accounting():
+    """decode_round returns finishers exactly once; every request
+    completes with max_new measured tokens (regression: completions were
+    scanned from active[] after the slot was already nulled, so the
+    completed list stayed empty and tok/s came from the CLI args)."""
+    import numpy as np
+    from repro.launch.serve import Request, Server
+
+    cfg, params = _tiny_lm()
+    rng = np.random.RandomState(0)
+    n_req, max_new = 5, 3
+    pending = [Request(i, rng.randint(0, cfg.vocab_size, size=3), max_new)
+               for i in range(n_req)]
+    server = Server(cfg, params, slots=2, max_seq=64)
+    completed = []
+    rounds = 0
+    while pending or any(server.active):
+        while pending and server.add(pending[0]):
+            pending.pop(0)
+        completed += server.decode_round()
+        rounds += 1
+        assert rounds < 200
+    assert sorted(r.rid for r in completed) == list(range(n_req))
+    assert all(r.done and len(r.out) == max_new for r in completed)
+    assert sum(len(r.out) for r in completed) == n_req * max_new
+
+
 def test_depth_probe_solver():
     """solve_linear recovers a + c*L exactly from two probe points."""
     from repro.launch.roofline import solve_linear

@@ -1,0 +1,323 @@
+"""repro.serve tests: export round-trip, engines, batcher, telemetry.
+
+The load-bearing test is the train → export → save → load → serve
+round trip: every labeling served through the batched bucketed path must
+be bit-for-bit the model's own per-example ``spec.decode`` — serving a
+structural SVM IS running its max-oracle, so the two paths may not
+diverge by even an ulp.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import serve
+from repro.api.config import RunConfig
+from repro.api.oracle import OracleSpec
+from repro.api.solver import Solver
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.oracles.chain import ChainSpec
+from repro.core.oracles.graph import GraphSpec
+from repro.core.oracles.multiclass import MulticlassSpec
+from repro.core.types import SSVMProblem
+from repro.data import synthetic
+
+
+def _trim(ex, L):
+    """Cut an example's padded arrays down to its true length."""
+    return {k: np.asarray(v)[:L] for k, v in ex.items()}
+
+
+def _chain_requests(problem):
+    """Mixed-length host-side requests from the padded problem data."""
+    X = np.asarray(problem.data["x"])
+    Y = np.asarray(problem.data["y"])
+    M = np.asarray(problem.data["mask"])
+    return [_trim({"x": X[i], "y": Y[i], "mask": M[i]}, int(M[i].sum()))
+            for i in range(X.shape[0])]
+
+
+def _assert_served_bitwise(model, server, requests):
+    served = server.serve(requests)
+    for i, (ex, lab) in enumerate(zip(requests, served)):
+        ref = np.asarray(model.decode(
+            {k: jnp.asarray(v) for k, v in ex.items()}))
+        L = lab.shape[0] if lab.ndim else None
+        ref = ref[:L] if L is not None else ref
+        assert np.array_equal(lab, ref), f"request {i} diverged"
+
+
+# -- the acceptance round trip ----------------------------------------------
+
+
+def test_train_export_save_load_serve_round_trip(tmp_path, chain_problem):
+    """Train a ChainSpec SSVM, export, persist, reload in a fresh
+    manager, and serve a mixed-length request stream through the
+    bucketed batcher: every labeling bit-for-bit the oracle decode."""
+    solver = Solver(chain_problem,
+                    RunConfig(lam=0.01, algo="mpbcfw", max_iters=4))
+    solver.run()
+    model = solver.servable(meta={"note": "round-trip"})
+    assert model.meta["algo"] == "mpbcfw"
+    assert model.meta["iteration"] == solver.iteration
+    assert model.d == chain_problem.d
+    model.save(CheckpointManager(tmp_path / "ck"), step=3)
+
+    loaded = serve.ServableModel.load(CheckpointManager(tmp_path / "ck"))
+    assert loaded.spec == model.spec
+    assert np.array_equal(np.asarray(loaded.w), np.asarray(model.w))
+    assert loaded.meta["note"] == "round-trip"
+
+    server = serve.StructuredServer(loaded, batch_size=4,
+                                    bucket_granularity=4)
+    _assert_served_bitwise(loaded, server, _chain_requests(chain_problem))
+    rounds, dispatches, syncs = server.ledger.counts()
+    assert dispatches == rounds and syncs == rounds
+
+
+def test_multiclass_round_trip(multiclass_problem):
+    model = serve.ServableModel(
+        multiclass_problem.spec,
+        jnp.asarray(np.random.RandomState(0).randn(
+            multiclass_problem.d).astype(np.float32)))
+    server = serve.StructuredServer(model, batch_size=8)
+    X = np.asarray(multiclass_problem.data["x"])
+    Y = np.asarray(multiclass_problem.data["y"])
+    reqs = [{"x": X[i], "y": Y[i]} for i in range(12)]
+    served = server.serve(reqs)
+    for ex, lab in zip(reqs, served):
+        ref = np.asarray(model.decode(
+            {k: jnp.asarray(v) for k, v in ex.items()}))
+        assert np.array_equal(lab, ref)
+
+
+def test_graph_round_trip(graph_problem):
+    model = serve.ServableModel(
+        graph_problem.spec,
+        jnp.asarray(np.random.RandomState(1).randn(
+            graph_problem.d).astype(np.float32)))
+    server = serve.StructuredServer(model, batch_size=4,
+                                    bucket_granularity=8)
+    data = {k: np.asarray(v) for k, v in graph_problem.data.items()}
+    reqs = [{k: v[i] for k, v in data.items()} for i in range(8)]
+    _assert_served_bitwise(model, server, reqs)
+
+
+# -- export / persistence ----------------------------------------------------
+
+
+def test_servable_manifest_contents(tmp_path):
+    spec = ChainSpec(num_labels=3)
+    w = jnp.arange(3 * 4 + 9, dtype=jnp.float32)
+    mgr = CheckpointManager(tmp_path / "ck")
+    serve.ServableModel(spec, w, meta={"k": 1}).save(mgr, step=5)
+    man = mgr.load_manifest(5)
+    sv = man["extra"]["servable"]
+    assert sv["kind"] == "chain"
+    assert sv["params"] == {"num_labels": 3}
+    assert sv["meta"] == {"k": 1}
+    assert sv["d"] == 21
+
+
+def test_load_rejects_non_servable_checkpoint(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck")
+    mgr.save(0, {"w": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="not a servable export"):
+        serve.ServableModel.load(mgr)
+
+
+def test_spec_registry_round_trip_and_errors():
+    assert set(serve.servable_spec_kinds()) >= {"chain", "multiclass",
+                                                "graph"}
+    assert serve.spec_kind(GraphSpec(num_sweeps=2)) == "graph"
+
+    @dataclasses.dataclass(frozen=True)
+    class MySpec(OracleSpec):
+        scale: float = 1.0
+
+    with pytest.raises(KeyError, match="not a registered servable spec"):
+        serve.spec_kind(MySpec())
+    serve.register_servable_spec("my", MySpec)
+    try:
+        assert serve.spec_kind(MySpec(scale=2.0)) == "my"
+    finally:
+        serve.unregister_servable_spec("my")
+
+
+def test_from_solver_requires_spec(multiclass_problem):
+    bare = SSVMProblem(n=multiclass_problem.n, d=multiclass_problem.d,
+                       data=multiclass_problem.data,
+                       oracle=multiclass_problem.oracle)
+    solver = Solver(bare, RunConfig(lam=0.01, algo="bcfw", max_iters=1))
+    with pytest.raises(ValueError, match="problem.spec is None"):
+        solver.servable()
+
+
+# -- batcher -----------------------------------------------------------------
+
+
+def test_bucket_key_rounds_up():
+    assert serve.bucket_key((5,), 4) == (8,)
+    assert serve.bucket_key((8,), 4) == (8,)
+    assert serve.bucket_key((1, 17), 8) == (8, 24)
+    assert serve.bucket_key((), 4) == ()
+    assert serve.bucket_key((0,), 4) == (4,)  # degenerate dim still valid
+
+
+def test_one_dispatch_per_round_and_bucketing():
+    spec = ChainSpec(num_labels=4)
+    X, Y, M = synthetic.ocr_like(n=10, f=5, num_labels=4, mean_len=5,
+                                 max_len=7, seed=4)
+    w = jnp.asarray(np.random.RandomState(2).randn(
+        spec.dim({"x": X})).astype(np.float32))
+    server = serve.StructuredServer(serve.ServableModel(spec, w),
+                                    batch_size=3, bucket_granularity=16)
+    # granularity 16 forces a single bucket: 10 requests / 3 slots.
+    reqs = [_trim({"x": X[i], "y": Y[i], "mask": M[i]},
+                  int(M[i].sum())) for i in range(10)]
+    for r in reqs:
+        server.submit(r)
+    assert server.pending == 10
+    done = server.drain()
+    assert len(done) == 10 and server.pending == 0
+    assert server.ledger.counts() == (4, 4, 4)  # ceil(10/3) rounds
+
+
+def test_fifo_across_buckets():
+    """Round scheduling picks the bucket holding the oldest waiting
+    request — interleaved shapes cannot starve each other."""
+    spec = MulticlassSpec(num_classes=3)
+    x, y = synthetic.usps_like(n=6, f=4, num_classes=3, seed=5)
+    w = jnp.zeros((spec.dim({"x": x}),), jnp.float32)
+
+    class TwoBucketEngine(serve.MulticlassDecodeEngine):
+        def shape_key(self, example):
+            return (int(example["parity"]) + 1,)
+
+        def pad(self, example, key):
+            return {"x": np.asarray(example["x"], np.float32),
+                    "y": np.asarray(example["y"], np.int32)}
+
+    model = serve.ServableModel(spec, w)
+    server = serve.StructuredServer(model, batch_size=2,
+                                    engine=TwoBucketEngine(model),
+                                    bucket_granularity=1)
+    for i in range(6):
+        server.submit({"x": x[i], "y": y[i], "parity": i % 2})
+    order = []
+    while server.pending:
+        order.append(sorted(r.rid for r in server.step()))
+    # oldest head first: evens 0,2 then odds 1,3 then 4 then 5
+    assert order == [[0, 2], [1, 3], [4], [5]]
+
+
+def test_step_on_empty_server_is_noop():
+    model = serve.ServableModel(MulticlassSpec(num_classes=2),
+                                jnp.zeros((8,), jnp.float32))
+    server = serve.StructuredServer(model)
+    assert server.step() == []
+    assert server.ledger.counts() == (0, 0, 0)
+
+
+# -- ledger / metrics / trace ------------------------------------------------
+
+
+def test_serve_ledger_contract():
+    led = serve.ServeLedger()
+    with pytest.raises(RuntimeError, match="without begin_round"):
+        led.commit_round()
+    led.begin_round()
+    with pytest.raises(RuntimeError, match="already open"):
+        led.begin_round()
+    with pytest.raises(RuntimeError, match="0 dispatches"):
+        led.commit_round()
+    led = serve.ServeLedger()
+    led.begin_round()
+    led.dispatched()
+    led.dispatched()
+    with pytest.raises(RuntimeError, match="2 dispatches"):
+        led.commit_round()
+    led = serve.ServeLedger()
+    led.begin_round()
+    led.dispatched()
+    led.commit_round()
+    assert led.counts() == (1, 1, 0)
+
+
+def test_serve_metrics_series():
+    m = serve.ServeMetrics()
+    m.observe_request(0.001, 7)
+    m.observe_request(0.004, 9)
+    m.observe_round(batch=2, fill=0.5, round_s=0.01, bucket=(8,))
+    m.set_queue_depth(3)
+    reg = m.registry
+    assert reg.counter("serve_requests").value == 2
+    assert reg.counter("serve_labels").value == 16
+    assert reg.counter("serve_rounds").value == 1
+    assert reg.gauge("serve_queue_depth").value == 3
+    assert m.latency_quantile(0.5) is not None
+    snap = m.snapshot()
+    assert snap["serve_latency"]["count"] == 2
+
+
+def test_serve_trace_is_schema_valid(tmp_path):
+    from repro.obs.recorder import RunRecorder
+    from repro.obs.schema import validate_file
+    import json
+
+    spec = MulticlassSpec(num_classes=3)
+    x, y = synthetic.usps_like(n=5, f=4, num_classes=3, seed=6)
+    w = jnp.asarray(np.random.RandomState(3).randn(
+        spec.dim({"x": x})).astype(np.float32))
+    path = tmp_path / "serve.jsonl"
+    with RunRecorder(path) as rec:
+        server = serve.StructuredServer(
+            serve.ServableModel(spec, w), batch_size=2, recorder=rec)
+        server.serve([{"x": x[i], "y": y[i]} for i in range(5)])
+    n, errs = validate_file(path)
+    assert errs == [] and n >= 1 + 3 + 5 + 1  # meta, spans, events, summary
+    recs = [json.loads(line) for line in path.read_text().splitlines()]
+    meta = recs[0]
+    assert meta["type"] == "meta"
+    assert meta["algo"] == "serve:MulticlassSpec"
+    assert meta["engine_budgets"]["dispatches_per_round"] == 1
+    names = [r.get("name") for r in recs]
+    assert names.count("serve_round") == 3          # ceil(5/2)
+    assert names.count("serve_request") == 5
+
+
+# -- engine registry ---------------------------------------------------------
+
+
+def test_vmap_fallback_for_unregistered_spec():
+    @dataclasses.dataclass(frozen=True)
+    class SignSpec(OracleSpec):
+        def dim(self, data):
+            return int(data["x"].shape[1])
+
+        def truth(self, example):
+            return example["y"]
+
+        def decode(self, w, example):
+            return (jnp.dot(example["x"], w) > 0).astype(jnp.int32)
+
+    r = np.random.RandomState(4)
+    x = r.randn(6, 5).astype(np.float32)
+    w = jnp.asarray(r.randn(5).astype(np.float32))
+    model = serve.ServableModel(SignSpec(), w)
+    engine = serve.decode_engine_for(model)
+    assert type(engine) is serve.VmapDecodeEngine
+    server = serve.StructuredServer(model, batch_size=4, engine=engine)
+    served = server.serve([{"x": x[i], "y": np.int32(0)}
+                           for i in range(6)])
+    for i, lab in enumerate(served):
+        assert np.array_equal(
+            lab, np.asarray(model.decode({"x": jnp.asarray(x[i]),
+                                          "y": jnp.int32(0)})))
+
+
+def test_registered_engines_have_trace_cases():
+    cases = {label for label, _, _ in serve.serve_trace_cases()}
+    assert {"chain", "multiclass", "graph"} <= cases

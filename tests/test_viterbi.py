@@ -1,0 +1,177 @@
+"""Property tests for the batched Viterbi decode (serving hot path).
+
+A deliberately-dumb pure-NumPy masked Viterbi (python loops, no shared
+code with the kernel module) is the ground truth; the batched kernel
+entry must match it label-for-label across batch sizes, non-tile-aligned
+lengths, ragged masks, and label counts straddling the 128-lane pad.
+Small cases are additionally checked against brute-force path
+enumeration, so the reference itself is pinned.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.oracles.chain import viterbi_decode
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels import viterbi as vit
+
+
+def np_viterbi(unary, trans, mask):
+    """Masked Viterbi on one example, plain NumPy loops.
+
+    Mirrors the chain oracle's convention: position 0 is always valid,
+    padded (mask False) positions contribute zero score and inherit the
+    running best path, and ties break toward the lowest label index
+    (np.argmax), matching jnp.argmax.
+    """
+    L, C = unary.shape
+    m = unary[0].astype(np.float32).copy()
+    backs = np.zeros((L - 1, C), np.int32)
+    for l in range(1, L):
+        if mask[l]:
+            cand = m[:, None] + trans          # (C', C)
+            m = cand.max(axis=0) + unary[l]
+            backs[l - 1] = cand.argmax(axis=0)
+        else:
+            # score-neutral step: every state inherits the best prefix
+            backs[l - 1] = np.full(C, int(m.argmax()), np.int32)
+            m = np.full(C, m.max(), np.float32)
+    y = np.zeros(L, np.int32)
+    y[-1] = int(m.argmax())
+    for l in range(L - 2, -1, -1):
+        y[l] = backs[l][y[l + 1]]
+    return y
+
+
+def path_score(unary, trans, mask, y):
+    s = 0.0
+    prev = None
+    for l in range(len(y)):
+        if not mask[l]:
+            continue
+        s += float(unary[l, y[l]])
+        if prev is not None:
+            s += float(trans[prev, y[l]])
+        prev = y[l]
+    return s
+
+
+def _case(seed, B, L, C, ragged=True):
+    r = np.random.RandomState(seed)
+    unary = r.randn(B, L, C).astype(np.float32)
+    trans = r.randn(C, C).astype(np.float32)
+    mask = np.ones((B, L), bool)
+    if ragged:
+        lens = r.randint(1, L + 1, size=B)
+        lens[0] = L                          # keep one full-length row
+        for b in range(B):
+            mask[b, lens[b]:] = False
+    return unary, trans, mask
+
+
+def test_numpy_reference_vs_brute_force():
+    """Pin the test reference itself: exhaustive path enumeration."""
+    import itertools
+    r = np.random.RandomState(7)
+    for trial in range(5):
+        L, C = 5, 3
+        unary = r.randn(L, C).astype(np.float32)
+        trans = r.randn(C, C).astype(np.float32)
+        mask = np.array([True] * (L - trial % 2) + [False] * (trial % 2))
+        y = np_viterbi(unary, trans, mask)
+        best = max(path_score(unary, trans, mask, list(p))
+                   for p in itertools.product(range(C), repeat=L))
+        assert path_score(unary, trans, mask, y) == pytest.approx(
+            best, rel=1e-5)
+
+
+@pytest.mark.parametrize("B,L,C,seed", [
+    (1, 3, 2, 0),       # smallest batch
+    (3, 9, 5, 1),       # small alphabet, odd lengths
+    (8, 12, 26, 2),     # the OCR shape
+    (13, 7, 26, 3),     # batch not a multiple of block_b
+    (4, 5, 130, 4),     # labels straddle the 128-lane pad
+])
+def test_decode_batch_matches_numpy(B, L, C, seed):
+    unary, trans, mask = _case(seed, B, L, C)
+    out = np.asarray(ops.viterbi_decode_batch(
+        jnp.asarray(unary), jnp.asarray(trans), jnp.asarray(mask)))
+    assert out.shape == (B, L) and out.dtype == np.int32
+    for b in range(B):
+        expect = np_viterbi(unary[b], trans, mask[b])
+        Lb = int(mask[b].sum())
+        assert (out[b, :Lb] == expect[:Lb]).all(), f"row {b}"
+
+
+@pytest.mark.parametrize("B,L,C,seed", [(5, 8, 7, 10), (2, 6, 26, 11)])
+def test_decode_batch_matches_per_example_decode_bitwise(B, L, C, seed):
+    """Each batched row == chain.viterbi_decode on that example, bit for
+    bit — the guarantee the serving round-trip relies on."""
+    unary, trans, mask = _case(seed, B, L, C)
+    out = np.asarray(ops.viterbi_decode_batch(
+        jnp.asarray(unary), jnp.asarray(trans), jnp.asarray(mask)))
+    for b in range(B):
+        solo = np.asarray(viterbi_decode(
+            jnp.asarray(unary[b]), jnp.asarray(trans),
+            jnp.asarray(mask[b])))
+        Lb = int(mask[b].sum())
+        assert (out[b, :Lb] == solo[:Lb]).all()
+
+
+def test_decode_batch_padded_rows_are_isolated():
+    """Adding batch rows (fillers) must not change existing rows — the
+    batcher pads short rounds with copies of real requests."""
+    unary, trans, mask = _case(21, 3, 6, 5)
+    small = np.asarray(ops.viterbi_decode_batch(
+        jnp.asarray(unary), jnp.asarray(trans), jnp.asarray(mask)))
+    big = np.asarray(ops.viterbi_decode_batch(
+        jnp.asarray(np.concatenate([unary, unary[-1:]] * 2)),
+        jnp.asarray(trans),
+        jnp.asarray(np.concatenate([mask, mask[-1:]] * 2))))
+    assert (big[:3] == small).all()
+
+
+def test_decode_batch_tail_padding_is_neutral():
+    """Extending every row with mask-False positions leaves the valid
+    prefix bit-for-bit unchanged (bucket padding invariance)."""
+    unary, trans, mask = _case(22, 4, 7, 5)
+    out = np.asarray(ops.viterbi_decode_batch(
+        jnp.asarray(unary), jnp.asarray(trans), jnp.asarray(mask)))
+    pad = 5
+    unary_p = np.concatenate(
+        [unary, np.full((4, pad, 5), 9.0, np.float32)], axis=1)
+    mask_p = np.concatenate([mask, np.zeros((4, pad), bool)], axis=1)
+    out_p = np.asarray(ops.viterbi_decode_batch(
+        jnp.asarray(unary_p), jnp.asarray(trans), jnp.asarray(mask_p)))
+    for b in range(4):
+        Lb = int(mask[b].sum())
+        assert (out_p[b, :Lb] == out[b, :Lb]).all()
+
+
+@pytest.mark.parametrize("B,L,C,seed", [(3, 6, 5, 30), (9, 5, 26, 31)])
+def test_decode_batch_pallas_interpret_matches_ref_step(B, L, C, seed):
+    """The Pallas step (interpret mode) and the jnp reference step drive
+    the full decode to identical labelings (TPU/CPU backend parity)."""
+    unary, trans, mask = _case(seed, B, L, C)
+    args = (jnp.asarray(unary), jnp.asarray(trans), jnp.asarray(mask))
+    via_ref = np.asarray(vit.viterbi_decode_batch(
+        *args, step_fn=ref.viterbi_step_ref))
+    via_pallas = np.asarray(vit.viterbi_decode_batch(
+        *args, step_fn=functools.partial(vit.viterbi_step, block_b=8,
+                                         interpret=True)))
+    assert (via_ref == via_pallas).all()
+
+
+def test_decode_batch_length_one_rows():
+    """L=1 chains (scan over zero steps) decode to the unary argmax."""
+    r = np.random.RandomState(40)
+    unary = r.randn(4, 1, 6).astype(np.float32)
+    trans = r.randn(6, 6).astype(np.float32)
+    mask = np.ones((4, 1), bool)
+    out = np.asarray(ops.viterbi_decode_batch(
+        jnp.asarray(unary), jnp.asarray(trans), jnp.asarray(mask)))
+    assert (out[:, 0] == unary[:, 0].argmax(axis=1)).all()
