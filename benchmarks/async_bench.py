@@ -1,0 +1,166 @@
+"""Async oracle pipelining benchmark (``mpbcfw-async``, ROADMAP item 4).
+
+The slow-oracle scenario: a small multiclass problem whose
+:class:`~repro.core.selection.CostModel` charges the exact max-oracle
+the paper's costly-oracle regime (oracle_cost >> per-plane cost), run
+through the pipelined engine.  Rows:
+
+  * ``async_overlap_costmodel``    mean ``TraceRow.oracle_overlap`` —
+    the fraction of the oracle's modeled time hidden behind the
+    concurrently-dispatched cache program (``--smoke`` asserts >= 0.5:
+    the pipeline must hide at least half the oracle),
+  * ``async_overlap_wall``         the same column in wall-clock mode,
+    where the overlap rides the Solver's calibrated phase-cost
+    estimates (``--smoke`` asserts > 0),
+  * ``async_speedup_costmodel_x``  modeled time of the serial fused
+    engine over the pipelined engine at equal iterations/passes,
+  * ``async_dispatches_per_iter``  the <= 2 dispatch + 1 host sync
+    contract, straight off the TraceRows,
+  * ``fold_scatter_{chunked,per_elem}_us_<shape>``  the fold-in
+    scatter-strategy microbenchmark (ROADMAP satellite): one chunked
+    gather->fold->scatter per tau-chunk vs tau per-element dynamic
+    scatters, same fold bit for bit (the derived column checks it).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import RunConfig, Solver
+from repro.core import distributed, mpbcfw
+from repro.core.oracles import multiclass
+from repro.core.selection import CostModel
+from repro.core.ssvm import weights_of
+from repro.data import synthetic
+
+# Slow-oracle scenario: oracle_cost/plane_cost = 4 means one exact call
+# buys only 4 plane-steps — approximate passes are ~free by comparison,
+# exactly the regime the paper (and the pipeline) targets.
+N, CLASSES, CAP, ITERS = 32, 5, 16, 8
+ORACLE_COST, PLANE_COST = 1.0, 0.25
+
+
+def _problem(n=N, f=16, classes=CLASSES, seed=0):
+    x, y = synthetic.usps_like(n=n, f=f, num_classes=classes, seed=seed)
+    return multiclass.make_problem(jnp.asarray(x), jnp.asarray(y), classes)
+
+
+def _cfg(algo: str, prob, cost_model=None) -> RunConfig:
+    return RunConfig(lam=1.0 / prob.n, algo=algo, cap=CAP, ttl=10, seed=0,
+                     max_iters=ITERS, max_approx_passes=32,
+                     approx_batch=32, cost_model=cost_model)
+
+
+def overlap_rows():
+    prob = _problem()
+    cm = CostModel(oracle_cost=ORACLE_COST, plane_cost=PLANE_COST)
+
+    res = Solver(prob, _cfg("mpbcfw-async", prob, cm)).run()
+    ovl = [r.oracle_overlap for r in res.trace]
+    mean_cm = sum(ovl) / len(ovl)
+    disp = max(r.dispatches for r in res.trace)
+    syncs = max(r.host_syncs for r in res.trace)
+
+    # serial baseline: the fused engine under the identical cost model
+    res_f = Solver(prob, _cfg("mpbcfw", prob, cm)).run()
+    speedup = res_f.trace[-1].time / res.trace[-1].time
+
+    # wall mode: the overlap column rides the calibrated phase costs
+    res_w = Solver(prob, _cfg("mpbcfw-async", prob, None)).run()
+    ovl_w = [r.oracle_overlap for r in res_w.trace]
+    mean_w = sum(ovl_w) / len(ovl_w)
+
+    return [
+        ("async_overlap_costmodel", round(mean_cm, 4),
+         round(max(ovl), 4)),
+        ("async_overlap_wall", round(mean_w, 4), round(max(ovl_w), 4)),
+        ("async_speedup_costmodel_x", round(speedup, 2),
+         round(res.trace[-1].dual - res_f.trace[-1].dual, 6)),
+        ("async_dispatches_per_iter", disp, syncs),
+    ]
+
+
+def _time_us(fn, *args, iters=20):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def fold_scatter_rows(n=256, f=24, classes=8, tau=32):
+    """Chunked gather->fold->scatter vs per-element dynamic scatters for
+    the tau-plane fold-in (``CacheLayout.fold_scatter``), same shapes
+    the async cache program folds every iteration."""
+    prob = _problem(n=n, f=f, classes=classes, seed=1)
+    lam = 1.0 / prob.n
+    mp = mpbcfw.init_mp_state(prob, CAP)
+    rng = np.random.RandomState(0)
+    perm = jnp.asarray(rng.permutation(prob.n))
+    # populate the cache so the fallback gather has real planes to walk
+    mp = mpbcfw.jit_exact_pass(prob, mp, perm, lam=lam)
+    ids = perm[:tau]
+    w = weights_of(mp.inner.phi, lam)
+    batch = jax.tree_util.tree_map(lambda a: a[ids], prob.data)
+    planes = jax.vmap(lambda ex: prob.oracle(w, ex))(batch)
+    fbp, fbs, _ = distributed.fallback_planes(mp.cache, ids, w)
+    done = jnp.ones((tau,), bool)
+
+    def fold(scatter):
+        return distributed.jit_fold_planes(mp, ids, planes, fbp, fbs,
+                                           done, lam=lam, scatter=scatter)
+
+    out_c = fold("chunked")
+    out_p = fold("per-elem")
+    bitwise = bool(jnp.array_equal(out_c.inner.phi, out_p.inner.phi) and
+                   jnp.array_equal(out_c.cache.planes, out_p.cache.planes))
+    shape = f"{n}x{prob.d}_tau{tau}"
+    t_c = _time_us(fold, "chunked")
+    t_p = _time_us(fold, "per-elem")
+    return [
+        (f"fold_scatter_chunked_us_{shape}", round(t_c, 1), bitwise),
+        (f"fold_scatter_per_elem_us_{shape}", round(t_p, 1), bitwise),
+    ]
+
+
+def main(smoke: bool = True):
+    del smoke  # one size: the scenario is already CI-fast (~seconds)
+    return overlap_rows() + fold_scatter_rows()
+
+
+def check_rows(rows) -> bool:
+    """The CI gate: every async_overlap_* row positive, the CostModel
+    scenario hiding >= half the oracle, and the two fold-scatter paths
+    bit-identical."""
+    by_name = {r[0]: r for r in rows}
+    ok = all(r[1] > 0.0 for name, r in by_name.items()
+             if name.startswith("async_overlap"))
+    ok = ok and by_name["async_overlap_costmodel"][1] >= 0.5
+    ok = ok and by_name["async_dispatches_per_iter"][1] <= 2
+    ok = ok and by_name["async_dispatches_per_iter"][2] <= 1
+    ok = ok and all(r[2] for name, r in by_name.items()
+                    if name.startswith("fold_scatter"))
+    return ok
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: assert the pipeline hides >= 0.5 of "
+                         "the modeled oracle (CostModel), > 0 in wall "
+                         "mode, <= 2 dispatches + 1 sync per iteration, "
+                         "and fold-scatter bit-equivalence")
+    args = ap.parse_args()
+    out_rows = main(smoke=args.smoke)
+    for r in out_rows:
+        print(",".join(str(x) for x in r))
+    if args.smoke and not check_rows(out_rows):
+        sys.exit("async_bench: pipelining contract violated (overlap, "
+                 "dispatch budget, or fold-scatter equivalence)")

@@ -18,6 +18,11 @@ Prints ``name,value,derived`` CSV rows:
   * serve_*  batched structured-prediction serving: closed/open-loop
              p50/p99 latency (us), labels/sec throughput, and the
              batched-vs-one-at-a-time speedup per bundled spec
+  * async_*  oracle pipelining (``mpbcfw-async``): mean oracle overlap
+             hidden behind the cache program (CostModel + wall modes),
+             modeled speedup over the fused serial engine, and the
+             fold-in scatter-strategy microbenchmark
+             (``fold_scatter_{chunked,per_elem}_us_*``)
   * dryrun_/roofline_ summary of the (arch x shape) grid
 
 ``--smoke``: a fast CI-friendly subset — 4-iteration convergence runs and
@@ -33,13 +38,14 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     smoke = "--smoke" in sys.argv
-    from . import (analysis_bench, kernel_bench, obs_bench,
+    from . import (analysis_bench, async_bench, kernel_bench, obs_bench,
                    paper_convergence, serving_bench, sharded_bench,
                    workset_stats)
     rows = []
     rows += paper_convergence.main(quick=quick or smoke)
     rows += workset_stats.main()
     rows += sharded_bench.main(smoke=smoke)
+    rows += async_bench.main(smoke=smoke)
     rows += kernel_bench.main(smoke=smoke)
     rows += analysis_bench.main(smoke=smoke)
     rows += obs_bench.main(smoke=smoke)

@@ -19,11 +19,18 @@
 #                            #   serve_p99_us_* / serve_throughput_*
 #                            #   rows with the batched path beating the
 #                            #   one-at-a-time baseline
+#   scripts/ci.sh --async    # only the async stage: the async-pipeline
+#                            #   test suite, the async_bench smoke
+#                            #   (oracle overlap >= 0.5 under the slow-
+#                            #   oracle CostModel, <= 2 dispatches +
+#                            #   1 host sync, fold-scatter bitwise), and
+#                            #   the strict analyzer (rule J009 proves
+#                            #   the two-program split statically)
 #
-# The obs, policy, and serve stages also run as part of the default flow
-# (after the test suite, before/with the benchmark smoke) so a broken
-# recorder/CLI, a gap-sampling regression, or a serving regression
-# fails CI.
+# The obs, policy, serve, and async stages also run as part of the
+# default flow (after the test suite, before/with the benchmark smoke)
+# so a broken recorder/CLI, a gap-sampling regression, a serving
+# regression, or a pipelining regression fails CI.
 #
 # The smoke benchmarks exercise the public Solver path end to end,
 # including the fused score+select kernel vs the two-step path, the
@@ -39,6 +46,7 @@ ANALYZE=0
 OBS_ONLY=0
 POLICY_ONLY=0
 SERVE_ONLY=0
+ASYNC_ONLY=0
 ARGS=()
 for a in "$@"; do
   if [[ "$a" == "--mesh" ]]; then MESH=1
@@ -46,6 +54,7 @@ for a in "$@"; do
   elif [[ "$a" == "--obs" ]]; then OBS_ONLY=1
   elif [[ "$a" == "--policy" ]]; then POLICY_ONLY=1
   elif [[ "$a" == "--serve" ]]; then SERVE_ONLY=1
+  elif [[ "$a" == "--async" ]]; then ASYNC_ONLY=1
   else ARGS+=("$a"); fi
 done
 
@@ -110,6 +119,20 @@ EOF
   rm -f "$out"
 }
 
+async_stage() {
+  # Async-pipelining gate: the mpbcfw-async / mpbcfw-shard-async test
+  # suite (dual monotonicity under stragglers, bitwise resume, the
+  # CollectiveTrace split regression), then the async bench smoke —
+  # which asserts the pipeline hides >= 0.5 of the modeled oracle under
+  # the slow-oracle CostModel at <= 2 dispatches + 1 host sync per
+  # outer iteration and that the chunked fold-scatter is bit-identical
+  # — and the strict analyzer whose rule J009 proves the
+  # async_oracle/async_cache two-program split statically.
+  python -m pytest -x -q -m "not mesh" tests/test_async.py
+  python -m benchmarks.async_bench --smoke
+  python -m repro.analysis --strict
+}
+
 if [[ "$OBS_ONLY" == 1 ]]; then
   obs_stage
   exit 0
@@ -122,6 +145,11 @@ fi
 
 if [[ "$POLICY_ONLY" == 1 ]]; then
   policy_stage
+  exit 0
+fi
+
+if [[ "$ASYNC_ONLY" == 1 ]]; then
+  async_stage
   exit 0
 fi
 
@@ -141,7 +169,11 @@ if [[ "$MESH" == 1 ]]; then
   obs_stage
   policy_stage
   serve_stage
+  async_stage
   python -m benchmarks.run --smoke
+  # The mesh-marked tests include the mpbcfw-shard-async subprocess
+  # smoke (8 forced host devices), so the two-program split's dispatch
+  # contract is exercised on a real multi-shard mesh here.
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m mesh ${ARGS[@]+"${ARGS[@]}"}
 else
@@ -149,5 +181,6 @@ else
   obs_stage
   policy_stage
   serve_stage
+  async_stage
   python -m benchmarks.run --smoke
 fi

@@ -73,8 +73,9 @@ class ProgramFacts:
         return self.setup_collectives + self.pass_collectives
 
 
-def count_program(closed: jax.core.ClosedJaxpr) -> ProgramFacts:
-    """Walk a closed jaxpr and collect the Layer-1 static facts."""
+def count_program(closed) -> ProgramFacts:
+    """Walk a (closed or raw) jaxpr and collect the Layer-1 static
+    facts."""
     facts = ProgramFacts()
 
     def visit(eqn, depth: int) -> None:
@@ -110,7 +111,8 @@ def count_program(closed: jax.core.ClosedJaxpr) -> ProgramFacts:
                 for sub in _sub_jaxprs(v):
                     walk(sub, d)
 
-    walk(closed.jaxpr, 0)
+    walk(closed.jaxpr if isinstance(closed, jax.core.ClosedJaxpr)
+         else closed, 0)
     return facts
 
 
@@ -311,7 +313,79 @@ def check_trace(et: EngineTrace) -> Tuple[List[Finding],
         findings.extend(_check_accum_dtype(et, prog))
         findings.extend(_check_obs_drain(et, prog))
         findings.extend(_check_policy_contract(et, prog))
+        findings.extend(_check_async_pipeline(et, prog))
     return findings, facts
+
+
+def _check_async_pipeline(et: EngineTrace,
+                          prog: ProgramTrace) -> List[Finding]:
+    """Rule J009: async engines really are a two-program pipeline.
+
+    For engines declaring ``EngineCapabilities.async_oracle``, the traced
+    outer iteration must contain exactly two top-level ``pjit`` dispatches
+    — one whose name carries ``async_oracle`` (the exact max-oracle over
+    the next iteration's blocks) and one carrying ``async_cache`` (the
+    eviction + fold-in + approximate batch).  Statically proven on the
+    jaxpr:
+
+      * both programs present, exactly once each (J001-J003 already hold
+        the *combined* trace to the collective/callback budgets);
+      * zero host callbacks and zero collectives inside the oracle
+        program — its per-shard compute is what overlaps the cache
+        program's psum-synchronized passes, so a collective (or hidden
+        host round-trip) inside it would serialize the pipeline;
+      * no read-after-write hazard: the cache program must not consume
+        any output of the concurrently-dispatched oracle program (and
+        vice versa) — a data dependence between the two pjit eqns would
+        force XLA to run them back to back, silently voiding the
+        overlap the ``oracle_overlap`` column reports.
+    """
+    if not getattr(et.caps, "async_oracle", False) or prog.name != "outer":
+        return []
+    where = f"{et.label}:{prog.name}"
+    out: List[Finding] = []
+    oracle_eqns, cache_eqns = [], []
+    for eqn in prog.jaxpr.jaxpr.eqns:
+        if eqn.primitive.name != "pjit":
+            continue
+        nm = str(eqn.params.get("name", ""))
+        if "async_oracle" in nm:
+            oracle_eqns.append(eqn)
+        elif "async_cache" in nm:
+            cache_eqns.append(eqn)
+    if len(oracle_eqns) != 1 or len(cache_eqns) != 1:
+        out.append(Finding(
+            "J009", where,
+            f"expected exactly one async_oracle and one async_cache "
+            f"pjit dispatch at the top level, found "
+            f"{len(oracle_eqns)} oracle / {len(cache_eqns)} cache"))
+        return out
+    o_eqn, c_eqn = oracle_eqns[0], cache_eqns[0]
+    for sub in _sub_jaxprs(o_eqn.params.get("jaxpr")):
+        f = count_program(sub)
+        if f.callbacks or f.total_collectives:
+            out.append(Finding(
+                "J009", where,
+                f"async_oracle program contains {f.callbacks} host "
+                f"callback(s) and {f.total_collectives} collective(s) "
+                f"(detail: {f.detail}); it must be communication-free "
+                "to overlap the cache program"))
+    o_out = set(o_eqn.outvars)
+    c_in = {v for v in c_eqn.invars if isinstance(v, jax.core.Var)}
+    if o_out & c_in:
+        out.append(Finding(
+            "J009", where,
+            f"read-after-write hazard: the async_cache program reads "
+            f"{len(o_out & c_in)} output(s) of the concurrent "
+            "async_oracle program — the two dispatches would serialize"))
+    c_out = set(c_eqn.outvars)
+    o_in = {v for v in o_eqn.invars if isinstance(v, jax.core.Var)}
+    if c_out & o_in:
+        out.append(Finding(
+            "J009", where,
+            "read-after-write hazard: the async_oracle program reads "
+            "output(s) of the async_cache program"))
+    return out
 
 
 def _check_policy_contract(et: EngineTrace,

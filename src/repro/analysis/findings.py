@@ -41,6 +41,14 @@ RULES: Dict[str, str] = {
             "float64 avals (serving is single-device; the batcher's "
             "ServeLedger asserts the same 1-dispatch/1-sync round at "
             "runtime)",
+    "J009": "async pipelining contract: an async_oracle engine's outer "
+            "iteration must dispatch exactly two programs (one "
+            "async_oracle, one async_cache), with zero host callbacks, "
+            "zero collectives inside the oracle program (its per-shard "
+            "compute must overlap the cache program's psums), and no "
+            "read-after-write hazard between them (the cache program "
+            "must not consume the concurrent oracle program's outputs, "
+            "or the pipeline serializes)",
     # Layer 2: compiled-HLO cross-checks
     "H001": "optimized HLO contains more collective ops than the jaxpr "
             "(XLA introduced a collective, e.g. a hidden all-reduce)",

@@ -47,6 +47,13 @@ class RunConfig:
     gap_frac: float = 0.5   # gap-topk sampler: fraction of blocks whose
     #                         exact oracle runs per iteration (resolved to
     #                         a static k = max(1, round(gap_frac * n)))
+    gap_temperature: float = 2.0  # gap-topk gumbel temperature: 1 =
+    #                         proportional, > 1 flatter (exploration),
+    #                         < 1 greedier (static sampler field)
+    gap_floor: float = 0.1  # gap-topk min-probability floor, relative
+    #                         to the mean gap over seen blocks: keeps
+    #                         converged/stale blocks samplable (static
+    #                         sampler field)
 
 
 @dataclass
@@ -76,6 +83,10 @@ class TraceRow:
     #                               in the exact max-oracle pass (the
     #                               paper's costly-oracle regime has this
     #                               near 1)
+    oracle_overlap: float = 0.0   # async engines: fraction of the exact
+    #                               oracle's modeled time hidden behind the
+    #                               concurrently-dispatched cache program
+    #                               this iteration (0 for serial engines)
     # Gap-policy columns (engines tracking per-block duality gaps; the
     # defaults are what non-gap engines report):
     gap_total: Optional[float] = None  # sum of visited blocks' gap

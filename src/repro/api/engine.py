@@ -74,6 +74,16 @@ class EngineCapabilities:
       needs_key:  the engine's policies consume a per-iteration PRNG key
                   (keyed samplers); the solver draws one from its seeded
                   stream and passes ``key=`` into ``outer_iteration``.
+      async_oracle: the engine pipelines the exact max-oracle with the
+                  cache passes as *two* concurrently-dispatched programs
+                  per outer iteration (oracle at stale ``w`` for the next
+                  iteration's blocks, cache eviction + approximate passes
+                  on the current state).  The contract becomes <= 2
+                  dispatches + 1 host sync per iteration, checked
+                  statically by analysis rule J009, and the engine's
+                  :class:`~repro.core.selection.SyncLedger` carries the
+                  oracle-overlap accounting behind the
+                  ``TraceRow.oracle_overlap`` column.
       policies:   the default policy-bundle names this engine assembles
                   when ``RunConfig.policies`` is None (``None`` for
                   engines predating the policy layer — they run their
@@ -119,6 +129,7 @@ class EngineCapabilities:
     mesh_optional: bool = False
     policy_capable: bool = False
     needs_key: bool = False
+    async_oracle: bool = False
     policies: Optional[Tuple[str, ...]] = None
     collectives_per_pass: Optional[int] = None
     collectives_setup: Optional[int] = None

@@ -167,6 +167,99 @@ class FusedEngine(_EngineBase):
         return w, w_avg
 
 
+class AsyncEngine(FusedEngine):
+    """Pipelined single-device engine (``mpbcfw-async``): TWO programs
+    dispatched per outer iteration without a host sync between them —
+    the exact max-oracle over the next iteration's blocks at the stale
+    iteration-entry ``w`` (:func:`repro.core.mpbcfw.async_oracle_program`)
+    and the eviction + fold-in + approximate batch on the current state
+    (:func:`repro.core.mpbcfw.async_cache_program`).  JAX async dispatch
+    overlaps their device execution; the contract is <= 2 dispatches +
+    1 host sync per iteration, and the ledger carries the
+    oracle-overlap accounting (modeled oracle time hidden behind the
+    cache program) behind ``TraceRow.oracle_overlap``."""
+
+    capabilities = EngineCapabilities(multipass=True,
+                                      supports_averaging=True,
+                                      policy_capable=True,
+                                      async_oracle=True,
+                                      policies=("uniform", "ttl-lru",
+                                                "slope"),
+                                      **_SINGLE_DEVICE_BUDGET)
+
+    def __init__(self, problem: SSVMProblem, lam: float, *,
+                 gram_steps: int = 10, averaged: bool = False,
+                 policies=None, fold_scatter: str = "per-elem"):
+        super().__init__(problem, lam, averaged=averaged,
+                         gram_steps=gram_steps, policies=policies)
+        self.fold_scatter = fold_scatter
+        # Straggler-injection hook (repro.ft tests): ``(iteration, k) ->
+        # (k,) bool`` arrival mask for the k dispatched oracles; None
+        # means every result arrives in time.
+        self.outcome_fn = None
+        self._overlap_pending = None
+        self._it = 0
+
+    def init_state(self, cap: int):
+        return mpbcfw.init_async_state(
+            self.problem, CacheLayout(cap=cap, track_gap=self.track_gap,
+                                      fold_scatter=self.fold_scatter))
+
+    def _done_mask(self, k: int):
+        self._it += 1
+        if self.outcome_fn is None:
+            return jnp.ones((k,), bool)
+        return jnp.asarray(self.outcome_fn(self._it, k)).astype(bool)
+
+    def outer_iteration(self, state, perm, perms, clock, *, ttl: int,
+                        key=None):
+        """Dispatch the oracle and cache programs back to back (no
+        blocking, no data dependence between them)."""
+        mp, pending = state.mp, state.pending
+        self.ledger.dispatched()
+        ids, planes = mpbcfw.jit_async_oracle(
+            self.problem, mp.inner.phi, mp.cache, perm, key,
+            lam=self.lam, policies=self.policies)
+        self.ledger.dispatched()
+        mp2, clock2, stats = mpbcfw.jit_async_cache(
+            mp, pending, perms, clock, lam=self.lam, ttl=ttl,
+            steps=self.gram_steps, policies=self.policies,
+            scatter=self.fold_scatter)
+        new_pending = mpbcfw.PendingOracle(
+            ids=ids, planes=planes, done=self._done_mask(perm.shape[0]),
+            live=jnp.ones((), bool))
+        # Overlap accounting, still on device: the oracle program's
+        # modeled duration is the slope clock's exact-pass constant
+        # (clock.t); the cache program's is the approximate phase's clock
+        # advance.  min(oracle, cache) of it is hidden by the pipeline.
+        # Synced — once — in read_stats.
+        self._overlap_pending = (
+            clock.t, jnp.minimum(clock.t, clock2.t - clock.t))
+        return (mpbcfw.AsyncMPState(mp=mp2, pending=new_pending),
+                clock2, stats)
+
+    def continue_passes(self, state, perms, clock):
+        self.ledger.dispatched()
+        mp2, clock2, stats = mpbcfw.jit_multi_approx_pass(
+            self.problem, state.mp, perms, clock, lam=self.lam,
+            steps=self.gram_steps, policies=self.policies)
+        return state._replace(mp=mp2), clock2, stats
+
+    def read_stats(self, stats):
+        pend, self._overlap_pending = self._overlap_pending, None
+        if pend is None:
+            return self.ledger.sync(stats)
+        st, total, hidden = self.ledger.sync((stats, pend[0], pend[1]))
+        self.ledger.overlapped(float(total), float(hidden))
+        return st
+
+    def evaluate(self, state):
+        return super().evaluate(state.mp)
+
+    def extract(self, state):
+        return super().extract(state.mp)
+
+
 class ShardDriverEngine(FusedEngine):
     """Adapter driving :class:`repro.shard.ShardEngine` through the same
     protocol: the exact pass is the tau-nice epoch, fused with the
@@ -208,6 +301,76 @@ class ShardDriverEngine(FusedEngine):
 
     def unpack_state(self, tree):
         return self.eng.place(tree)
+
+
+class ShardAsyncDriverEngine(AsyncEngine):
+    """Pipelined mesh engine (``mpbcfw-shard-async``): the per-shard
+    oracle compute of :meth:`repro.shard.ShardEngine.async_oracle_pass`
+    (zero collectives) overlaps the psum-synchronized cache passes of
+    :meth:`~repro.shard.ShardEngine.async_cache_pass` — same <= 2
+    dispatches + 1 host sync contract as the single-device pipeline,
+    same one-setup-psum + one-psum-per-pass collective budget as the
+    serial shard family (all of it inside the cache program)."""
+
+    capabilities = EngineCapabilities(multipass=True, supports_mesh=True,
+                                      supports_averaging=True,
+                                      policy_capable=True,
+                                      async_oracle=True,
+                                      policies=("uniform", "ttl-lru",
+                                                "slope"),
+                                      **_SHARD_BUDGET)
+
+    def __init__(self, problem: SSVMProblem, lam: float, mesh, *,
+                 gram_steps: int = 10, policies=None,
+                 fold_scatter: str = "per-elem"):
+        from ..shard import ShardEngine  # lazy: keep core importable alone
+        super().__init__(problem, lam, gram_steps=gram_steps,
+                         policies=policies, fold_scatter=fold_scatter)
+        if policies is not None and policies.sampling.name != "uniform":
+            raise UnsupportedConfigError(
+                "mpbcfw-shard-async runs the uniform exact schedule (the "
+                "pipelined oracle program shards the whole permutation); "
+                f"sampler {policies.sampling.name!r} is unsupported — use "
+                "mpbcfw-async for sampled schedules.")
+        self.eng = ShardEngine(problem, mesh, lam=lam,
+                               gram_steps=gram_steps, policies=policies)
+        self.ledger = self.eng.ledger
+
+    def init_state(self, cap: int):
+        return mpbcfw.AsyncMPState(
+            mp=self.eng.init_state(cap),
+            pending=mpbcfw.init_pending(self.problem.n, self.problem.d))
+
+    def outer_iteration(self, state, perm, perms, clock, *, ttl: int,
+                        key=None):
+        del key
+        ids, planes = self.eng.async_oracle_pass(state.mp.inner.phi, perm)
+        mp2, clock2, stats = self.eng.async_cache_pass(
+            state.mp, state.pending, perms, clock, ttl=ttl,
+            scatter=self.fold_scatter)
+        new_pending = mpbcfw.PendingOracle(
+            ids=ids, planes=planes, done=self._done_mask(perm.shape[0]),
+            live=jnp.ones((), bool))
+        self._overlap_pending = (
+            clock.t, jnp.minimum(clock.t, clock2.t - clock.t))
+        return (mpbcfw.AsyncMPState(mp=mp2, pending=new_pending),
+                clock2, stats)
+
+    def continue_passes(self, state, perms, clock):
+        mp2, clock2, stats = self.eng.multi_approx_pass(state.mp, perms,
+                                                        clock)
+        return state._replace(mp=mp2), clock2, stats
+
+    def read_stats(self, stats):
+        pend, self._overlap_pending = self._overlap_pending, None
+        if pend is None:
+            return self.eng.read_stats(stats)
+        st, (total, hidden) = self.eng.read_stats(stats, extra=pend)
+        self.ledger.overlapped(float(total), float(hidden))
+        return st
+
+    def unpack_state(self, tree):
+        return tree._replace(mp=self.eng.place(tree.mp))
 
 
 # ---------------------------------------------------------------------------
@@ -368,6 +531,15 @@ def _gram_factory(problem: SSVMProblem, cfg: RunConfig):
                        policies=_policies(problem, cfg))
 
 
+def _shard_async_factory(problem: SSVMProblem,
+                         cfg: RunConfig) -> "ShardAsyncDriverEngine":
+    from ..launch.mesh import ensure_data_mesh
+    return ShardAsyncDriverEngine(problem, cfg.lam,
+                                  ensure_data_mesh(cfg.mesh),
+                                  gram_steps=cfg.gram_steps,
+                                  policies=_policies(problem, cfg))
+
+
 def _gap_factory(problem: SSVMProblem, cfg: RunConfig):
     """``mpbcfw-gap``: gap-proportional gumbel-top-k sampling + gap-aware
     eviction (default bundle ``GAP_POLICIES``; override via
@@ -428,6 +600,27 @@ _register(
              "gram engine (the mpbcfw-shard-gram path: PlaneCache.gram "
              "shards with the blocks), which also consumes "
              "RunConfig.tau."))
+_register(
+    "mpbcfw-async",
+    lambda p, cfg: AsyncEngine(p, cfg.lam, gram_steps=cfg.gram_steps,
+                               policies=_policies(p, cfg)),
+    dataclasses.replace(
+        AsyncEngine.capabilities,
+        note="Pipelined oracle: two programs dispatched per outer "
+             "iteration (exact oracles for the next iteration at stale "
+             "w, eviction + monotone fold-in + approximate batch on the "
+             "current state), <= 2 dispatches + 1 host sync, proven by "
+             "analysis rule J009; TraceRow.oracle_overlap reports the "
+             "hidden fraction of the modeled oracle time."))
+_register(
+    "mpbcfw-shard-async",
+    lambda p, cfg: _shard_async_factory(p, cfg),
+    dataclasses.replace(
+        ShardAsyncDriverEngine.capabilities,
+        note="Pipelined oracle on the 1-D data mesh: the per-shard "
+             "oracle program (zero collectives) overlaps the "
+             "psum-synchronized cache passes; collective budgets match "
+             "the serial shard family."))
 _register(
     "mpbcfw-shard", _shard_factory, ShardDriverEngine.capabilities)
 _register(

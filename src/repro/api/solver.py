@@ -358,6 +358,12 @@ class Solver:
             it = self._it
             mp = self._state
             led0 = engine.ledger.counts()
+            # Async engines accumulate modeled oracle-overlap time on the
+            # ledger (outside counts()); per-iteration deltas become the
+            # TraceRow.oracle_overlap column.  getattr: serial engines'
+            # ledgers simply never grow the fields.
+            ovl0 = (getattr(engine.ledger, "oracle_time_total", 0.0),
+                    getattr(engine.ledger, "oracle_time_hidden", 0.0))
             f_start = f_end     # TTL eviction does not change phi, hence F
             t0 = clock.now()
             tracker.start(t0, f_start)
@@ -391,6 +397,7 @@ class Solver:
             mp, clock_dev, stats = engine.outer_iteration(
                 mp, perm, perms, clock_dev, ttl=cfg.ttl, **key_kw)
             st = engine.read_stats(stats)  # the iteration's single sync
+            t_sync = clock.now()
             # Device-accumulated obs counters arrive on the same sync.
             # Capture them from the *outer* program's stats: overflow
             # continuations never insert/evict, so their metrics carry
@@ -402,6 +409,14 @@ class Solver:
             k = int(st.passes_run)
             duals_all = [float(x) for x in st.duals[:k]]
             planes_all = [int(x) for x in st.planes[:k]]
+            # Measured program-boundary segments: every read_stats is a
+            # host sync the loop already pays for, so timestamping each
+            # boundary is free.  Segment 0 spans the fused exact(+first
+            # approx batch) program; later segments are *approx-only*
+            # overflow continuations — the recorder calibrates the real
+            # exact-vs-plane cost split from these instead of pro-rata
+            # attribution (wall mode).
+            segs = [(sum(max(p, 1) for p in planes_all), t_sync - t0)]
             while bool(st.more) and len(duals_all) < cfg.max_approx_passes:
                 batch = min(cfg.approx_batch,
                             cfg.max_approx_passes - len(duals_all))
@@ -409,10 +424,21 @@ class Solver:
                 mp, clock_dev, stats = engine.continue_passes(mp, perms,
                                                               clock_dev)
                 st = engine.read_stats(stats)
+                t_prev, t_sync = t_sync, clock.now()
                 k = int(st.passes_run)
-                duals_all += [float(x) for x in st.duals[:k]]
-                planes_all += [int(x) for x in st.planes[:k]]
+                b_duals = [float(x) for x in st.duals[:k]]
+                b_planes = [int(x) for x in st.planes[:k]]
+                duals_all += b_duals
+                planes_all += b_planes
+                segs.append((sum(max(p, 1) for p in b_planes),
+                             t_sync - t_prev))
             led1 = engine.ledger.counts()
+            ovl_total = (getattr(engine.ledger, "oracle_time_total", 0.0)
+                         - ovl0[0])
+            ovl_hidden = (getattr(engine.ledger, "oracle_time_hidden", 0.0)
+                          - ovl0[1])
+            oracle_overlap = (ovl_hidden / ovl_total if ovl_total > 0
+                              else 0.0)
 
             # Replay the device-chosen pass schedule through the host
             # clock (the tracker mirrors what the device rule saw —
@@ -428,6 +454,15 @@ class Solver:
                     f_exact)
                 for dv, n_planes in zip(duals_all, planes_all):
                     tracker.record(clock.approx(n_planes), dv)
+                # Pipelined engines: the oracle and cache programs ran
+                # concurrently, so the modeled iteration time is
+                # max(oracle, cache), not their sum — credit back the
+                # overlap the engine reported (hidden <= the exact charge
+                # above, so the virtual clock stays monotone).  Purely
+                # deterministic, hence checkpoint/resume stays
+                # bit-for-bit.
+                if ovl_hidden > 0.0:
+                    cm.now -= ovl_hidden
             else:
                 elapsed = clock.now() - t0
                 weights = [self._est_exact] + [self._est_plane * max(p, 1)
@@ -441,20 +476,34 @@ class Solver:
                 tracker.record_batch(ts[1:], duals_all)
                 # Calibrate the device rule's cost constants.  Pro-rata
                 # attribution alone preserves the est_exact/est_plane
-                # *ratio*, so regress elapsed ~ a + b*plane_steps across
-                # iterations (pass counts vary) to learn the real
-                # exact-vs-approx split.
+                # *ratio*, so it drifts when pass counts barely vary.
+                # With a recorder the measured program-boundary segments
+                # above calibrate the split directly (overflow segments
+                # are approx-only, identifying the per-plane cost without
+                # any regression); the constants persist through the
+                # checkpoint manifest's ``extra["calibration"]`` either
+                # way.  Without one, regress elapsed ~ a + b*plane_steps
+                # across iterations as before.
                 self._wall_x.append(float(sum(max(p, 1)
                                               for p in planes_all)))
                 self._wall_y.append(float(elapsed))
-                fit = _fit_pass_costs(self._wall_x, self._wall_y)
-                if fit is not None:
-                    self._est_exact, self._est_plane = fit
+                if self.recorder is not None:
+                    fit = self.recorder.observe_phases(segs)
+                    if fit is not None:
+                        self._est_exact, self._est_plane = fit
+                    # No fit yet: keep the current constants rather than
+                    # re-deriving them pro-rata — exactly the drift the
+                    # recorder path removes.
                 else:
-                    self._est_exact = max(durs[0], 1e-9)
-                    if planes_all:
-                        tot = sum(max(p, 1) for p in planes_all)
-                        self._est_plane = max(sum(durs[1:]) / tot, 1e-12)
+                    fit = _fit_pass_costs(self._wall_x, self._wall_y)
+                    if fit is not None:
+                        self._est_exact, self._est_plane = fit
+                    else:
+                        self._est_exact = max(durs[0], 1e-9)
+                        if planes_all:
+                            tot = sum(max(p, 1) for p in planes_all)
+                            self._est_plane = max(sum(durs[1:]) / tot,
+                                                  1e-12)
 
             n_approx_passes = len(duals_all)
             # One statistic in both branches (Fig. 5): the mean working-
@@ -496,7 +545,8 @@ class Solver:
                 ws_mean, n_approx_passes,
                 led1[0] - led0[0], led1[2] - led0[2],
                 cache_hit_rate=hit_rate, planes_evicted=evicted,
-                oracle_share=oracle_share, **gap_kw)
+                oracle_share=oracle_share, oracle_overlap=oracle_overlap,
+                **gap_kw)
 
     # -- serving export -----------------------------------------------------
 

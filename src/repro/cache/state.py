@@ -96,6 +96,14 @@ class CacheLayout:
       track_gap: carry the ``(n,)`` per-block duality-gap vector that
              gap-proportional sampling / gap-aware eviction policies
              consume (:mod:`repro.policy`).
+      fold_scatter: scatter strategy of the tau-nice / async fold-in
+             (:func:`repro.core.distributed.fold_planes`): ``"per-elem"``
+             keeps the per-element dynamic scatters into the full cache
+             from inside the fold scan; ``"chunked"`` gathers the sampled
+             blocks' cache rows (and ``phi_i`` rows) up front, folds with
+             local indices, and scatters the sub-cache back once per
+             chunk.  Numerically identical for distinct block ids;
+             ``benchmarks/async_bench.py`` compares the two.
     """
 
     cap: int = 64
@@ -103,6 +111,7 @@ class CacheLayout:
     gram: bool = False
     axis: Optional[str] = None
     track_gap: bool = False
+    fold_scatter: str = "per-elem"
 
 
 def layout_of(cache: PlaneCache, *, axis: Optional[str] = None

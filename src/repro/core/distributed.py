@@ -89,7 +89,9 @@ def fallback_planes(ws, block_ids: jnp.ndarray, w: jnp.ndarray):
 
 def fold_planes(mp: MPState, block_ids: jnp.ndarray, planes: jnp.ndarray,
                 fb_planes: jnp.ndarray, fb_slots: jnp.ndarray,
-                done: jnp.ndarray, lam: float) -> MPState:
+                done: jnp.ndarray, lam: float, *,
+                live: Optional[jnp.ndarray] = None,
+                scatter: str = "per-elem") -> MPState:
     """Sequentially fold tau candidate planes into the dual state.
 
     ``done[b]`` False means block b's oracle result is missing (straggler /
@@ -98,7 +100,34 @@ def fold_planes(mp: MPState, block_ids: jnp.ndarray, planes: jnp.ndarray,
     the gathered sub-cache — is folded instead.  Folding is a cheap
     O(tau d) scan; each step uses exact line search at the *current* phi,
     hence monotone in F no matter which ``w`` produced the candidate.
+
+    ``live`` is an optional ``()`` bool gating the whole fold: ``False``
+    returns ``mp`` unchanged (shape-stably — the async pipeline's first
+    iteration has no pending oracle results yet).
+
+    ``scatter`` picks the cache/``phi_i`` update strategy:
+
+      * ``"per-elem"`` — dynamic per-element scatters into the full
+        arrays from inside the scan (the original path);
+      * ``"chunked"`` — gather the sampled blocks' cache rows and
+        ``phi_i`` rows up front, fold with *local* indices, scatter each
+        sub-array back once after the scan.  Bit-identical for distinct
+        ``block_ids`` (tau-nice chunks and async pipelines fold
+        permutation slices, so ids are always distinct); on a sharded
+        cache this trades tau dynamic-update-slices for one gather + one
+        scatter per chunk (the ROADMAP fold-in question, measured by
+        ``benchmarks/async_bench.py``).
     """
+    if scatter not in ("per-elem", "chunked"):
+        raise ValueError(f"fold_planes: unknown scatter strategy "
+                         f"{scatter!r} (use 'per-elem' or 'chunked')")
+    chunked = scatter == "chunked"
+    if chunked:
+        ws0 = plane_cache.gather(mp.cache, block_ids)
+        st0 = mp.inner._replace(phi_i=mp.inner.phi_i[block_ids])
+        idx = jnp.arange(block_ids.shape[0], dtype=block_ids.dtype)
+    else:
+        ws0, st0, idx = mp.cache, mp.inner, block_ids
 
     def body(carry, inp):
         st, ws, av = carry
@@ -116,19 +145,30 @@ def fold_planes(mp: MPState, block_ids: jnp.ndarray, planes: jnp.ndarray,
         return (st, ws, av), None
 
     (inner, ws, avg), _ = jax.lax.scan(
-        body, (mp.inner, mp.cache, mp.avg),
-        (block_ids, planes, fb_planes, fb_slots, done))
-    return mp._replace(inner=inner, cache=ws, avg=avg)
+        body, (st0, ws0, mp.avg),
+        (idx, planes, fb_planes, fb_slots, done))
+    if chunked:
+        inner = inner._replace(
+            phi_i=mp.inner.phi_i.at[block_ids].set(inner.phi_i))
+        ws = jax.tree_util.tree_map(
+            lambda full, sub: full.at[block_ids].set(sub), mp.cache, ws)
+    out = mp._replace(inner=inner, cache=ws, avg=avg)
+    if live is None:
+        return out
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(live, a, b), out, mp)
 
 
-@functools.partial(jax.jit, static_argnames=("lam",))
+@functools.partial(jax.jit, static_argnames=("lam", "scatter"))
 def jit_fold_planes(mp: MPState, block_ids, planes, fb_planes, fb_slots,
-                    done, *, lam: float):
-    return fold_planes(mp, block_ids, planes, fb_planes, fb_slots, done, lam)
+                    done, *, lam: float, scatter: str = "per-elem"):
+    return fold_planes(mp, block_ids, planes, fb_planes, fb_slots, done,
+                       lam, scatter=scatter)
 
 
 def tau_chunk(oracle, data, mp: MPState, ids: jnp.ndarray, ok: jnp.ndarray,
-              lam: float, oracle_stage=None) -> MPState:
+              lam: float, oracle_stage=None,
+              scatter: str = "per-elem") -> MPState:
     """One tau-nice chunk: parallel oracles at the chunk's stale ``w``,
     batched cached fallback at the same ``w``, sequential fold-in.
 
@@ -146,7 +186,7 @@ def tau_chunk(oracle, data, mp: MPState, ids: jnp.ndarray, ok: jnp.ndarray,
     else:
         planes = oracle_stage(data, w, ids)
     fbp, fbs, _ = fallback_planes(mp.cache, ids, w)
-    return fold_planes(mp, ids, planes, fbp, fbs, ok, lam)
+    return fold_planes(mp, ids, planes, fbp, fbs, ok, lam, scatter=scatter)
 
 
 @functools.partial(jax.jit, static_argnums=(0,), static_argnames=("lam",))

@@ -415,3 +415,180 @@ def init_mp_state(problem: SSVMProblem,
         avg=init_averaging(problem.d),
         outer_it=jnp.zeros((), jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Async oracle pipelining (ROADMAP item 4, the ``mpbcfw-async`` family).
+#
+# The fused :func:`outer_iteration` serializes the exact max-oracle scan
+# with the approximate cache passes inside one program — the oracle's
+# latency is paid in full every iteration.  The async split dispatches TWO
+# programs per outer iteration without a host sync between them:
+#
+#   * :func:`async_oracle_program` — the exact max-oracle over the *next*
+#     iteration's sampled blocks at the iteration-entry (stale) ``w``;
+#   * :func:`async_cache_program`  — eviction, the damped monotone fold-in
+#     of the *previous* iteration's oracle results (the tau-nice trick of
+#     ``core/distributed``: every returned plane is a genuine data plane,
+#     so folding with exact line search at the current phi is monotone no
+#     matter which ``w`` produced it), and the slope-ruled batch of
+#     approximate passes.
+#
+# Neither program consumes the other's outputs, so JAX async dispatch
+# lets device execution of the costly oracle overlap the cache passes
+# (statically proven by analysis rule J009); results meet again only in
+# the *next* iteration's pending buffer.
+# ---------------------------------------------------------------------------
+
+
+class PendingOracle(NamedTuple):
+    """In-flight oracle results: dispatched at iteration t, folded at t+1.
+
+    Attributes:
+      ids:    (k,) int32 — blocks whose exact oracles were dispatched.
+      planes: (k, d+1)   — their oracle planes at the dispatch-time
+              (stale) ``w``.
+      done:   (k,) bool  — result arrived by the straggler deadline;
+              missed blocks fold their batched cached fallback instead
+              (``repro.ft``).
+      live:   () bool    — False until the first dispatch (iteration 0
+              has nothing to fold); gates the whole fold shape-stably.
+    """
+
+    ids: jnp.ndarray
+    planes: jnp.ndarray
+    done: jnp.ndarray
+    live: jnp.ndarray
+
+
+class AsyncMPState(NamedTuple):
+    """Pipelined MP-BCFW state: dual/cache state + the pending buffer.
+
+    One pytree so the Solver's checkpoint/resume path (``pack_state`` /
+    ``unpack_state`` identity) snapshots the in-flight oracle results
+    bit-for-bit alongside the optimizer state.
+    """
+
+    mp: MPState
+    pending: PendingOracle
+
+    @property
+    def inner(self):
+        """Passthrough to the wrapped dual state — the Solver's generic
+        reads (``state.inner.phi``, ``state.inner.n_exact``) hold for
+        every multipass engine state, pipelined or not."""
+        return self.mp.inner
+
+
+def init_pending(n: int, d: int) -> PendingOracle:
+    """Empty pending buffer (``live=False``: nothing folds)."""
+    return PendingOracle(
+        ids=jnp.zeros((n,), jnp.int32),
+        planes=jnp.zeros((n, d + 1), jnp.float32),
+        done=jnp.zeros((n,), bool),
+        live=jnp.zeros((), bool),
+    )
+
+
+def init_async_state(problem: SSVMProblem,
+                     cap: Union[int, CacheLayout]) -> AsyncMPState:
+    return AsyncMPState(mp=init_mp_state(problem, cap),
+                        pending=init_pending(problem.n, problem.d))
+
+
+def async_oracle_program(oracle, data, phi: jnp.ndarray, cache: PlaneCache,
+                         perm: jnp.ndarray, key: Optional[jnp.ndarray],
+                         *, lam: float, policies=None):
+    """The oracle half of the pipelined iteration.
+
+    Evaluates the exact max-oracle for every block the sampling policy
+    schedules out of ``perm``, all at the single stale ``w`` derived from
+    the iteration-entry dual iterate ``phi`` — exactly the tau-nice
+    parallel-oracle shape of :func:`repro.core.distributed.tau_chunk`,
+    lifted to its own dispatch.  Reads only iteration-*entry* state
+    (``phi``, ``cache``, ``perm``), never the concurrent cache program's
+    outputs.  Returns ``(ids, planes)``.
+    """
+    w = weights_of(phi, lam)
+    ids = perm if policies is None else policies.sampling.schedule(
+        cache, perm, key)
+    batch = jax.tree_util.tree_map(lambda a: a[ids], data)
+    planes = jax.vmap(lambda ex: oracle(w, ex))(batch)
+    return ids, planes
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("lam", "policies"))
+def _jit_async_oracle(oracle, data, phi, cache, perm, key, *, lam,
+                      policies=None):
+    return async_oracle_program(oracle, data, phi, cache, perm, key,
+                                lam=lam, policies=policies)
+
+
+def jit_async_oracle(problem: SSVMProblem, phi, cache, perm, key, *,
+                     lam: float, policies=None):
+    return _jit_async_oracle(problem.oracle, problem.data, phi, cache,
+                             perm, key, lam=lam, policies=policies)
+
+
+def async_cache_program(mp: MPState, pending: PendingOracle,
+                        perms: jnp.ndarray, clock: SlopeClock, *,
+                        lam: float, ttl: int, steps: int = 10,
+                        run_all: bool = False, policies=None,
+                        scatter: str = "per-elem"):
+    """The cache half of the pipelined iteration.
+
+    Eviction, the monotone fold-in of the previous iteration's pending
+    oracle results (straggler blocks fall back to their best cached plane
+    at the *current* ``w``, batched — the ``repro.ft`` path), and the
+    slope-ruled approximate multi-pass batch, as one program.  Mirrors
+    :func:`outer_iteration` with the exact-pass scan replaced by the
+    fold; the slope clock still charges the modeled oracle time
+    ``clock.t`` so the continue rule prices passes identically to the
+    serial engines.  Returns ``(mp, clock, stats)``.
+    """
+    from .distributed import fallback_planes, fold_planes
+
+    eviction = None if policies is None else policies.eviction
+    occ0 = mp.cache.occupancy                 # before eviction
+    mp = begin_iteration(mp, ttl, eviction=eviction)
+    occ1 = mp.cache.occupancy                 # after eviction
+    # Seed f0 *before* the fold: the fold is this iteration's exact-pass
+    # equivalent, so the slope rule's chord must include its gain.
+    clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
+    w = weights_of(mp.inner.phi, lam)
+    fbp, fbs, _ = fallback_planes(mp.cache, pending.ids, w)
+    mp = fold_planes(mp, pending.ids, pending.planes, fbp, fbs,
+                     pending.done, lam, live=pending.live, scatter=scatter)
+    occ2 = mp.cache.occupancy                 # after the fold's inserts
+    mp, clock, stats = multi_approx_pass(mp, perms, clock, lam=lam,
+                                         steps=steps, run_all=run_all,
+                                         policies=policies)
+    # Eviction accounting (cf. outer_iteration): the fold inserts one
+    # plane per *arrived* block (fallbacks only refresh activity), and
+    # only when the pending buffer is live.
+    n_inserts = jnp.where(pending.live,
+                          jnp.sum(pending.done.astype(jnp.int32)),
+                          jnp.zeros((), jnp.int32))
+    metrics = stats.metrics._replace(ttl_evicted=occ0 - occ1,
+                                     lru_evicted=occ1 + n_inserts - occ2)
+    return mp, clock, stats._replace(metrics=metrics)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "ttl", "steps", "run_all",
+                                    "policies", "scatter"))
+def _jit_async_cache(mp, pending, perms, clock, *, lam, ttl, steps,
+                     run_all, policies=None, scatter="per-elem"):
+    return async_cache_program(mp, pending, perms, clock, lam=lam, ttl=ttl,
+                               steps=steps, run_all=run_all,
+                               policies=policies, scatter=scatter)
+
+
+def jit_async_cache(mp: MPState, pending: PendingOracle, perms, clock, *,
+                    lam: float, ttl: int, steps: int = 10,
+                    run_all: bool = False, policies=None,
+                    scatter: str = "per-elem"):
+    return _jit_async_cache(mp, pending, perms, clock, lam=lam, ttl=ttl,
+                            steps=steps, run_all=run_all, policies=policies,
+                            scatter=scatter)

@@ -119,6 +119,12 @@ class SyncLedger:
     # pass counts, charged alongside ``collectives``).  Deliberately NOT
     # part of :meth:`counts` — that 3-tuple is a stable assertion surface.
     collective_bytes: int = 0
+    # Oracle-overlap telemetry (async pipelined engines): modeled oracle
+    # seconds issued, and the portion hidden behind concurrently-running
+    # cache passes.  Overlap efficiency = hidden / total.  Like
+    # ``collective_bytes``, NOT part of :meth:`counts`.
+    oracle_time_total: float = 0.0
+    oracle_time_hidden: float = 0.0
 
     def counts(self) -> tuple:
         """Snapshot ``(host_syncs, collectives, dispatches)``.
@@ -142,6 +148,16 @@ class SyncLedger:
     def collected(self, n: int = 1, nbytes: int = 0) -> None:
         self.collectives += n
         self.collective_bytes += nbytes
+
+    def overlapped(self, total: float, hidden: float) -> None:
+        """Charge one iteration's oracle-overlap accounting.
+
+        ``total`` is the modeled duration of the concurrently-dispatched
+        oracle program; ``hidden`` is the portion masked by the cache
+        program running alongside it (``0 <= hidden <= total``).
+        """
+        self.oracle_time_total += float(total)
+        self.oracle_time_hidden += float(min(max(hidden, 0.0), total))
 
 
 @dataclass

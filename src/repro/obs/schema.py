@@ -6,7 +6,11 @@ Record types (``"type"`` discriminates):
                   the engine's declared contract budgets, time mode.
   * ``row``     — one per outer iteration: the full
                   :class:`~repro.api.config.TraceRow` plus the ledger's
-                  cumulative collective count/bytes.
+                  cumulative collective count/bytes.  ``oracle_overlap``
+                  is the pipelining column: the fraction of the modeled
+                  oracle time the async engines hid behind the concurrent
+                  cache program this iteration (0.0 on serial engines;
+                  rule J009 proves the two-program structure statically).
   * ``span``    — a timed phase ``[t0, t1)``: ``outer_iteration``,
                   ``exact_pass``, ``approx_passes``, ``checkpoint_save``,
                   ``checkpoint_restore``.  ``timebase`` says which clock
@@ -42,7 +46,7 @@ _REQUIRED = {
             "ws_mean": _NUM, "approx_passes": (int,),
             "host_syncs": (int,), "dispatches": (int,),
             "cache_hit_rate": _NUM, "planes_evicted": (int,),
-            "oracle_share": _NUM,
+            "oracle_share": _NUM, "oracle_overlap": _NUM,
             "gap_total": _NUM + (type(None),), "gap_sampled": (int,),
             "collectives": (int,), "collective_bytes": (int,)},
     "span": {"name": (str,), "t0": _NUM, "t1": _NUM, "timebase": (str,)},

@@ -90,6 +90,10 @@ def summarize(run: dict) -> dict:
                                    for r in rows) / len(rows))
     shares = [r.get("oracle_share", 1.0) for r in rows]
     s["oracle_share_mean"] = sum(shares) / len(shares)
+    # Pipelining efficiency (async engines; 0.0 everywhere else):
+    # fraction of modeled oracle time hidden behind the cache program.
+    overlaps = [r.get("oracle_overlap", 0.0) for r in rows]
+    s["oracle_overlap_mean"] = sum(overlaps) / len(overlaps)
 
     # Sync/dispatch/collective ledger vs the engine's declared budgets.
     budgets = meta.get("engine_budgets", {})
@@ -156,6 +160,8 @@ def format_summary(s: dict) -> str:
             f"approx passes:     {_fmt(s.get('approx_passes_mean'))} "
             f"per iteration (mean)",
             f"oracle wall share: {_fmt(s.get('oracle_share_mean'))} (mean)",
+            f"oracle overlap:    {_fmt(s.get('oracle_overlap_mean'))} "
+            f"(mean, async pipelining)",
         ]
         c = s.get("contract", {})
         lines += [
@@ -186,7 +192,7 @@ def _fmt(v) -> str:
 _DIFF_KEYS = ("iterations", "oracle_calls", "approx_calls", "final_gap",
               "final_dual", "total_time", "cache_hit_rate_mean",
               "planes_evicted_total", "approx_passes_mean",
-              "oracle_share_mean")
+              "oracle_share_mean", "oracle_overlap_mean")
 
 
 def diff_runs(run_a: dict, run_b: dict) -> dict:

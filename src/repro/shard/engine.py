@@ -89,6 +89,8 @@ class ShardEngine:
         self._epoch_fn = None                       # tau epoch (unjitted)
         self._tau_prog = None                       # standalone jit
         self._outer: Dict[tuple, callable] = {}     # fused outer programs
+        self._async_oracle_prog = None              # async oracle program
+        self._async_cache_progs: Dict[tuple, callable] = {}
         self._begin = jax.jit(mpbcfw.begin_iteration, static_argnums=(1,))
 
     # -- state management ---------------------------------------------------
@@ -112,17 +114,24 @@ class ShardEngine:
         """Fetch any device value(s) to host — one counted sync."""
         return self.ledger.sync(tree)
 
-    def read_stats(self, stats: ApproxBatchStats) -> ApproxBatchStats:
+    def read_stats(self, stats: ApproxBatchStats, extra=None):
         """Fetch multi-pass telemetry (the iteration's single sync) and
-        charge the program's runtime collectives to the ledger."""
-        st = self.ledger.sync(stats)
+        charge the program's runtime collectives to the ledger.
+
+        ``extra`` (optional pytree of device values) rides the *same*
+        blocking round-trip — the async driver fetches its overlap
+        scalars this way without a second sync.  Returns ``stats`` alone,
+        or ``(stats, extra)`` when ``extra`` was given.
+        """
+        got = self.ledger.sync(stats if extra is None else (stats, extra))
+        st = got if extra is None else got[0]
         passes = int(st.passes_run)
         self.ledger.collected(
             self.collectives.count("multi_approx", "setup")
             + passes * self.collectives.count("multi_approx", "pass"),
             nbytes=self.collectives.bytes_of("multi_approx", "setup")
             + passes * self.collectives.bytes_of("multi_approx", "pass"))
-        return st
+        return st if extra is None else got
 
     @property
     def psums_per_approx_pass(self) -> int:
@@ -538,6 +547,99 @@ class ShardEngine:
         self.ledger.dispatched()
         return self._outer[cache_key](self.problem.data, mp, chunk_ids,
                                       done_arr, approx_perms, clock, key)
+
+    # -- async oracle pipelining (the mpbcfw-shard-async split) --------------
+
+    def _build_async_oracle(self):
+        """The oracle half of the pipelined iteration, as its own program.
+
+        The tau-nice oracle stage (``local_oracles`` under ``shard_map``:
+        per-shard max-oracles at the shared stale ``w``, examples gathered
+        from the replicated data copy) over the *whole* permutation —
+        zero collectives, so its per-shard compute is free to overlap the
+        cache program's psum-synchronized passes.
+        """
+        mesh, axis, lam = self.mesh, self.axis, self.lam
+        oracle = self.problem.oracle
+        data_specs = jax.tree_util.tree_map(lambda _: P(),
+                                            self.problem.data)
+
+        def local_oracles(data, w, ids_loc):
+            batch = jax.tree_util.tree_map(lambda a: a[ids_loc], data)
+            return jax.vmap(lambda ex: oracle(w, ex))(batch)
+
+        oracle_stage = shard_map(
+            local_oracles, mesh=mesh,
+            in_specs=(data_specs, P(None), P(axis)),
+            out_specs=P(axis, None), check_rep=False)
+
+        def shard_async_oracle(data, phi, perm):
+            w = weights_of(phi, lam)
+            return perm, oracle_stage(data, w, perm)
+
+        return jax.jit(shard_async_oracle)
+
+    def async_oracle_pass(self, phi: jnp.ndarray, perm: jnp.ndarray):
+        """Dispatch the next iteration's exact oracles at stale ``phi``.
+
+        Returns ``(ids, planes)`` without blocking; the results fold in
+        at the start of the *next* cache program.
+        """
+        if self._async_oracle_prog is None:
+            self._async_oracle_prog = self._build_async_oracle()
+        self.ledger.dispatched()
+        return self._async_oracle_prog(self.problem.data, phi, perm)
+
+    def _build_async_cache(self, run_all: bool, ttl: int, scatter: str):
+        """The cache half: eviction, the monotone fold-in of the pending
+        oracle results (GSPMD-level, like the tau epoch's fold), and the
+        shard_map'd approximate batch — same per-block eviction
+        accounting as the fused outer program, same one-setup-psum +
+        one-psum-per-pass collective contract (the fold itself issues no
+        explicit collective)."""
+        multi = self._multi_stage(run_all)
+        lam, policies, n = self.lam, self.policies, self.problem.n
+
+        def shard_async_cache(mp: MPState, pending, perms,
+                              clock: SlopeClock):
+            sz0 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
+            mp = mpbcfw.begin_iteration(
+                mp, ttl,
+                eviction=None if policies is None else policies.eviction)
+            sz1 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
+            clock = clock._replace(f0=dual_value(mp.inner.phi, lam))
+            w = weights_of(mp.inner.phi, lam)
+            fbp, fbs, _ = distributed.fallback_planes(mp.cache,
+                                                      pending.ids, w)
+            mp = distributed.fold_planes(
+                mp, pending.ids, pending.planes, fbp, fbs, pending.done,
+                lam, live=pending.live, scatter=scatter)
+            sz2 = jnp.sum(mp.cache.valid, axis=1).astype(jnp.int32)
+            # The fold inserts one plane per *arrived* block (fallbacks
+            # only refresh activity); nothing folds while the pending
+            # buffer is dead (iteration 0).
+            inserted = jnp.where(
+                pending.live,
+                jnp.zeros((n,), jnp.int32).at[pending.ids].add(
+                    pending.done.astype(jnp.int32)),
+                jnp.zeros((n,), jnp.int32))
+            blk_evt = jnp.stack([sz0 - sz1, sz1 + inserted - sz2], axis=1)
+            return multi(mp, perms, clock, blk_evt)
+
+        return jax.jit(shard_async_cache)
+
+    def async_cache_pass(self, mp: MPState, pending, perms,
+                         clock: SlopeClock, *, ttl: int,
+                         run_all: bool = False,
+                         scatter: str = "per-elem"):
+        """Dispatch one cache-program iteration (no blocking)."""
+        cache_key = (bool(run_all), int(ttl), str(scatter))
+        if cache_key not in self._async_cache_progs:
+            self._async_cache_progs[cache_key] = self._build_async_cache(
+                run_all, ttl, scatter)
+        self.ledger.dispatched()
+        return self._async_cache_progs[cache_key](mp, pending, perms,
+                                                  clock)
 
 
 # -- module-level API (engine cache) ----------------------------------------

@@ -276,3 +276,64 @@ def test_to_chrome_trace_shapes():
     assert {"X", "i", "C", "M"} <= phs
     span = next(e for e in events if e["ph"] == "X")
     assert span["dur"] == pytest.approx(1e6)  # seconds -> microseconds
+
+
+# ---------------------------------------------------------------------------
+# Phase-cost calibration from measured program-boundary segments
+# (wall mode: overflow continuations identify the per-plane cost
+# directly; the exact cost is the mean first-segment remainder)
+
+
+def test_observe_phases_calibrates_from_continuations(tmp_path):
+    with RunRecorder(str(tmp_path / "cal.jsonl")) as rec:
+        # first segment = exact(2.0) + 8 planes * 0.25; two approx-only
+        # continuations at exactly 0.25 per plane
+        fit = rec.observe_phases([(8, 4.0), (4, 1.0), (6, 1.5)])
+        assert fit is not None
+        exact, plane = fit
+        assert plane == pytest.approx(0.25)
+        assert exact == pytest.approx(4.0 - 8 * 0.25)
+
+
+def test_observe_phases_least_squares_without_continuations(tmp_path):
+    with RunRecorder(str(tmp_path / "cal.jsonl")) as rec:
+        # no overflow continuations: identifiable once the first-segment
+        # plane counts vary (duration = 1.5 + 0.1 * planes)
+        assert rec.observe_phases([(10, 2.5)]) is None
+        fit = rec.observe_phases([(30, 4.5)])
+        assert fit is not None
+        exact, plane = fit
+        assert exact == pytest.approx(1.5)
+        assert plane == pytest.approx(0.1)
+
+
+def test_observe_phases_keeps_last_fit_when_unidentifiable(tmp_path):
+    with RunRecorder(str(tmp_path / "cal.jsonl")) as rec:
+        good = rec.observe_phases([(8, 4.0), (4, 1.0)])
+        assert good == (pytest.approx(2.0), pytest.approx(0.25))
+        # a degenerate iteration (zero-length continuation, same first-
+        # segment shape) must not clobber the calibration
+        assert rec.observe_phases([(8, 4.0), (4, 0.0)]) == good
+
+
+def test_wall_mode_solver_adopts_recorder_calibration(tmp_path,
+                                                      multiclass_problem):
+    """Wall mode + recorder: the Solver's device-rule cost constants come
+    from the recorder's measured-segment fit (not the pro-rata
+    regression), and the recorder's phase spans use the same split."""
+    prob = multiclass_problem
+    path = tmp_path / "wall.jsonl"
+    with RunRecorder(str(path)) as rec:
+        # approx_batch < max_approx_passes forces overflow continuations
+        # — the approx-only segments the calibration measures directly
+        solver = Solver(prob, _cfg("mpbcfw", cost_model=None,
+                                   max_iters=4, approx_batch=2,
+                                   max_approx_passes=8), recorder=rec)
+        solver.run()
+        fit = rec._phase_fit
+        if fit is not None:
+            assert (solver._est_exact, solver._est_plane) == fit
+    run = load_run(str(path))
+    assert any(sp["name"] == "exact_pass" for sp in run["spans"])
+    assert any(sp.get("measured") for sp in run["spans"]
+               if sp["name"] == "approx_passes") or fit is None
